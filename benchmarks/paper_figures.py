@@ -1,0 +1,334 @@
+"""One benchmark per paper table/figure.
+
+Each function returns a list of (name, us_per_call, derived) rows where
+``us_per_call`` is a real wall-clock measurement of the bench computation
+and ``derived`` is the paper-comparable quantity.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def table1_model_configs() -> List[Row]:
+    """Table I: SOTA MoE configurations — resource-model parameter counts
+    vs published totals."""
+    from repro.configs.piper_paper import TABLE_I
+    from repro.core.resource_model import ModelShape
+
+    rows: List[Row] = []
+    for name, cfg in TABLE_I.items():
+        def calc(cfg=cfg):
+            m = ModelShape(
+                d_model=cfg["d_model"], L=cfg["L"], L_moe=cfg["L"],
+                H=max(cfg["d_model"] // 128, 1), d_h=128, E=cfg["E"],
+                E_s=cfg["Es"], k=cfg["k"], n_mat=3,
+                d_ffn_moe=cfg["d_ffn"], d_ffn_dense=0, vocab=102400,
+            )
+            return m.total_params() / 1e9
+        us, total = _timed(calc)
+        rows.append(
+            (f"table1.{name}", us,
+             f"model={total:.0f}B published={cfg['total_b']}B "
+             f"ratio={total/cfg['total_b']:.2f}")
+        )
+    return rows
+
+
+def table3_memory_model() -> List[Row]:
+    """Table III / Eq 1-4: analytical memory vs XLA-measured memory of the
+    compiled train step for a reduced config (empirical validation)."""
+    import jax
+
+    from repro import training
+    from repro.configs import get_arch
+    from repro.core import resource_model as rm
+    from repro.models.model import LanguageModel
+    from repro.optim import OptimizerConfig
+    from repro.sharding import single_device_plan
+
+    arch = get_arch("granite-moe-3b-a800m").reduced()
+    plan = single_device_plan(arch)
+    b, s = 2, 64
+
+    def run():
+        with plan.mesh:
+            lm = LanguageModel(arch, plan)
+            step = training.make_train_step(lm, OptimizerConfig())
+            state = training.abstract_state(lm)
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, s), "int32"),
+                "labels": jax.ShapeDtypeStruct((b, s), "int32"),
+            }
+            compiled = jax.jit(step, donate_argnums=(0,)).lower(
+                state, batch
+            ).compile()
+            ma = compiled.memory_analysis()
+            measured = ma.argument_size_in_bytes + ma.temp_size_in_bytes
+        m = rm.ModelShape.from_arch(arch)
+        t = rm.TrainSetup(
+            b=b, s=s, EP=1, DP=1, bytes_per_param=12, zero="none",
+            framework_overhead=0.0, checkpoint_activations=True,
+        )
+        model = rm.memory_edp(m, t)
+        return measured, model
+
+    us, (measured, model) = _timed(run)
+    return [
+        ("table3.granite_reduced", us,
+         f"xla={measured/1e6:.0f}MB eq2={model/1e6:.0f}MB "
+         f"ratio={measured/model:.2f}")
+    ]
+
+
+def table4_migration_cost() -> List[Row]:
+    """Table IV: worst-case expert-migration message size / latency."""
+    from repro.core.migration import migration_cost
+
+    paper = {
+        "Switch-Base": (128, 768, 2048, 1.21, 24.2),
+        "Mixtral-8x7B": (8, 4096, 14336, 2.63, 52.6),
+        "Mixtral-8x22B": (8, 6144, 16384, 4.50, 90.0),
+        "Grok-1": (8, 6144, 32768, 9.00, 180.0),
+        "GLaM-1.2T": (64, 8192, 32768, 102.88, 2057.6),
+        "DeepSeek-V2": (160, 5120, 1536, 7.04, 140.8),
+        "DeepSeek-V3": (256, 7168, 2048, 21.00, 420.0),
+    }
+    rows: List[Row] = []
+    GIB = 2**30
+    for name, (E, dm, df, gb_paper, ms_paper) in paper.items():
+        us, (size, _) = _timed(lambda E=E, dm=dm, df=df: migration_cost(E, dm, df))
+        gib = size / GIB
+        ms = gib / 50 * 1e3  # the paper's GiB/50 latency convention
+        rows.append(
+            (f"table4.{name}", us,
+             f"size={gib:.2f}GiB paper={gb_paper} lat={ms:.1f}ms "
+             f"paper_ms={ms_paper}")
+        )
+    return rows
+
+
+def fig3_attention_microbench() -> List[Row]:
+    from repro.core.microbench import attention_curve
+
+    us, rows = _timed(lambda: attention_curve(seq_lens=(128, 256, 512)))
+    return [
+        (f"fig3.attn_s{r['seq']}", r["seconds"] * 1e6,
+         f"gflops={r['gflops']:.1f}")
+        for r in rows
+    ]
+
+
+def fig4_expert_gemm_microbench() -> List[Row]:
+    """Fig 4: skinny-GEMM efficiency collapse as d_ffn shrinks."""
+    from repro.core.microbench import expert_gemm_curve
+
+    us, rows = _timed(lambda: expert_gemm_curve(
+        ffn_dims=(32, 128, 512, 2048)))
+    return [
+        (f"fig4.gemm_dffn{r['d_ffn']}", r["seconds"] * 1e6,
+         f"gflops={r['gflops']:.1f} eff={r['efficiency']:.2f}")
+        for r in rows
+    ]
+
+
+def fig5_a2a_bandwidth() -> List[Row]:
+    """Fig 5: modeled all-to-all bandwidth vs group size, Frontier
+    constants (the measured-host variant runs in the multi-device tests)."""
+    from repro.core.comm_model import A2ACase, effective_a2a_bandwidth
+    from repro.core.platform import FRONTIER
+
+    rows: List[Row] = []
+    for ranks in (2, 8, 16, 32, 64):
+        us, bw = _timed(
+            lambda r=ranks: effective_a2a_bandwidth(
+                A2ACase(r, 2**20), FRONTIER, "flat"
+            )
+        )
+        rows.append((f"fig5.flat_r{ranks}", us, f"GB/s={bw/1e9:.1f}"))
+    return rows
+
+
+def fig8_halo_vs_flat() -> List[Row]:
+    """Fig 8: HALO speedup over flat a2a across node counts x msg sizes —
+    paper band: 1.1x-9x at >=16 nodes."""
+    from repro.core.comm_model import A2ACase, speedup
+    from repro.core.platform import FRONTIER
+
+    rows: List[Row] = []
+    for nodes in (2, 8, 16, 32, 64):
+        for msg in (2**16, 2**20, 2**23):
+            case = A2ACase(nodes * FRONTIER.chips_per_node, msg)
+            us, sp = _timed(lambda c=case: speedup(c, FRONTIER))
+            rows.append(
+                (f"fig8.n{nodes}_m{msg}", us, f"halo_speedup={sp:.2f}x")
+            )
+    return rows
+
+
+def fig10_strategy_search() -> List[Row]:
+    """Fig 10: feasible training strategies for the ~600B model by node
+    count (paper: trainable from 64 nodes)."""
+    from repro.configs import get_arch
+    from repro.core import planner
+    from repro.core.platform import FRONTIER
+
+    arch = get_arch("piper-super-545b")
+    rows: List[Row] = []
+    for chips in (64, 128, 256, 512, 1024):
+        us, strategies = _timed(
+            lambda c=chips: planner.valid_strategies(
+                arch, FRONTIER, c, batch=256, seq=4096
+            )
+        )
+        best = planner.rank_strategies(strategies)
+        mem = best[0].estimate.mem_stage0 / 1e9 if best else float("nan")
+        rows.append(
+            (f"fig10.chips{chips}", us,
+             f"feasible={len(strategies)} best_mem={mem:.1f}GB")
+        )
+    return rows
+
+
+def fig12_sota_throughput() -> List[Row]:
+    """Fig 12: Piper-planned MFU for SOTA models on Frontier (paper band:
+    20-50%, coarse experts > fine-grained)."""
+    from repro.configs import get_arch
+    from repro.core import planner
+    from repro.core.platform import FRONTIER
+
+    models = {
+        "grok-1-314b": 512,
+        "piper-super-545b": 512,
+        "piper-m10b-e16": 64,
+        "granite-moe-3b-a800m": 64,
+    }
+    rows: List[Row] = []
+    for name, chips in models.items():
+        us, best = _timed(
+            lambda n=name, c=chips: planner.best_strategy(
+                get_arch(n), FRONTIER, c, batch=256, seq=4096,
+                imbalance=1.3,
+            )
+        )
+        mfu = best.estimate.mfu if best else float("nan")
+        rows.append((f"fig12.{name}", us, f"mfu={mfu*100:.1f}%"))
+    return rows
+
+
+def fig13_xmoe_comparison() -> List[Row]:
+    """Fig 13: Piper vs X-MoE.  X-MoE published 5.23% MFU for its 545B
+    'super' model; the paper claims 2-3.6x Piper speedup."""
+    from repro.configs import get_arch
+    from repro.core import planner
+    from repro.core.platform import FRONTIER
+
+    XMOE_MFU = 0.0523
+    us, best = _timed(
+        lambda: planner.best_strategy(
+            get_arch("piper-super-545b"), FRONTIER, 512, batch=256, seq=4096,
+            imbalance=1.5,
+        )
+    )
+    mfu = best.estimate.mfu if best else float("nan")
+    return [
+        ("fig13.piper_super_545b", us,
+         f"piper_mfu={mfu*100:.1f}% xmoe=5.23% speedup={mfu/XMOE_MFU:.1f}x")
+    ]
+
+
+def fig14_trillion_scaling() -> List[Row]:
+    """Fig 14: M10B expert weak scaling — paper: 862B @512 GPUs = 39.4
+    TFLOPs/GPU, 1.7T @1024 = 33 TFLOPs/GPU, 73% scaling efficiency."""
+    from repro.configs import get_arch
+    from repro.core import planner
+    from repro.core.platform import FRONTIER
+
+    pts = {
+        "piper-m10b-e16": 64,
+        "piper-m10b-e128": 512,
+        "piper-m10b-e256": 1024,
+    }
+    rows: List[Row] = []
+    tflops = {}
+    for name, chips in pts.items():
+        us, best = _timed(
+            lambda n=name, c=chips: planner.best_strategy(
+                get_arch(n), FRONTIER, c, batch=512, seq=4096,
+                imbalance=1.3,
+            )
+        )
+        if best:
+            e = best.estimate
+            from repro.core import resource_model as rm
+
+            shape = rm.ModelShape.from_arch(get_arch(name))
+            t = rm.TrainSetup(b=512, s=4096, PP=best.PP, EP=best.EP,
+                              DP=best.DP, alpha=best.alpha)
+            tf = rm.flops_per_step(shape, t) / e.t_step / chips / 1e12
+            tflops[name] = tf
+            rows.append(
+                (f"fig14.{name}", us,
+                 f"chips={chips} tflops_per_gpu={tf:.1f} mfu={e.mfu*100:.1f}%")
+            )
+    if "piper-m10b-e16" in tflops and "piper-m10b-e256" in tflops:
+        eff = tflops["piper-m10b-e256"] / tflops["piper-m10b-e16"]
+        rows.append(
+            ("fig14.weak_scaling_efficiency", 0.0,
+             f"eff={eff*100:.0f}% paper=73%")
+        )
+    return rows
+
+
+def schedules() -> List[Row]:
+    """GPipe vs 1F1B (Eq 3-5): peak activations + bubble from the
+    discrete-event simulator."""
+    from repro.core import schedule_sim as ss
+
+    rows: List[Row] = []
+    for PP, M in ((4, 8), (8, 32)):
+        us, g = _timed(lambda: ss.gpipe(PP, M))
+        rows.append(
+            (f"sched.gpipe_pp{PP}_m{M}", us,
+             f"peak={max(g.peak_in_flight)} bubble={g.bubble_fraction:.3f}")
+        )
+        us, f = _timed(lambda: ss.one_f_one_b(PP, M))
+        rows.append(
+            (f"sched.1f1b_pp{PP}_m{M}", us,
+             f"peak={max(f.peak_in_flight)} bubble={f.bubble_fraction:.3f}")
+        )
+    return rows
+
+
+def kernels() -> List[Row]:
+    """Pallas kernels in interpret mode vs jnp oracle (call latency on this
+    host; TPU perf comes from the roofline analysis)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.moe_gemm import ops as mm_ops, ref as mm_ref
+
+    E, M, K, N = 8, 128, 256, 256
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (E, M, K), jnp.float32)
+    w = jax.random.normal(key, (E, K, N), jnp.float32)
+    f_ref = jax.jit(mm_ref.grouped_matmul)
+    jax.block_until_ready(f_ref(x, w))
+    t0 = time.perf_counter()
+    for _ in range(10):
+        out = f_ref(x, w)
+    jax.block_until_ready(out)
+    us_ref = (time.perf_counter() - t0) / 10 * 1e6
+    gf = 2 * E * M * K * N / (us_ref / 1e6) / 1e9
+    return [
+        ("kernels.moe_gemm_xla_ref", us_ref, f"gflops={gf:.1f}"),
+    ]

@@ -1,0 +1,50 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Run:
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig8]
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import paper_figures as pf
+
+    benches = [
+        pf.table1_model_configs,
+        pf.table3_memory_model,
+        pf.table4_migration_cost,
+        pf.fig3_attention_microbench,
+        pf.fig4_expert_gemm_microbench,
+        pf.fig5_a2a_bandwidth,
+        pf.fig8_halo_vs_flat,
+        pf.fig10_strategy_search,
+        pf.fig12_sota_throughput,
+        pf.fig13_xmoe_comparison,
+        pf.fig14_trillion_scaling,
+        pf.schedules,
+        pf.kernels,
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        if args.only and args.only not in bench.__name__:
+            continue
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{bench.__name__},NaN,ERROR: {type(e).__name__}: {e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Piper strategy search (the paper's §III-C/IV-C workflow): given a model
+and a platform, enumerate memory-feasible (PP, EP, DP, policy) strategies
+and rank them by estimated MFU.
+
+    PYTHONPATH=src python examples/plan_search.py --arch grok-1-314b \
+        --platform tpu-v5e --chips 256
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_arch, list_archs
+from repro.core import planner
+from repro.core.platform import PLATFORMS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="piper-super-545b")
+    ap.add_argument("--platform", default="frontier-mi250x",
+                    choices=sorted(PLATFORMS))
+    ap.add_argument("--chips", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--zero", default="dp", choices=["none", "dp", "world"])
+    ap.add_argument("--top", type=int, default=10)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    platform = PLATFORMS[args.platform]
+    print(f"{arch.name}: {arch.total_params()/1e9:.0f}B total / "
+          f"{arch.active_params()/1e9:.0f}B active")
+    print(f"platform: {platform.name} x{args.chips} chips "
+          f"(HBM {platform.hbm_bytes/1e9:.0f}GB, fast domain "
+          f"{platform.fast_domain})")
+
+    strategies = planner.valid_strategies(
+        arch, platform, args.chips, batch=args.batch, seq=args.seq,
+        zero=args.zero,
+    )
+    print(f"{len(strategies)} feasible strategies (Eq 7-11); top "
+          f"{args.top} by estimated MFU (Eq 12):\n")
+    for s in planner.rank_strategies(strategies)[: args.top]:
+        print("  " + s.describe())
+    if not strategies:
+        print("  NONE — increase chips, enable ZeRO (--zero world), or "
+              "reduce batch.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,266 @@
+"""Architecture & shape configuration system.
+
+Every assigned architecture is expressed as an :class:`ArchConfig` — a frozen,
+hashable description of the model family, the per-layer block pattern, and the
+MoE / SSM / attention hyper-parameters.  The model substrate
+(``repro.models``) consumes these configs; the Piper planner
+(``repro.core.planner``) consumes the same configs for resource modeling, so
+there is a single source of truth for "what the model is".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoECfg:
+    """Mixture-of-Experts FFN sub-layer configuration."""
+
+    num_experts: int
+    top_k: int
+    d_ff: int  # intermediate dim of EACH expert (paper: d_ffn^MoE)
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01  # Switch-style load balancing loss
+    z_loss_coef: float = 1e-3  # router z-loss
+    router_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class SSMCfg:
+    """Mamba2 (SSD — state-space duality) sub-layer configuration."""
+
+    state_size: int = 128  # N (dstate)
+    head_dim: int = 64  # P
+    expand: int = 2  # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk_size: int = 256
+    n_groups: int = 1  # B/C groups (GVA)
+
+    def num_heads(self, d_model: int) -> int:
+        return (self.expand * d_model) // self.head_dim
+
+
+# Per-layer block description: (mixer, ffn)
+#   mixer: "attn" | "attn_local" | "mamba"
+#   ffn:   "dense" | "moe" | "none"
+Block = Tuple[str, str]
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """A complete architecture description.
+
+    ``block_pattern`` is tiled to cover ``num_layers`` — e.g. gemma2's
+    alternating local/global attention is ``(("attn_local","dense"),
+    ("attn","dense"))`` and jamba's 1:7 attention:mamba interleave with MoE
+    every other layer is an 8-entry pattern.
+    """
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int  # dense FFN intermediate dim (0 if no dense FFN layers)
+    vocab_size: int
+    block_pattern: Tuple[Block, ...]
+    moe: Optional[MoECfg] = None
+    ssm: Optional[SSMCfg] = None
+    # attention details
+    rope_type: str = "rope"  # rope | mrope | none
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None  # window for "attn_local" mixers
+    attn_logit_softcap: Optional[float] = None  # gemma2: 50.0
+    final_logit_softcap: Optional[float] = None  # gemma2: 30.0
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False  # gemma2: x *= sqrt(d_model)
+    norm_eps: float = 1e-6
+    # FFN form: "swiglu" (3 weight matrices — paper Table II n_mat=3) or
+    # "gelu" (2 matrices — the paper's M10B base implies n_mat=2).
+    ffn_activation: str = "swiglu"
+    # modality frontend stub: None | "audio_frames" | "vision_patches".
+    # Non-None => input_specs() provides precomputed (b, s, d_model)
+    # embeddings instead of token ids (backbone-only scope per assignment).
+    frontend: Optional[str] = None
+    # True if attention cost is sub-quadratic in context (SSM / hybrid with
+    # bounded-window attn) — gates the long_500k shape.
+    subquadratic: bool = False
+    source: str = ""  # provenance note
+
+    # -- derived ------------------------------------------------------------
+
+    def __post_init__(self):
+        assert self.num_heads % self.num_kv_heads == 0, self.name
+        assert self.num_layers % len(self.block_pattern) == 0, (
+            f"{self.name}: num_layers={self.num_layers} not a multiple of "
+            f"pattern period {len(self.block_pattern)}"
+        )
+
+    @property
+    def layers(self) -> Tuple[Block, ...]:
+        reps = self.num_layers // len(self.block_pattern)
+        return self.block_pattern * reps
+
+    @property
+    def pattern_period(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def num_moe_layers(self) -> int:
+        return sum(1 for _, f in self.layers if f == "moe")
+
+    @property
+    def num_attn_layers(self) -> int:
+        return sum(1 for m, _ in self.layers if m.startswith("attn"))
+
+    @property
+    def num_mamba_layers(self) -> int:
+        return sum(1 for m, _ in self.layers if m == "mamba")
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    # -- parameter accounting (exact, matches models/model.py init) --------
+
+    def attn_params(self) -> int:
+        d, hq, hkv = self.d_model, self.q_dim, self.kv_dim
+        return d * hq + 2 * d * hkv + hq * d  # Wq, Wk, Wv, Wo
+
+    @property
+    def n_mat(self) -> int:
+        """Weight matrices per FFN (paper Table II: 3 for SwiGLU)."""
+        return 3 if self.ffn_activation == "swiglu" else 2
+
+    def dense_ffn_params(self) -> int:
+        return self.n_mat * self.d_model * self.d_ff if self.d_ff else 0
+
+    def moe_ffn_params(self) -> int:
+        assert self.moe is not None
+        m = self.moe
+        expert = self.n_mat * self.d_model * m.d_ff
+        router = self.d_model * m.num_experts
+        shared = m.num_shared_experts * expert
+        return m.num_experts * expert + shared + router
+
+    def mamba_params(self) -> int:
+        assert self.ssm is not None
+        s = self.ssm
+        d_in = s.expand * self.d_model
+        nh = s.num_heads(self.d_model)
+        conv_dim = d_in + 2 * s.n_groups * s.state_size
+        in_proj = self.d_model * (2 * d_in + 2 * s.n_groups * s.state_size + nh)
+        conv = conv_dim * s.conv_width + conv_dim
+        extras = nh * 3  # A_log, D, dt_bias
+        norm = d_in
+        out_proj = d_in * self.d_model
+        return in_proj + conv + extras + norm + out_proj
+
+    def layer_params(self, block: Block) -> int:
+        mixer, ffn = block
+        p = 2 * self.d_model  # two RMSNorm scales
+        if mixer.startswith("attn"):
+            p += self.attn_params()
+        elif mixer == "mamba":
+            p += self.mamba_params()
+        if ffn == "dense":
+            p += self.dense_ffn_params()
+        elif ffn == "moe":
+            p += self.moe_ffn_params()
+        elif ffn == "none":
+            p -= self.d_model  # only one norm when there is no FFN sub-layer
+        return p
+
+    def total_params(self) -> int:
+        body = sum(self.layer_params(b) for b in self.layers)
+        embed = self.vocab_size * self.d_model
+        head = 0 if self.tie_embeddings else self.vocab_size * self.d_model
+        return body + embed + head + self.d_model  # final norm
+
+    def active_params(self) -> int:
+        """Parameters touched per token (MoE: top-k + shared experts only)."""
+        total = self.total_params()
+        if self.moe is None:
+            return total
+        m = self.moe
+        expert = self.n_mat * self.d_model * m.d_ff
+        inactive = (m.num_experts - m.top_k) * expert * self.num_moe_layers
+        return total - inactive
+
+    # -- utilities ----------------------------------------------------------
+
+    def padded_vocab(self, multiple: int = 256) -> int:
+        v = self.vocab_size
+        return ((v + multiple - 1) // multiple) * multiple
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ArchConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        period = len(self.block_pattern)
+        n_layers = period * min(2, self.num_layers // period)
+        kw = dict(
+            num_layers=max(n_layers, period),
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=2,
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=512,
+            sliding_window=32 if self.sliding_window else None,
+        )
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe,
+                num_experts=min(self.moe.num_experts, 8),
+                top_k=min(self.moe.top_k, 2),
+                d_ff=64,
+            )
+        if self.ssm is not None:
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, state_size=16, head_dim=16, chunk_size=32
+            )
+        return self.replace(name=self.name + "-reduced", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned shape pool for the LM family)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def shape_applicable(arch: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """long_500k requires sub-quadratic attention (SSM/hybrid)."""
+    if shape.name == "long_500k" and not arch.subquadratic:
+        return False, "full-attention arch: 500k dense-KV decode excluded"
+    return True, ""

@@ -1,0 +1,22 @@
+"""deepseek-7b — dense llama-architecture LM.
+
+[arXiv:2401.02954; hf]  30L d_model=4096 32H (GQA kv=32 i.e. MHA)
+d_ff=11008, vocab=102400.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-7b",
+    family="dense",
+    num_layers=30,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=102400,
+    block_pattern=(("attn", "dense"),),
+    rope_theta=10_000.0,
+    source="arXiv:2401.02954 (DeepSeek LLM 7B)",
+)

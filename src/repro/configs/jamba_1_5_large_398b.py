@@ -1,0 +1,41 @@
+"""jamba-1.5-large-398b — hybrid Mamba+attention MoE.
+
+[arXiv:2403.19887; hf]  72L d_model=8192 64H (GQA kv=8) d_ff=24576,
+vocab=65536, MoE 16 experts top-2.  Jamba block structure: attention at 1 of
+every 8 mixers (1:7 interleave), MoE replacing the FFN on every other layer.
+Adaptation note (DESIGN.md SS2): SSM mixers use the Mamba2/SSD formulation
+(shared with mamba2-370m) rather than Mamba-1 selective scan — TPU-native
+chunked matmul form, same asymptotics.
+"""
+
+from repro.configs.base import ArchConfig, MoECfg, SSMCfg
+
+# Period-8 block: mixers m m m m a m m m ; MoE on odd layers (e=2).
+_PATTERN = (
+    ("mamba", "dense"),
+    ("mamba", "moe"),
+    ("mamba", "dense"),
+    ("mamba", "moe"),
+    ("attn", "dense"),
+    ("mamba", "moe"),
+    ("mamba", "dense"),
+    ("mamba", "moe"),
+)
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    block_pattern=_PATTERN,
+    moe=MoECfg(num_experts=16, top_k=2, d_ff=24576),
+    ssm=SSMCfg(state_size=128, head_dim=64, expand=2, conv_width=4),
+    rope_type="none",  # Jamba uses no positional encoding (Mamba provides it)
+    subquadratic=True,  # 1:7 attn:mamba — attention KV is 1/8 of layers
+    source="arXiv:2403.19887 (Jamba) + 1.5-large sizing",
+)

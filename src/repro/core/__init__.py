@@ -1,0 +1,2 @@
+"""Piper core: resource modeling, planning, HALO all-to-all, expert
+migration, pipelined execution — the paper's contributions."""

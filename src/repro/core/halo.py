@@ -1,0 +1,119 @@
+"""HALO: Hierarchical Affinity-aware Locality-Optimized all-to-all (paper §V).
+
+TPU adaptation (DESIGN.md §2).  The paper's Alg 1 decomposes a flat
+all-to-all over N = nodes x R ranks into
+
+    Phase I   intra-node a2a of local rows            (fast links)
+    Phase II  batched inter-node exchange, NIC-affine (slow links)
+    Phase III intra-node redistribution of Phase-II data
+
+with the dependency structure  Phase I ∥ (Phase II -> Phase III)  (Eq 13).
+
+On a TPU torus there are no NICs; the analogue of "saturate all four NICs
+concurrently" is *axis concurrency*: factoring the EP group into an inner
+("lane", ICI-adjacent — our "tp-minor" packing makes lanes single-hop) and an
+outer ("node") sub-group makes XLA emit two smaller collectives on disjoint
+rank groups, which the scheduler can drive over different torus dimensions
+simultaneously, instead of one long-radix collective serialized around the
+ring.  When an expert-parallel group ever spans the inter-pod DCI axis, the
+same decomposition confines the slow-axis traffic to the aggregated Phase-II
+messages — exactly the paper's Dragonfly argument.
+
+Implementation notes:
+* Phase I is folded into the Phase-II group as the self-node block (a local
+  copy inside the collective); semantically identical, one code path.  The
+  Phase I ∥ II overlap materializes as the two collectives being
+  data-independent in the lowered HLO.
+* The inverse is the same function (a2a is an involution under this
+  row<->rank layout), so dispatch and combine both use it.
+
+The pure-jnp oracle is the flat ``lax.all_to_all``; equality is property-
+tested in tests/test_halo.py on multi-device host meshes.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding import MeshPlan
+
+
+def _pick_inner(ep: int, preferred: int = 4) -> int:
+    """Largest factor of ep that is <= preferred (the intra-host/ICI-adjacent
+    group size)."""
+    g = 1
+    for cand in range(2, min(preferred, ep) + 1):
+        if ep % cand == 0:
+            g = cand
+    return g
+
+
+def lane_groups(ep: int, g1: int) -> List[List[int]]:
+    """Contiguous intra-node groups: [[0..g1-1], [g1..2g1-1], ...]."""
+    return [[n * g1 + l for l in range(g1)] for n in range(ep // g1)]
+
+
+def node_groups(ep: int, g1: int) -> List[List[int]]:
+    """Strided lane-affine inter-node groups (the paper's NIC affinity:
+    lane l of every node forms one communicator)."""
+    return [[m * g1 + l for m in range(ep // g1)] for l in range(g1)]
+
+
+def hierarchical_all_to_all(
+    x: jax.Array,  # (ep, rows, d) per-device send buffer (inside shard_map)
+    plan: MeshPlan,
+    g1: Optional[int] = None,
+    axis: str = "ep",
+) -> jax.Array:
+    """HALO all-to-all over the ``axis`` mesh axis.
+
+    Equivalent to ``lax.all_to_all(x, axis, 0, 0, tiled=True)`` — returns,
+    at block i, the block that source rank i addressed to this rank.
+    """
+    ep = plan.mesh.shape[axis]
+    if ep == 1:
+        return x
+    g1 = g1 if g1 is not None else _pick_inner(ep)
+    if g1 <= 1 or g1 >= ep:
+        return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)
+    M = ep // g1
+    rows, d = x.shape[1], x.shape[2]
+
+    # Phase II (+ folded Phase I): inter-node exchange of node-aggregated
+    # blocks over the lane-affine strided groups.
+    xb = x.reshape(M, g1 * rows, d)
+    recv = lax.all_to_all(
+        xb,
+        axis,
+        split_axis=0,
+        concat_axis=0,
+        axis_index_groups=node_groups(ep, g1),
+        tiled=True,
+    )
+    # recv[(m, l', r)] = source (m, my_lane)'s rows for my node's lane l'.
+    recv = recv.reshape(M, g1, rows, d).transpose(1, 0, 2, 3)
+    recv = recv.reshape(g1, M * rows, d)
+
+    # Phase III: intra-node redistribution over contiguous lane groups.
+    out = lax.all_to_all(
+        recv,
+        axis,
+        split_axis=0,
+        concat_axis=0,
+        axis_index_groups=lane_groups(ep, g1),
+        tiled=True,
+    )
+    # out[(l, m, r)] = rows from source rank (m, l); reorder to rank order.
+    out = out.reshape(g1, M, rows, d).transpose(1, 0, 2, 3)
+    return out.reshape(ep, rows, d)
+
+
+def flat_all_to_all(x: jax.Array, axis: str = "ep") -> jax.Array:
+    """The oracle: vendor-style single flat collective."""
+    if x.shape[0] == 1:
+        return x
+    return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)

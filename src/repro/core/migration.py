@@ -1,0 +1,191 @@
+"""Expert migration for device-level load balancing (paper §VI).
+
+Components:
+
+* :class:`LoadStats` — the extended-router bookkeeping: an EMA of per-expert
+  token counts per MoE layer (fed from the training metrics'
+  ``expert_load``).
+* :func:`hill_climb_rebalance` — the paper's Algorithm 2: swap-based minimal
+  rebalancing of expert->group assignment by hill climbing on the max-min
+  group-load gap.
+* :func:`migration_plan` / :func:`apply_migration` — the executor: expert
+  weights (and Adam moments) are physically permuted across the EP groups
+  with a single gather over the expert dim, which GSPMD lowers to the
+  intra-group all-to-all the paper describes; the routing table
+  (``assignment``) is updated so the model function is preserved exactly.
+* :func:`migration_cost` — Table IV: worst-case per-GPU message size
+  ``48 * E * d_model * d_ffn / G`` bytes and its latency at the measured
+  intra-node bandwidth.
+
+The migration runs *between* steps (the paper's "external scheduler /
+intermittent interrupt"), so it composes with any training loop.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Load statistics (extended router, paper §VI-A)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LoadStats:
+    """EMA of per-(layer, expert) token loads."""
+
+    num_layers: int
+    num_experts: int
+    decay: float = 0.9
+    ema: np.ndarray = field(default=None)  # (num_layers, E)
+    steps: int = 0
+
+    def __post_init__(self):
+        if self.ema is None:
+            self.ema = np.zeros((self.num_layers, self.num_experts))
+
+    def update(self, loads: np.ndarray):
+        """loads: (num_layers, E) token counts for one step (logical ids)."""
+        loads = np.asarray(loads, dtype=np.float64).reshape(self.ema.shape)
+        self.ema = self.decay * self.ema + (1 - self.decay) * loads
+        self.steps += 1
+
+    def group_loads(self, assignment: np.ndarray, ep: int) -> np.ndarray:
+        """(num_layers, ep) total load per physical EP group."""
+        E = self.num_experts
+        e_l = E // ep
+        groups = np.asarray(assignment) // e_l  # (num_layers, E)
+        out = np.zeros((self.num_layers, ep))
+        for layer in range(self.num_layers):
+            np.add.at(out[layer], groups[layer], self.ema[layer])
+        return out
+
+    def imbalance(self, assignment: np.ndarray, ep: int) -> float:
+        """max/mean group load over layers — the migration trigger metric."""
+        g = self.group_loads(assignment, ep)
+        mean = g.mean(axis=1) + 1e-9
+        return float((g.max(axis=1) / mean).max())
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: hill-climbing swap-based minimal rebalancing
+# ---------------------------------------------------------------------------
+
+
+def hill_climb_rebalance(
+    groups: List[List[Tuple[int, float]]],
+    max_iters: int = 100,
+    min_gain: float = 0.0,
+) -> Tuple[List[List[Tuple[int, float]]], int]:
+    """Paper Algorithm 2.
+
+    groups: K lists of (expert_id, load).  Returns (rebalanced groups, swap
+    count).  Each iteration swaps one expert between the heaviest and
+    lightest groups if it strictly reduces their load gap by > min_gain.
+    """
+    groups = [list(g) for g in groups]
+    swaps = 0
+    for _ in range(max_iters):
+        sums = [sum(l for _, l in g) for g in groups]
+        k_hi = int(np.argmax(sums))
+        k_lo = int(np.argmin(sums))
+        delta = sums[k_hi] - sums[k_lo]
+        if delta <= 0:
+            break
+        best_gain, best = min_gain, None
+        for i, (_, l1) in enumerate(groups[k_hi]):
+            for j, (_, l2) in enumerate(groups[k_lo]):
+                new_delta = abs(
+                    (sums[k_hi] - l1 + l2) - (sums[k_lo] - l2 + l1)
+                )
+                gain = delta - new_delta
+                if new_delta < delta and gain > best_gain:
+                    best_gain, best = gain, (i, j)
+        if best is None:
+            break
+        i, j = best
+        groups[k_hi][i], groups[k_lo][j] = groups[k_lo][j], groups[k_hi][i]
+        swaps += 1
+    return groups, swaps
+
+
+def rebalance_assignment(
+    loads: np.ndarray,  # (E,) EMA loads for one layer (logical experts)
+    assignment: np.ndarray,  # (E,) current logical->physical slot
+    ep: int,
+    max_iters: int = 100,
+) -> Tuple[np.ndarray, int]:
+    """Run Alg 2 on one layer; returns (new assignment, swap count)."""
+    E = len(loads)
+    e_l = E // ep
+    groups: List[List[Tuple[int, float]]] = [[] for _ in range(ep)]
+    for e in range(E):
+        groups[assignment[e] // e_l].append((e, float(loads[e])))
+    new_groups, swaps = hill_climb_rebalance(groups, max_iters=max_iters)
+    new_assign = np.empty(E, dtype=np.int32)
+    for g, members in enumerate(new_groups):
+        for slot, (e, _) in enumerate(members):
+            new_assign[e] = g * e_l + slot
+    return new_assign, swaps
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+
+def permutation_for(
+    old_assign: np.ndarray, new_assign: np.ndarray
+) -> np.ndarray:
+    """perm such that W_new[s] = W_old[perm[s]] moves expert weights from
+    their old physical slots to the new ones."""
+    old_assign = np.asarray(old_assign)
+    new_assign = np.asarray(new_assign)
+    logical_at_new = np.argsort(new_assign)  # new slot -> logical expert
+    return old_assign[logical_at_new].astype(np.int32)
+
+
+def moved_experts(old_assign: np.ndarray, new_assign: np.ndarray, ep: int, E: int):
+    """Logical experts whose *group* changed (these are the ones whose
+    parameters actually cross devices)."""
+    e_l = E // ep
+    return np.nonzero(
+        (np.asarray(old_assign) // e_l) != (np.asarray(new_assign) // e_l)
+    )[0]
+
+
+EXPERT_PARAM_KEYS = ("w_up", "w_gate", "w_down")
+
+
+def apply_migration_to_tree(tree, perm_by_layer, rep_axis: bool = True):
+    """Permute every expert-indexed leaf of one MoE block's param tree.
+
+    tree: {"w_router": (reps, d, E)?, "w_up": (reps, E, d, f), ...,
+    "assignment": (reps, E)}; perm_by_layer: (reps, E) int — new-slot ->
+    old-slot per rep.  Works on jnp or np arrays.
+    """
+    import jax.numpy as jnp
+
+    out = dict(tree)
+    perm = jnp.asarray(perm_by_layer)
+    for key in EXPERT_PARAM_KEYS:
+        if key in tree:
+            w = tree[key]
+            out[key] = jnp.take_along_axis(
+                w, perm.reshape(perm.shape + (1,) * (w.ndim - 2)), axis=1
+            )
+    return out
+
+
+def migration_cost(
+    E: int, d_model: int, d_ffn: int, G: int = 8, bandwidth: float = 50e9,
+    n_mat: int = 3, bytes_per_param: int = 16,
+) -> Tuple[float, float]:
+    """Paper Table IV: worst-case per-GPU send size (bytes) and latency (s):
+    48 * E * d_model * d_ffn / G at 50 GB/s (3 matrices x 16 B/param)."""
+    size = bytes_per_param * n_mat * E * d_model * d_ffn / G
+    return size, size / bandwidth

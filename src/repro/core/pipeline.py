@@ -1,0 +1,240 @@
+"""Pipelined execution: Piper's PP-over-the-slow-axis composition (paper §III).
+
+The layer stack is partitioned into ``PP`` stages along the pipeline mesh
+axis (the inter-pod "pod" axis in the production meshes — the slowest links,
+exactly where the paper confines P2P traffic instead of collectives).
+Microbatches flow between stages with ``lax.ppermute``; a ``lax.scan`` over
+clock ticks realizes the schedule; ``jax.grad`` differentiates through it,
+yielding the reverse pipeline for the backward pass.
+
+Composition: the outer ``shard_map`` is *manual* only over the pipeline axis
+(``auto`` over data/ep/tp), so each stage's interior still runs the full
+expert-data-parallel machinery — including the nested explicit-``shard_map``
+MoE dispatch with its "ep"-local all-to-all.  This is the paper's central
+claim made concrete: collectives (a2a, all-gather) stay inside the fast
+domain; only point-to-point microbatch hand-offs cross the slow axis.
+
+Schedule notes (DESIGN.md §3.3): the SPMD executor realizes the GPipe order
+(all forwards, then all backwards — the natural order under reverse-mode AD);
+the 1F1B schedule's *memory* profile (paper Eq 4/5) is modeled analytically
+in ``core.resource_model`` and validated against a discrete-event simulator
+in ``core.schedule_sim``.  Warmup/cooldown ticks compute garbage that is
+masked out of outputs and losses — the bubble materializes as wasted compute,
+identical in cost to idle bubbles and visible to the roofline analysis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+from repro.sharding import MeshPlan
+
+
+def pipelined_stack_forward(
+    block_params,
+    x: jax.Array,  # (b, s, d) embedded inputs OR (b, s) int32 tokens
+    arch: ArchConfig,
+    plan: MeshPlan,
+    *,
+    positions: jax.Array,
+    impl: str = "xla",
+    num_microbatches: Optional[int] = None,
+    embed_fn=None,  # (embed_params, tokens (b_mu, s)) -> (b_mu, s, d)
+    embed_params=None,
+):
+    """Drop-in replacement for ``transformer.stack_forward`` that pipelines
+    the stack over ``plan.pp_axis``.
+
+    When ``embed_fn`` is given, ``x`` is the raw token ids and the embedding
+    lookup runs INSIDE stage 0 — as in the paper's stage placement.  (It also
+    keeps the embedding-backward scatter-add inside the manual-pod region;
+    letting it cross the shard_map boundary trips an XLA SPMD crash at
+    512-device scale.)
+
+    Returns (x, {"moe_aux_loss","moe_z_loss"}, expert_load or None).
+    """
+    pp_axis = plan.pp_axis
+    assert pp_axis is not None
+    PP = plan.pp
+    period = len(arch.block_pattern)
+    reps = arch.num_layers // period
+    assert reps % PP == 0, (
+        f"{arch.name}: {reps} pattern-reps not divisible by PP={PP}"
+    )
+    rps = reps // PP  # reps per stage
+
+    M = num_microbatches or plan.microbatches or 2 * PP
+    b, s = x.shape[:2]
+    d = arch.d_model
+    assert b % M == 0, (b, M)
+    b_mu = b // M
+
+    # Stage-major parameter layout: (reps, ...) -> (PP, rps, ...), explicitly
+    # resharded so dim0 lives on the pipeline axis and the remaining dims
+    # keep their ZeRO-3 sharding (leaving this to GSPMD triggers pathological
+    # reshards and an XLA SPMD crash at 512-device scale).
+    from repro.models import model as model_lib  # deferred: avoids cycle
+
+    block_specs = model_lib.param_specs(arch, plan)["blocks"]
+
+    from jax.sharding import NamedSharding
+
+    def stage_leaf(p, sp):
+        r = p.reshape((PP, rps) + p.shape[1:])
+        return lax.with_sharding_constraint(
+            r, NamedSharding(plan.mesh, P(*((pp_axis, None) + tuple(sp)[1:])))
+        )
+
+    staged = jax.tree.map(stage_leaf, block_params, block_specs)
+    xm = x.reshape((M, b_mu, s) + ((d,) if embed_fn is None else ()))
+    pos_mu = positions[:b_mu]
+
+    has_moe = arch.num_moe_layers > 0
+    mesh = plan.mesh
+    auto = frozenset(a for a in mesh.axis_names if a != pp_axis)
+
+    def stage_program(stage_params, emb_params, xm_local):
+        # in_spec P(pp_axis) leaves a leading length-1 stage dim: drop it.
+        stage_params = jax.tree.map(lambda p: p[0], stage_params)
+        stage = lax.axis_index(pp_axis)
+        T = M + PP - 1
+
+        def stage_fn(h):
+            # unroll=True: the nested while(layer-scan)-inside-while(ticks)
+            # with checkpoint triggers an XLA SPMD crash at 512-device scale;
+            # unrolling the (short) per-stage layer loop sidesteps it.
+            return transformer.stack_forward(
+                stage_params,
+                h,
+                arch,
+                plan,
+                positions=pos_mu,
+                impl=impl,
+                token_sharded=True,
+                unroll=True,
+            )
+
+        # Steer GSPMD to the canonical activation layout inside the stage —
+        # without this the partitioner invents mixed shardings for the
+        # carried microbatch and hits an XLA involuntary-remat bug at
+        # 512-device scale.
+        act_spec = P(tuple(plan.dp_axes), tuple(plan.sp_axes), None)
+
+        def constrain(h):
+            return lax.with_sharding_constraint(h, act_spec)
+
+        def tick(carry, xs):
+            x0, t = xs
+            h_prev, aux, z, loads = carry
+            if embed_fn is not None:
+                x0 = embed_fn(emb_params, x0)
+            inp = constrain(jnp.where(stage == 0, x0, h_prev))
+            h_out, aux_d, loads_d = stage_fn(inp)
+            h_out = constrain(h_out)
+            valid = ((t >= stage) & (t < stage + M)).astype(jnp.float32)
+            aux = aux + aux_d["moe_aux_loss"] * valid
+            z = z + aux_d["moe_z_loss"] * valid
+            if loads is not None and loads_d is not None:
+                loads = loads + loads_d * valid
+            perm = [(i, i + 1) for i in range(PP - 1)]
+            if plan.compress_p2p:
+                from repro.core.compression import compressed_ppermute
+
+                sent = compressed_ppermute(h_out, pp_axis, perm)
+            else:
+                sent = lax.ppermute(h_out, pp_axis, perm)
+            return (sent, aux, z, loads), h_out
+
+        if embed_fn is not None:
+            act_dtype = next(
+                p.dtype
+                for p in jax.tree.leaves(block_params)
+                if jnp.issubdtype(p.dtype, jnp.floating)
+            )
+        else:
+            act_dtype = x.dtype
+        zero_h = jnp.zeros((b_mu, s, d), act_dtype)
+        zero_loads = (
+            jnp.zeros(
+                (rps, sum(1 for _, f in arch.block_pattern if f == "moe"),
+                 arch.moe.num_experts),
+                jnp.float32,
+            )
+            if has_moe
+            else None
+        )
+        carry0 = (zero_h, jnp.float32(0.0), jnp.float32(0.0), zero_loads)
+        # Feed microbatches as scan xs (padded with PP-1 dummy ticks): the
+        # scan transpose then stacks cotangents instead of scatter-adding
+        # into a captured buffer — both faster and a workaround for an XLA
+        # SPMD involuntary-remat crash at 512-way scale.
+        xm_pad = jnp.concatenate(
+            [xm_local, jnp.zeros((PP - 1,) + xm_local.shape[1:], x.dtype)]
+        ) if PP > 1 else xm_local
+        (h_last, aux, z, loads), ys = lax.scan(
+            tick, carry0, (xm_pad, jnp.arange(T))
+        )
+
+        # Valid last-stage outputs are ticks [PP-1, PP-1+M).
+        out = lax.dynamic_slice_in_dim(ys, PP - 1, M, axis=0)
+        return out, aux, z, loads
+
+    out_specs = (
+        P(pp_axis),  # (PP, M, b_mu, s, d): stage-stacked; take the last
+        P(pp_axis),  # per-stage aux
+        P(pp_axis),
+        P(pp_axis) if has_moe else P(),
+    )
+    in_specs = (
+        jax.tree.map(lambda v: P(pp_axis), staged),
+        jax.tree.map(lambda v: P(), embed_params)
+        if embed_params is not None
+        else P(),
+        P(None),  # microbatches replicated over the pipe axis
+    )
+
+    def wrapped(stage_params, emb_params, xm_in):
+        out, aux, z, loads = stage_program(stage_params, emb_params, xm_in)
+        aux = aux[None]
+        z = z[None]
+        out = out[None]
+        if loads is None:
+            return out, aux, z, jnp.zeros((), jnp.float32)
+        return out, aux, z, loads[None]
+
+    out, aux, z, loads = jax.shard_map(
+        wrapped,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_vma=False,
+        axis_names={pp_axis},
+    )(staged, embed_params if embed_params is not None else jnp.zeros(()), xm)
+
+    # out: (PP, M, b_mu, s, d) — only the last stage's block is the real
+    # model output; slicing it reads one stage's shard (a single cross-pod
+    # hand-off, not an all-reduce).
+    y = out[-1].reshape(b, s, d)
+    # aux/z are token-means per microbatch, accumulated over M microbatches
+    # and summed across stages — normalize back to a per-step mean.
+    metrics = {
+        "moe_aux_loss": jnp.sum(aux) / M,
+        "moe_z_loss": jnp.sum(z) / M,
+    }
+    if has_moe:
+        loads = loads.reshape((reps,) + loads.shape[2:])
+    else:
+        loads = None
+    return y, metrics, loads
+
+
+def bubble_fraction(PP: int, M: int) -> float:
+    """GPipe / 1F1B bubble: (PP-1)/(M+PP-1) of ticks are idle."""
+    return (PP - 1) / (M + PP - 1)

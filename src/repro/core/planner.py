@@ -1,0 +1,156 @@
+"""Strategy planner: enumerate, validate (Eq 7–11) and rank (Eq 12) hybrid
+parallelization strategies — the paper's §III-C / §IV-C.
+
+The planner is the piece that makes Piper "platform-aware": given an
+architecture, a token budget per step and a platform description, it emits
+the (PP, EP, DP, memory-policy) configurations that fit, ranked by the MFU
+estimator, and can bind the winner to a concrete MeshPlan for the executor.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Iterable, List, Optional, Tuple
+
+from repro.configs.base import ArchConfig
+from repro.core import resource_model as rm
+from repro.core.platform import Platform
+
+
+@dataclass(frozen=True)
+class Strategy:
+    PP: int
+    EP: int
+    DP: int
+    alpha: int  # microbatch multiplier (M = alpha * PP)
+    checkpoint_activations: bool
+    bytes_per_param: int  # 16 = fp32 master+moments; 10 = bf16 moments
+    estimate: rm.Estimate
+
+    @property
+    def world(self) -> int:
+        return self.PP * self.EP * self.DP
+
+    def describe(self) -> str:
+        e = self.estimate
+        return (
+            f"PP={self.PP:<3d} EP={self.EP:<3d} DP={self.DP:<3d} "
+            f"alpha={self.alpha} ckpt={int(self.checkpoint_activations)} "
+            f"Bp={self.bytes_per_param:<2d} "
+            f"mem0={e.mem_stage0/1e9:7.1f}GB mfu={e.mfu*100:5.1f}% "
+            f"t_step={e.t_step*1e3:8.1f}ms "
+            f"(comp={e.t_compute*1e3:.1f} a2a={e.t_a2a*1e3:.1f} "
+            f"p2p={e.t_p2p*1e3:.1f} dp={e.t_dp_grad*1e3:.1f} "
+            f"bubble={e.bubble_fraction:.2f})"
+        )
+
+
+def _divisors(n: int) -> List[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def valid_strategies(
+    arch: ArchConfig,
+    platform: Platform,
+    total_chips: int,
+    *,
+    batch: int,
+    seq: int,
+    alphas: Iterable[int] = (1, 2, 4, 8),
+    overlap_fraction: float = 0.0,
+    zero: str = "dp",
+    imbalance: float = 1.0,
+) -> List[Strategy]:
+    """All (PP, EP, DP, policy) tuples satisfying the paper's constraints:
+
+    Eq 7:  PP * EP * DP == total chips
+    Eq 8:  EP | E
+    Eq 9:  PP <= L (>= 1 layer per stage)
+    Eq 10: EP <= fast-interconnect domain
+    Eq 11: stage-0 1F1B peak <= HBM
+    """
+    shape = rm.ModelShape.from_arch(arch)
+    E = shape.E if shape.E else 1
+    out: List[Strategy] = []
+    for PP in _divisors(total_chips):
+        if PP > arch.num_layers or arch.num_layers % PP:
+            continue
+        rest = total_chips // PP
+        for EP in _divisors(rest):
+            if E % EP:  # Eq 8
+                continue
+            if EP > platform.fast_domain:  # Eq 10
+                continue
+            DP = rest // EP
+            for alpha in alphas:
+                M = alpha * PP
+                if batch % (DP * M) or batch // (DP * M) == 0:
+                    continue
+                for ckpt in (False, True):
+                    # 16 B/param = paper's fp16+fp32-master policy;
+                    # 12 B = our executor (fp32 master+moments, transient
+                    # bf16 compute copies); 8 B = bf16 moments fallback.
+                    for bpp in (16, 12, 8):
+                        t = rm.TrainSetup(
+                            b=batch,
+                            s=seq,
+                            PP=PP,
+                            EP=EP,
+                            DP=DP,
+                            alpha=alpha,
+                            checkpoint_activations=ckpt,
+                            bytes_per_param=bpp,
+                            zero=zero,
+                            imbalance=imbalance,
+                        )
+                        est = rm.estimate(
+                            shape, t, platform, overlap_fraction=overlap_fraction
+                        )
+                        if not est.mem_ok:  # Eq 11
+                            continue
+                        out.append(
+                            Strategy(PP, EP, DP, alpha, ckpt, bpp, est)
+                        )
+                        break  # cheapest policy that fits wins for this cfg
+                    else:
+                        continue
+                    break
+    return out
+
+
+def rank_strategies(strategies: List[Strategy]) -> List[Strategy]:
+    return sorted(strategies, key=lambda s: -s.estimate.mfu)
+
+
+def best_strategy(
+    arch: ArchConfig,
+    platform: Platform,
+    total_chips: int,
+    *,
+    batch: int,
+    seq: int,
+    **kw,
+) -> Optional[Strategy]:
+    cands = rank_strategies(
+        valid_strategies(
+            arch, platform, total_chips, batch=batch, seq=seq, **kw
+        )
+    )
+    return cands[0] if cands else None
+
+
+def min_chips(
+    arch: ArchConfig,
+    platform: Platform,
+    *,
+    batch: int,
+    seq: int,
+    chip_counts: Iterable[int],
+) -> Optional[int]:
+    """Smallest chip count with any feasible strategy — reproduces the
+    paper's Fig 10 '615B trainable from 64 nodes' analysis."""
+    for n in sorted(chip_counts):
+        if valid_strategies(arch, platform, n, batch=batch, seq=seq):
+            return n
+    return None

@@ -1,0 +1,99 @@
+"""Platform descriptions: empirically-calibrated hardware constants.
+
+Two platforms are modeled:
+
+* **Frontier MI250X** — the paper's platform.  Constants follow the paper's
+  own numbers (§VI Table IV uses 50 GB/s intra-node; 4x200Gb NICs/node;
+  Dragonfly with Rosetta switch groups of N_h = 4 nodes).
+* **TPU v5e** — our target.  197 TFLOP/s bf16 per chip, 16 GB HBM @
+  819 GB/s, 2-D ICI torus with ~50 GB/s/link, pods of 16x16 chips joined by
+  slower inter-pod DCI.
+
+The GEMM-efficiency tables stand in for the paper's micro-benchmarking suite
+(§IV-A): on this CPU-only container the suite (repro/core/microbench.py)
+measures *this host*; for Frontier/TPU we ship curves calibrated from the
+paper's Fig 3/4 and public TPU characterization.  The key effect captured is
+the paper's "tall-and-skinny GEMM" penalty: efficiency collapses when the
+per-expert FFN dim or the per-expert token count is far below the systolic
+tile size.
+"""
+
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+
+@dataclass(frozen=True)
+class Platform:
+    name: str
+    chips_per_node: int  # paper's g
+    peak_flops: float  # bf16/fp16 per chip, FLOP/s
+    hbm_bytes: float
+    hbm_bw: float  # bytes/s per chip
+    # Communication hierarchy (per-chip injection bandwidth, bytes/s)
+    intra_node_bw: float  # NVLink / Infinity Fabric / single ICI hop
+    inter_node_bw: float  # per-NIC (Frontier) / ICI across pod (TPU)
+    inter_group_bw: float  # inter-switch-group / inter-pod DCI
+    nics_per_node: int
+    nodes_per_group: int  # paper's N_h (Rosetta switch group); TPU: pod nodes
+    # GEMM efficiency curve: sorted {min_dim_size: efficiency}
+    gemm_eff: Tuple[Tuple[int, float], ...] = (
+        (0, 0.05), (64, 0.2), (128, 0.4), (256, 0.6), (512, 0.75),
+        (1024, 0.85), (2048, 0.92),
+    )
+    attn_eff: float = 0.55  # flash-attention fraction-of-peak
+    link_bw: float = 0.0  # roofline "per-link" constant (defaults intra_node)
+
+    def __post_init__(self):
+        if self.link_bw == 0.0:
+            object.__setattr__(self, "link_bw", self.intra_node_bw)
+
+    @property
+    def fast_domain(self) -> int:
+        """Chips within the single-hop fast interconnect (paper Eq 10 bound:
+        g * N_h)."""
+        return self.chips_per_node * self.nodes_per_group
+
+    def gemm_efficiency(self, min_dim: int) -> float:
+        """Fraction of peak for a GEMM whose smallest M/N/K dim is min_dim —
+        the skinny-GEMM penalty of paper Fig 4."""
+        keys = [k for k, _ in self.gemm_eff]
+        idx = bisect.bisect_right(keys, max(min_dim, 0)) - 1
+        return self.gemm_eff[max(idx, 0)][1]
+
+
+# The paper's platform: Frontier.  One MI250X GCD is one "GPU".
+FRONTIER = Platform(
+    name="frontier-mi250x",
+    chips_per_node=8,  # 4 MI250X cards = 8 GCDs
+    peak_flops=191.5e12,  # fp16/bf16 per GCD
+    hbm_bytes=64e9,
+    hbm_bw=1.6e12,
+    intra_node_bw=50e9,  # Infinity Fabric (paper Table IV uses 50 GB/s)
+    inter_node_bw=25e9,  # 200 Gb/s Slingshot NIC
+    inter_group_bw=12.5e9,  # inter-group Dragonfly (oversubscribed)
+    nics_per_node=4,
+    nodes_per_group=4,  # Rosetta switch group (paper N_h = 4)
+)
+
+# Our target: TPU v5e pod(s).
+TPU_V5E = Platform(
+    name="tpu-v5e",
+    chips_per_node=4,  # chips per host
+    peak_flops=197e12,  # bf16
+    hbm_bytes=16e9,
+    hbm_bw=819e9,
+    intra_node_bw=50e9,  # ICI per link (roofline constant from the brief)
+    inter_node_bw=50e9,  # ICI is uniform inside a pod (2-D torus)
+    inter_group_bw=6.25e9,  # inter-pod DCI per chip (slow axis)
+    nics_per_node=4,  # 4 ICI links (2-D torus: +-x, +-y)
+    nodes_per_group=64,  # 256-chip pod = fast domain
+)
+
+PLATFORMS: Dict[str, Platform] = {p.name: p for p in (FRONTIER, TPU_V5E)}
+
+
+def get_platform(name: str) -> Platform:
+    return PLATFORMS[name]

@@ -1,0 +1,390 @@
+"""Analytical resource model for MoE training (paper §III-A, Eq 1–6).
+
+Implements the paper's memory / compute / communication formulas in its own
+Table II notation, parameterized by platform constants, and extends them
+with the knobs our executor actually has (bytes-per-parameter policy, flash
+attention, activation checkpointing) so the planner can search them.
+
+All memory quantities are **bytes**; all times are **seconds**.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional
+
+from repro.configs.base import ArchConfig
+from repro.core.platform import Platform
+
+
+@dataclass(frozen=True)
+class ModelShape:
+    """Paper Table II symbols."""
+
+    d_model: int
+    L: int  # total layers
+    L_moe: int  # MoE layers (L - L_moe dense)
+    H: int  # attention heads
+    d_h: int  # per-head dim
+    E: int  # routed experts per MoE layer
+    E_s: int  # shared experts
+    k: int  # top-k
+    n_mat: int  # FFN weight matrices (3 = SwiGLU)
+    d_ffn_moe: int
+    d_ffn_dense: int
+    vocab: int
+    n_attn: int = -1  # attention mixers (SSM archs have fewer); -1 -> L
+
+    def __post_init__(self):
+        if self.n_attn < 0:
+            object.__setattr__(self, "n_attn", self.L)
+
+    @classmethod
+    def from_arch(cls, a: ArchConfig) -> "ModelShape":
+        return cls(
+            d_model=a.d_model,
+            L=a.num_layers,
+            L_moe=a.num_moe_layers,
+            H=a.num_heads,
+            d_h=a.head_dim,
+            E=a.moe.num_experts if a.moe else 0,
+            E_s=a.moe.num_shared_experts if a.moe else 0,
+            k=a.moe.top_k if a.moe else 0,
+            n_mat=a.n_mat,
+            d_ffn_moe=a.moe.d_ff if a.moe else 0,
+            d_ffn_dense=a.d_ff,
+            vocab=a.vocab_size,
+            n_attn=a.num_attn_layers,
+        )
+
+    # -- parameter counts (paper Table III) ---------------------------------
+
+    @property
+    def attn_params_per_layer(self) -> int:
+        # Paper uses 4 d^2 (MHA); with GQA it is d*(H*dh) + 2*d*(Hkv*dh) +
+        # (H*dh)*d.  We keep the paper's 4d^2 for fidelity when H*dh == d.
+        return 4 * self.d_model * self.d_model
+
+    @property
+    def expert_params(self) -> int:
+        return self.n_mat * self.d_model * self.d_ffn_moe
+
+    @property
+    def dense_ffn_params(self) -> int:
+        return self.n_mat * self.d_model * self.d_ffn_dense
+
+    def total_params(self) -> int:
+        moe = self.L_moe * (self.E + self.E_s) * self.expert_params
+        dense = (self.L - self.L_moe) * self.dense_ffn_params
+        attn = self.n_attn * self.attn_params_per_layer
+        embed = 2 * self.vocab * self.d_model
+        return moe + dense + attn + embed
+
+    def active_params(self) -> int:
+        moe = self.L_moe * (self.k + self.E_s) * self.expert_params
+        dense = (self.L - self.L_moe) * self.dense_ffn_params
+        attn = self.n_attn * self.attn_params_per_layer
+        embed = 2 * self.vocab * self.d_model
+        return moe + dense + attn + embed
+
+
+@dataclass(frozen=True)
+class TrainSetup:
+    """Paper Table II run parameters."""
+
+    b: int  # global batch (sequences)
+    s: int  # sequence length
+    PP: int = 1
+    EP: int = 1
+    DP: int = 1  # external data parallelism (replica groups)
+    alpha: int = 4  # microbatch multiplier: M = alpha * PP
+    bytes_per_param: int = 16  # paper §III-A1 (fp16 + fp32 master + Adam)
+    bytes_act: int = 2  # activation dtype
+    flash_attention: bool = True  # 4bHs^2 -> 2bHs (paper)
+    checkpoint_activations: bool = False  # store only layer inputs
+    framework_overhead: float = 2e9  # M_fw: RCCL/XLA buffers etc.
+    # ZeRO sharding of static state: "none" | "dp" (paper/DeepSpeed: over
+    # data-parallel ranks) | "world" (our GSPMD executor: fully 2-D sharded
+    # over every mesh axis)
+    zero: str = "dp"
+    # Calibration (paper §VI: skewed routing keeps GPUs underutilized; Fig 9)
+    imbalance: float = 1.0  # expert-compute inflation from load skew
+    step_overhead: float = 0.0  # fixed per-step host/dataloader seconds
+
+    @property
+    def M(self) -> int:
+        return self.alpha * self.PP
+
+    @property
+    def b_mu(self) -> int:
+        return max(self.b // self.M, 1)
+
+    @property
+    def P(self) -> int:
+        return self.PP * self.EP * self.DP
+
+
+# ---------------------------------------------------------------------------
+# Memory (Eq 1–5)
+# ---------------------------------------------------------------------------
+
+
+def _attn_act_per_layer(m: ModelShape, t: TrainSetup, b: int) -> float:
+    """Paper Table III attention activations: 12 b s d + 4 H b s^2
+    (flash: quadratic term drops to 2 b H s)."""
+    lin = 12 * b * t.s * m.d_model
+    quad = 2 * b * m.H * t.s if t.flash_attention else 4 * m.H * b * t.s * t.s
+    return t.bytes_act / 2 * (lin + quad)  # Table III is already in bytes@2B
+
+
+def _expert_act_per_layer(m: ModelShape, t: TrainSetup, b: int, EP: int) -> float:
+    """Paper: 2 * bsk/EP * (3 d_ffn + d_model) bytes."""
+    if m.E == 0:
+        # dense FFN activations: up+gate+down inputs ~ (2*n_mat-? ) use
+        # bytes_act * b*s*(n_mat*d_ffn + d_model)
+        return t.bytes_act * b * t.s * (m.n_mat * m.d_ffn_dense + m.d_model)
+    return t.bytes_act * (b * t.s * m.k / EP) * (
+        m.n_mat * m.d_ffn_moe + m.d_model
+    )
+
+
+def _static_layer_bytes(m: ModelShape, t: TrainSetup, EP: int) -> float:
+    """Per-GPU static bytes for ONE layer under expert-data parallelism:
+    replicated attention + E/EP experts (paper Eq 2 static part)."""
+    attn = t.bytes_per_param * m.attn_params_per_layer
+    if m.E:
+        experts = t.bytes_per_param * (
+            (m.E / EP + m.E_s) * m.expert_params
+        )
+    else:
+        experts = t.bytes_per_param * m.dense_ffn_params
+    return attn + experts
+
+
+def memory_unpartitioned(m: ModelShape, t: TrainSetup) -> float:
+    """Eq 1: hypothetical single-GPU memory (lower bound M_u)."""
+    static = t.bytes_per_param * (
+        m.total_params()
+    )
+    act = m.L * (_attn_act_per_layer(m, t, t.b) + _expert_act_per_layer(m, t, t.b, 1))
+    return static + act
+
+
+def static_state_bytes(m: ModelShape, t: TrainSetup, stage_layers: float) -> float:
+    """Per-chip bytes of params+grads+optimizer for ``stage_layers`` layers
+    (+ a 1/PP share of embeddings), under the configured ZeRO policy."""
+    if t.zero == "world":
+        # Fully-sharded (our executor): per chip = total / world, regardless
+        # of how layers map to stages.
+        return t.bytes_per_param * m.total_params() / t.P
+    zero = t.DP if t.zero == "dp" else 1
+    static = stage_layers * _static_layer_bytes(m, t, t.EP) / zero
+    embed = (
+        t.bytes_per_param * 2 * m.vocab * m.d_model * (stage_layers / m.L) / zero
+    )
+    return static + embed
+
+
+def memory_edp(m: ModelShape, t: TrainSetup) -> float:
+    """Eq 2: per-GPU memory under expert-data parallelism (world = EP)."""
+    static = static_state_bytes(m, t, m.L)
+    per_layer = _attn_act_per_layer(
+        m, t, t.b / t.EP / t.DP
+    ) + _expert_act_per_layer(m, t, t.b / t.DP, t.EP)
+    if t.checkpoint_activations:
+        # Retain only layer inputs; one layer's full activations re-live
+        # during recompute.
+        inputs = t.bytes_act * (t.b / (t.EP * t.DP)) * t.s * m.d_model
+        act = m.L * inputs + per_layer
+    else:
+        act = m.L * per_layer
+    return static + act + t.framework_overhead
+
+
+def memory_pp_gpipe(m: ModelShape, t: TrainSetup) -> float:
+    """Eq 3: GPipe peak — all M microbatches alive on a stage."""
+    l = m.L / t.PP
+    static = static_state_bytes(m, t, l)
+    b_tok = t.b / t.DP  # batch sharded over external DP
+    act = l * (
+        _attn_act_per_layer(m, t, b_tok / t.EP)
+        + _expert_act_per_layer(m, t, b_tok, t.EP)
+    )
+    return static + act + t.framework_overhead
+
+
+def memory_pp_1f1b(m: ModelShape, t: TrainSetup, stage: int = 0) -> float:
+    """Eq 4: 1F1B peak for stage i — (PP - i) in-flight microbatches."""
+    l = m.L / t.PP
+    static = static_state_bytes(m, t, l)
+    in_flight = t.PP - stage
+    b_mu_tok = t.b / t.DP / t.M
+    act_mu = l * (
+        _attn_act_per_layer(m, t, b_mu_tok / t.EP)
+        + _expert_act_per_layer(m, t, b_mu_tok, t.EP)
+    )
+    if t.checkpoint_activations:
+        # only layer inputs retained: 2 bytes * tokens * d per layer
+        act_mu = l * t.bytes_act * (b_mu_tok / t.EP) * t.s * m.d_model
+    return static + in_flight * act_mu + t.framework_overhead
+
+
+def memory_1f1b_skew(m: ModelShape, t: TrainSetup) -> float:
+    """Eq 5: stage-0 minus stage-(PP-1) activation skew."""
+    return memory_pp_1f1b(m, t, 0) - memory_pp_1f1b(m, t, t.PP - 1)
+
+
+# ---------------------------------------------------------------------------
+# Communication (Eq 6 + pipeline P2P)
+# ---------------------------------------------------------------------------
+
+
+def a2a_bytes_per_gpu(m: ModelShape, t: TrainSetup) -> float:
+    """Per-GPU send volume for ONE dispatch all-to-all of ONE MoE layer over
+    a full step (paper: 2 b s k d / EP bytes in fp16; the (EP-1)/EP factor
+    removes tokens that stay local).  Tokens per GPU are b*s*k/(EP*DP): each
+    pipeline stage processes every microbatch."""
+    if m.E == 0 or t.EP == 1:
+        return 0.0
+    tokens = t.b * t.s * m.k / (t.EP * t.DP)
+    return t.bytes_act * tokens * m.d_model * (t.EP - 1) / t.EP
+
+
+def t_a2a_lower_bound(m: ModelShape, t: TrainSetup, platform: Platform) -> float:
+    """Eq 6: per-MoE-layer forward a2a latency bound (dispatch + combine).
+
+    The paper's bound 4 b s k d / (EP * B_NIC) assumes the EP group spans
+    NICs; when the group fits inside the fast domain the denominator uses
+    the fast-link bandwidth — exactly the locality effect Piper exploits.
+    """
+    if m.E == 0 or t.EP == 1:
+        return 0.0
+    bw = (
+        platform.intra_node_bw
+        if t.EP <= platform.fast_domain
+        else platform.inter_node_bw
+    )
+    return 2 * a2a_bytes_per_gpu(m, t) / bw
+
+
+def p2p_bytes_per_boundary(m: ModelShape, t: TrainSetup) -> float:
+    """Activation bytes crossing one pipeline-stage boundary per microbatch
+    per EP rank (paper §III-B2: 2 b_mu s d bytes)."""
+    b_mu_tok = t.b / t.DP / t.M / t.EP
+    return t.bytes_act * b_mu_tok * t.s * m.d_model
+
+
+# ---------------------------------------------------------------------------
+# Compute
+# ---------------------------------------------------------------------------
+
+
+def flops_per_step(m: ModelShape, t: TrainSetup) -> float:
+    """Model FLOPs per optimizer step: 6 * N_active * tokens + attention
+    quadratic term (12 L_attn b s^2 H d_h fwd+bwd)."""
+    tokens = t.b * t.s
+    dense = 6.0 * m.active_params() * tokens
+    attn_quad = 12.0 * m.n_attn * t.b * t.s * t.s * m.H * m.d_h
+    return dense + attn_quad
+
+
+def t_compute(m: ModelShape, t: TrainSetup, platform: Platform) -> float:
+    """Compute time per step using the micro-benchmarked efficiency curves
+    (paper §IV-A: attention kernel eff + skinny-GEMM expert eff)."""
+    tokens = t.b * t.s
+    # attention + dense parts at attn/gemm efficiency
+    attn_flops = 6.0 * (
+        m.n_attn * m.attn_params_per_layer + 2 * m.vocab * m.d_model
+    ) * tokens + 12.0 * m.n_attn * t.b * t.s * t.s * m.H * m.d_h
+    dense_flops = 6.0 * (m.L - m.L_moe) * m.dense_ffn_params * tokens
+    moe_flops = 6.0 * m.L_moe * (m.k + m.E_s) * m.expert_params * tokens
+
+    # per-expert GEMM shape: (tokens*k/E per device-expert) x d x d_ffn
+    if m.E:
+        tok_per_expert = tokens * m.k / (m.E * t.DP * t.PP)
+        min_dim = min(tok_per_expert, m.d_ffn_moe, m.d_model)
+        moe_eff = platform.gemm_efficiency(int(min_dim))
+    else:
+        moe_eff = platform.gemm_efficiency(m.d_ffn_dense)
+    dense_eff = platform.gemm_efficiency(
+        min(m.d_model, m.d_ffn_dense) if m.d_ffn_dense else m.d_model
+    )
+    peak = platform.peak_flops * t.P
+    time = (
+        attn_flops / (peak * platform.attn_eff)
+        + (dense_flops / (peak * dense_eff) if dense_flops else 0.0)
+        + (moe_flops / (peak * moe_eff) if moe_flops else 0.0)
+    )
+    return time
+
+
+# ---------------------------------------------------------------------------
+# Step time & MFU (Eq 12)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Estimate:
+    t_compute: float
+    t_a2a: float
+    t_p2p: float
+    t_dp_grad: float
+    bubble_fraction: float
+    t_step: float
+    mfu: float
+    mem_stage0: float
+    mem_ok: bool
+
+
+def estimate(
+    m: ModelShape, t: TrainSetup, platform: Platform,
+    overlap_fraction: float = 0.0,
+) -> Estimate:
+    """Paper Eq 12: MFU = hardware-eff x compute-fraction, with the pipeline
+    bubble (PP-1)/M and exposed (non-overlapped) communication."""
+    tc = t_compute(m, t, platform)
+
+    # All-to-all: Eq 6 covers dispatch+combine (forward); the backward pass
+    # runs the same two collectives again (paper: 4 a2a per MoE layer per
+    # fwd+bwd).  Each GPU hosts L_moe/PP such layers.
+    ta2a = 2 * t_a2a_lower_bound(m, t, platform) * m.L_moe / t.PP
+
+    # Pipeline P2P: (PP-1) boundaries x M microbatches x fwd+bwd.
+    p2p_bw = (
+        platform.inter_group_bw
+        if t.EP >= platform.fast_domain
+        else platform.inter_node_bw
+    )
+    # Every interior stage sends+receives M microbatch activations fwd and
+    # their gradients bwd; boundaries operate concurrently.
+    tp2p = (
+        2 * t.M * p2p_bytes_per_boundary(m, t) / p2p_bw if t.PP > 1 else 0.0
+    )
+
+    # DP gradient all-reduce (external replicas): 2 x params/DP-shard.
+    if t.DP > 1:
+        grad_bytes = 2 * (m.total_params() / (t.PP * t.EP)) * 2  # bf16, x2 ring
+        tdp = grad_bytes / platform.inter_node_bw
+    else:
+        tdp = 0.0
+
+    bubble = (t.PP - 1) / t.M if t.PP > 1 else 0.0
+    exposed = (ta2a + tp2p + tdp) * (1.0 - overlap_fraction)
+    t_step = (tc * t.imbalance + exposed) * (1 + bubble) + t.step_overhead
+
+    model_flops = flops_per_step(m, t)
+    mfu = model_flops / (platform.peak_flops * t.P * t_step)
+
+    mem0 = memory_pp_1f1b(m, t, 0) if t.PP > 1 else memory_edp(m, t)
+    return Estimate(
+        t_compute=tc,
+        t_a2a=ta2a,
+        t_p2p=tp2p,
+        t_dp_grad=tdp,
+        bubble_fraction=bubble,
+        t_step=t_step,
+        mfu=mfu,
+        mem_stage0=mem0,
+        mem_ok=mem0 <= platform.hbm_bytes,
+    )

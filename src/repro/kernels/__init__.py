@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots the paper identifies:
+
+* ``moe_gemm``        -- grouped (per-expert) GEMM; the tall-and-skinny
+                         regime of fine-grained MoE (paper Fig 4)
+* ``flash_attention`` -- block-tiled attention (paper SSIV-A benchmarks it)
+* ``ssd``             -- Mamba2 SSD intra-chunk kernel (mamba2/jamba archs)
+
+Each kernel ships with ``ops.py`` (the jit'd public wrapper with an
+``interpret`` switch) and ``ref.py`` (pure-jnp oracle) and is swept against
+the oracle over shapes/dtypes in tests/.
+"""

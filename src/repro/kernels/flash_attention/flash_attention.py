@@ -1,0 +1,156 @@
+"""Flash attention Pallas TPU kernel (online softmax, block-tiled).
+
+Supports the attention variants the assigned architectures need: causal,
+GQA (kv-head indexing in the BlockSpec index map — no K/V repeat
+materialization), sliding-window (gemma2 local layers) and attention-logit
+softcap (gemma2).
+
+Tiling: grid (batch, q_heads, s_q/bq, s_kv/bk) with the KV dim innermost.
+TPU grids execute sequentially, so the running-softmax state (row max m,
+normalizer l, fp32 accumulator) lives in VMEM scratch that persists across
+the KV steps of one Q block — the canonical TPU flash-attention scheme.
+VMEM per step: q/k/v blocks (bq+2*bk)*d*2B + acc bq*d*4 B ≈ 0.4 MB at
+(bq, bk, d) = (256, 256, 128).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, window: Optional[int],
+    softcap: Optional[float], bq: int, bk: int, nkv: int,
+):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = pl.program_id(2) * bq
+    k_start = ki * bk
+
+    # Causal/window block-level relevance (full-block skip).
+    relevant = True
+    if causal:
+        relevant = k_start <= q_start + bq - 1
+    if window is not None:
+        relevant = jnp.logical_and(
+            relevant, k_start + bk - 1 >= q_start - (window - 1)
+        )
+
+    @pl.when(relevant)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _store():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _block(dim: int, preferred: int) -> int:
+    b = min(dim, preferred)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (b, hq, sq, d)
+    k: jax.Array,  # (b, hkv, skv, d)
+    v: jax.Array,  # (b, hkv, skv, d)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    groups = hq // hkv
+    bq = _block(sq, bq)
+    bk = _block(skv, bk)
+    nkv = skv // bk
+    grid = (b, hq, sq // bq, nkv)
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _fa_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        bq=bq,
+        bk=bk,
+        nkv=nkv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, h, qi, ki: (bi, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda bi, h, qi, ki: (bi, h // groups, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, d), lambda bi, h, qi, ki: (bi, h // groups, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, d), lambda bi, h, qi, ki: (bi, h, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),  # running row max
+            pltpu.VMEM((bq, 1), jnp.float32),  # running normalizer
+            pltpu.VMEM((bq, d), jnp.float32),  # fp32 accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

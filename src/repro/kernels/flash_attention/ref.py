@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for flash attention (matches models.layers.attention)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(
+    q: jax.Array,  # (b, hq, sq, d)
+    k: jax.Array,  # (b, hkv, skv, d)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    groups = hq // hkv
+    kr = jnp.repeat(k, groups, axis=1)
+    vr = jnp.repeat(v, groups, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, kr, preferred_element_type=jnp.float32
+    ) / math.sqrt(d)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vr).astype(q.dtype)

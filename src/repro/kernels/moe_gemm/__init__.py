@@ -1,0 +1,1 @@
+from repro.kernels.moe_gemm import ops, ref  # noqa: F401

@@ -1,0 +1,38 @@
+"""Public jit'd wrappers for the grouped expert GEMM kernel."""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gemm import moe_gemm, ref
+
+
+def _interpret_default() -> bool:
+    # CPU containers run the kernel body in interpret mode; on TPU the
+    # compiled kernel is used.
+    return jax.default_backend() != "tpu"
+
+
+def grouped_matmul(x, w, *, interpret=None, **blocks):
+    interpret = _interpret_default() if interpret is None else interpret
+    out = moe_gemm.grouped_matmul_f32(x, w, interpret=interpret, **blocks)
+    return out.astype(x.dtype)
+
+
+def grouped_ffn(tokens, w_up, w_gate, w_down, activation: str = "swiglu",
+                *, interpret=None, **blocks):
+    """Expert FFN: three grouped GEMMs + gated activation (elementwise ops
+    fused by XLA between kernel launches)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    mm = partial(moe_gemm.grouped_matmul_f32, interpret=interpret, **blocks)
+    if activation == "swiglu":
+        h = (jax.nn.silu(mm(tokens, w_gate)) * mm(tokens, w_up)).astype(
+            tokens.dtype
+        )
+    else:
+        h = jax.nn.gelu(mm(tokens, w_up)).astype(tokens.dtype)
+    return mm(h, w_down).astype(tokens.dtype)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the grouped expert GEMM / grouped FFN."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """out[e] = x[e] @ w[e]; fp32 accumulation like the kernel."""
+    return jnp.einsum(
+        "emk,ekn->emn", x, w, preferred_element_type=jnp.float32
+    )
+
+
+def grouped_ffn(tokens, w_up, w_gate, w_down, activation: str = "swiglu"):
+    """tokens: (E, C, d) -> (E, C, d); the MoE expert-FFN oracle."""
+    if activation == "swiglu":
+        gate = grouped_matmul(tokens, w_gate)
+        up = grouped_matmul(tokens, w_up)
+        h = (jax.nn.silu(gate) * up).astype(tokens.dtype)
+    else:
+        h = jax.nn.gelu(grouped_matmul(tokens, w_up)).astype(tokens.dtype)
+    return grouped_matmul(h, w_down).astype(tokens.dtype)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the SSD intra-chunk term (mirrors models.ssm)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_intra_chunk(x, dA, B, C):
+    """x: (g, cl, h, p); dA: (g, cl, h); B, C: (g, cl, h, n)."""
+    L = jnp.exp(segsum(dA.transpose(0, 2, 1)))  # (g, h, cl, cl)
+    return jnp.einsum(
+        "glhn,gshn,ghls,gshp->glhp", C, B, L.astype(C.dtype), x
+    )

@@ -1,0 +1,74 @@
+"""Mamba2 SSD intra-chunk Pallas TPU kernel.
+
+Computes the "diagonal block" term of the state-space-duality decomposition
+(arXiv:2405.21060) for every (batch, chunk, head):
+
+    Y[l] = sum_{s<=l} exp(sum_{k in (s,l]} dA[k]) * (C[l]·B[s]) * x[s]
+
+i.e. an attention-like (cl x cl) product with a cumulative-decay mask — the
+part of SSD that is quadratic in chunk length and MXU-friendly.  The
+inter-chunk linear recurrence stays in XLA (``lax.associative_scan``), where
+it lowers to a log-depth collective chain under sequence sharding.
+
+Tiling: grid (batch*chunks, heads); one kernel instance owns a full
+(cl, cl) score tile per head.  VMEM per step at (cl, n, p) = (256, 128, 64):
+x/B/C blocks + fp32 scores ≈ 0.5 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, da_ref, b_ref, c_ref, o_ref):
+    dA = da_ref[0, :, 0].astype(jnp.float32)  # (cl,)
+    cs = jnp.cumsum(dA)
+    seg = cs[:, None] - cs[None, :]  # (cl, cl): sum over (j, i]
+    cl = seg.shape[0]
+    mask = (
+        jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 1)
+    )
+    decay = jnp.where(mask, jnp.exp(seg), 0.0)
+
+    Cn = c_ref[0, :, 0, :].astype(jnp.float32)  # (cl, n)
+    Bn = b_ref[0, :, 0, :].astype(jnp.float32)  # (cl, n)
+    scores = jax.lax.dot_general(
+        Cn, Bn, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (cl, cl) = C[l]·B[s]
+    scores = scores * decay
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (cl, p)
+    y = jax.lax.dot(scores, x, preferred_element_type=jnp.float32)
+    o_ref[0, :, 0, :] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(
+    x: jax.Array,  # (g, cl, h, p) — dt-prescaled inputs, g = batch*chunks
+    dA: jax.Array,  # (g, cl, h)
+    B: jax.Array,  # (g, cl, h, n) — head-broadcast
+    C: jax.Array,  # (g, cl, h, n)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    g, cl, h, p = x.shape
+    n = B.shape[-1]
+    grid = (g, h)
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cl, 1, p), lambda gi, hi: (gi, 0, hi, 0)),
+            pl.BlockSpec((1, cl, 1), lambda gi, hi: (gi, 0, hi)),
+            pl.BlockSpec((1, cl, 1, n), lambda gi, hi: (gi, 0, hi, 0)),
+            pl.BlockSpec((1, cl, 1, n), lambda gi, hi: (gi, 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cl, 1, p), lambda gi, hi: (gi, 0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, cl, h, p), x.dtype),
+        interpret=interpret,
+    )(x, dA, B, C)

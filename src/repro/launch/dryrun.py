@@ -1,0 +1,342 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) combination against the production meshes, with no device allocation
+(ShapeDtypeStruct stand-ins), and extract the roofline inputs:
+
+    compiled.memory_analysis()  — proves the cell fits per-chip HBM
+    compiled.cost_analysis()    — per-device HLO FLOPs / bytes
+    hlo_analysis                — loop-aware collective wire bytes
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-moe-3b-a800m --shape train_4k
+    python -m repro.launch.dryrun --arch grok-1-314b --shape train_4k --multi-pod --pipeline
+    python -m repro.launch.dryrun --all --jobs 4        # every cell, both meshes
+
+Results land in results/dryrun/<cell>.json (one file per cell) and are
+consumed by repro.launch.roofline and EXPERIMENTS.md.
+
+NOTE: the XLA_FLAGS line above must precede any jax import — jax locks the
+device count on first initialization.
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# v5e per-chip HBM; memory policy below keeps every cell under this.
+HBM_BYTES = 16e9
+
+
+def _cell_name(arch, shape, multi_pod, pipeline, tag=""):
+    mesh = "pod2" if multi_pod else "pod1"
+    pipe = "-pp" if pipeline else ""
+    tag = f"-{tag}" if tag else ""
+    return f"{arch}--{shape}--{mesh}{pipe}{tag}"
+
+
+def choose_memory_policy(arch, shape, chips: int):
+    """Planner-informed defaults so the full config fits 16 GB/chip."""
+    params = arch.total_params()
+    opt_dtype = "float32"
+    if params * 12 / chips > 0.8 * HBM_BYTES:
+        opt_dtype = "bfloat16"  # 8 B/param persistent state
+    remat = "full" if shape.kind == "train" else "none"
+    return opt_dtype, remat
+
+
+def run_cell(
+    arch_name: str,
+    shape_name: str,
+    multi_pod: bool,
+    pipeline: bool = False,
+    hierarchical_a2a: bool = False,
+    compress_p2p: bool = False,
+    remat: str = None,
+    tag: str = "",
+    save: bool = True,
+) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import training
+    from repro.configs import SHAPES, get_arch, shape_applicable
+    from repro.launch import hlo_analysis
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import LanguageModel
+    from repro.optim import OptimizerConfig
+    from repro.sharding import make_plan
+
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    cell = _cell_name(arch_name, shape_name, multi_pod, pipeline, tag)
+    record = {
+        "cell": cell,
+        "arch": arch_name,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "pipeline": pipeline,
+        "hierarchical_a2a": hierarchical_a2a,
+        "compress_p2p": compress_p2p,
+    }
+
+    ok, why = shape_applicable(arch, shape)
+    if not ok:
+        record.update(status="skipped", reason=why)
+        if save:
+            _save(record)
+        return record
+
+    try:
+        t_start = time.time()
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.devices.size
+        opt_dtype, auto_remat = choose_memory_policy(arch, shape, chips)
+        plan = make_plan(
+            mesh,
+            arch,
+            pipeline_on_pod=pipeline,
+            remat=remat or auto_remat,
+            optimizer_dtype=opt_dtype,
+            hierarchical_a2a=hierarchical_a2a,
+        )
+        plan.compress_p2p = compress_p2p
+        if pipeline:
+            # XLA bug b/433785288 workaround (see MeshPlan.embed_grad).
+            plan.embed_grad = False
+            record["embed_grad_frozen"] = True
+        lm = LanguageModel(arch, plan)
+        ns = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(plan.mesh, s),
+            tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        record.update(
+            chips=chips,
+            ep=plan.ep,
+            tp=plan.tp,
+            pp=plan.pp,
+            optimizer_dtype=opt_dtype,
+            remat=plan.remat,
+        )
+
+        with plan.mesh:
+            if shape.kind == "train":
+                step = training.make_train_step(lm, OptimizerConfig())
+                state = training.abstract_state(lm)
+                batch = training.batch_struct(arch, shape)
+                in_sh = (ns(training.state_specs(lm)), ns(training.batch_specs(lm, shape)))
+                out_sh = (ns(training.state_specs(lm)), None)
+                jitted = jax.jit(
+                    step, in_shardings=in_sh, out_shardings=out_sh,
+                    donate_argnums=(0,),
+                )
+                lowered = jitted.lower(state, batch)
+            elif shape.kind == "prefill":
+                step = training.make_prefill_step(lm)
+                params = __import__(
+                    "repro.models.model", fromlist=["abstract_params"]
+                ).abstract_params(arch, jnp.float32)
+                batch = training.batch_struct(arch, shape)
+                from repro.models import model as model_lib
+
+                in_sh = (
+                    ns(model_lib.param_specs(arch, plan)),
+                    ns(training.batch_specs(lm, shape)),
+                )
+                jitted = jax.jit(step, in_shardings=in_sh)
+                lowered = jitted.lower(params, batch)
+            else:  # decode
+                from repro.models import model as model_lib
+
+                step = training.make_decode_step(lm)
+                params = model_lib.abstract_params(arch, jnp.float32)
+                cache = lm.abstract_cache(shape.global_batch, shape.seq_len)
+                batch = training.batch_struct(arch, shape)
+                cache_sh = ns(lm.cache_specs(shape.global_batch, shape.seq_len))
+                in_sh = (
+                    ns(model_lib.param_specs(arch, plan)),
+                    cache_sh,
+                    ns(training.batch_specs(lm, shape)),
+                    None,
+                )
+                out_sh = (None, cache_sh)
+                jitted = jax.jit(
+                    step, in_shardings=in_sh, out_shardings=out_sh,
+                    donate_argnums=(1,),
+                )
+                lowered = jitted.lower(
+                    params, cache, batch, jax.ShapeDtypeStruct((), jnp.int32)
+                )
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+
+        ma = compiled.memory_analysis()
+        print(ma)
+        ca = compiled.cost_analysis() or {}
+        # cost_analysis visits while-loop bodies once; analyze_hlo multiplies
+        # by trip counts (see hlo_analysis docstring) — it is the authoritative
+        # number for the roofline.
+        cost = hlo_analysis.analyze_hlo(compiled.as_text(), chips)
+        print({"hlo_flops": cost.flops, "hlo_bytes": cost.bytes_accessed,
+               "wire_bytes": cost.total_wire_bytes})
+
+        # On this single-host CPU backend, memory_analysis reports module-
+        # level sizes; per-device = module / chips for arguments (weights,
+        # caches are sharded), while temps are already per-partition-shaped.
+        arg_b = ma.argument_size_in_bytes
+        record.update(
+            status="ok",
+            lower_seconds=t_lower - t_start,
+            compile_seconds=t_compile - t_lower,
+            memory_analysis={
+                "argument_bytes": arg_b,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "code_bytes": ma.generated_code_size_in_bytes,
+                "peak_bytes_per_device": (
+                    arg_b
+                    + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes
+                    - ma.alias_size_in_bytes
+                ),
+            },
+            cost_analysis={
+                "flops": cost.flops,
+                "bytes_accessed": cost.bytes_accessed,
+                "bytes_large": cost.bytes_large,
+                "raw_flops_once": ca.get("flops", 0.0),
+                "raw_bytes_once": ca.get("bytes accessed", 0.0),
+            },
+            collectives=cost.collective_summary(),
+        )
+    except Exception as e:  # noqa: BLE001
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    if save:
+        _save(record)
+    return record
+
+
+def _save(record: dict):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    with open(RESULTS_DIR / f"{record['cell']}.json", "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def all_cells(pipeline_moe: bool = True):
+    """The full dry-run matrix."""
+    from repro.configs import ASSIGNED, SHAPES
+
+    cells = []
+    for arch in ASSIGNED:
+        for shape in SHAPES:
+            cells.append((arch, shape, False, False))
+            cells.append((arch, shape, True, False))
+    if pipeline_moe:
+        # Piper's paper-faithful config: PP over the pod axis for the MoE
+        # and hybrid architectures (train shapes).
+        for arch in ("granite-moe-3b-a800m", "grok-1-314b",
+                     "jamba-1.5-large-398b"):
+            cells.append((arch, "train_4k", True, True))
+    return cells
+
+
+def _run_all(jobs: int, force: bool):
+    cells = all_cells()
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    procs = []
+    pending = []
+    for arch, shape, mp, pp in cells:
+        cell = _cell_name(arch, shape, mp, pp)
+        out = RESULTS_DIR / f"{cell}.json"
+        if out.exists() and not force:
+            continue
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape,
+        ]
+        if mp:
+            cmd.append("--multi-pod")
+        if pp:
+            cmd.append("--pipeline")
+        pending.append((cell, cmd))
+
+    running = []
+    results = {}
+    while pending or running:
+        while pending and len(running) < jobs:
+            cell, cmd = pending.pop(0)
+            print(f"[dryrun] launch {cell}")
+            p = subprocess.Popen(
+                cmd, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+                env={**os.environ, "PYTHONPATH": "src"},
+            )
+            running.append((cell, p, time.time()))
+        done = [r for r in running if r[1].poll() is not None]
+        for cell, p, t0 in done:
+            running.remove((cell, p, t0))
+            print(f"[dryrun] {cell}: rc={p.returncode} ({time.time()-t0:.0f}s)")
+        time.sleep(2)
+    # summary
+    n_ok = n_skip = n_err = 0
+    for f in sorted(RESULTS_DIR.glob("*.json")):
+        rec = json.loads(f.read_text())
+        s = rec.get("status")
+        n_ok += s == "ok"
+        n_skip += s == "skipped"
+        n_err += s == "error"
+        if s == "error":
+            print(f"[dryrun] ERROR {rec['cell']}: {rec.get('error')}")
+    print(f"[dryrun] ok={n_ok} skipped={n_skip} error={n_err}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="Piper: pipeline stages over the pod axis")
+    ap.add_argument("--hierarchical-a2a", action="store_true")
+    ap.add_argument("--compress-p2p", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=3)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        _run_all(args.jobs, args.force)
+        return
+    rec = run_cell(
+        args.arch,
+        args.shape,
+        args.multi_pod,
+        pipeline=args.pipeline,
+        hierarchical_a2a=args.hierarchical_a2a,
+        compress_p2p=args.compress_p2p,
+        remat=args.remat,
+        tag=args.tag,
+    )
+    status = rec.get("status")
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("traceback",)}, indent=1)[:2000])
+    if status == "error":
+        print(rec.get("traceback", ""), file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single pod: 16x16 = 256 chips ("data" x "model");
+multi-pod: 2 x 16 x 16 = 512 chips ("pod" x "data" x "model") — the "pod"
+axis is the slow inter-pod interconnect that Piper either treats as plain DP
+or pipelines across (``repro.core.pipeline``).
+
+The model programs run on a *refined* view of the production mesh
+(``repro.sharding.refine_mesh``): the same device grid with the "model" axis
+reshaped into ("ep","tp") per the architecture's expert count — see
+DESIGN.md §3.1.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,157 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s        [seconds]
+    memory term     = HLO_bytes_per_device / HBM_bw             [seconds]
+    collective term = collective_wire_bytes_per_device / link_bw [seconds]
+
+(cost_analysis runs on the SPMD-partitioned per-device module, so dividing
+per-device quantities by per-chip peaks is identical to total/(chips*peak).)
+
+MODEL_FLOPS uses the standard accounting: 6*N_active*tokens for training
+(fwd+bwd), 2*N_active*tokens for prefill/decode; the ratio
+MODEL_FLOPS / (HLO_FLOPs * chips) exposes remat recompute, bubble waste,
+dropped-capacity padding and dispatch overhead.
+
+Usage:
+    python -m repro.launch.roofline            # table from results/dryrun
+    python -m repro.launch.roofline --csv out.csv
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.configs import SHAPES, get_arch
+
+# TPU v5e (from the brief)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # per-link ICI
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def model_flops(arch_name: str, shape_name: str) -> float:
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    n = arch.active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def roofline_terms(record: dict) -> Optional[dict]:
+    if record.get("status") != "ok":
+        return None
+    chips = record["chips"]
+    flops_dev = record["cost_analysis"]["flops"]
+    # Prefer the >=1MiB-ops HBM estimate; fall back to the conservative
+    # everything-counts bound for records produced before it existed.
+    bytes_dev = record["cost_analysis"].get(
+        "bytes_large", record["cost_analysis"]["bytes_accessed"]
+    )
+    wire_dev = record["collectives"].get(
+        "total_wire_bytes_bf16adj", record["collectives"]["total_wire_bytes"]
+    )
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_collective = wire_dev / LINK_BW
+    terms = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_collective,
+    }
+    dominant = max(terms, key=terms.get)
+    bound = max(t_compute, t_memory, t_collective)
+    mf = model_flops(record["arch"], record["shape"])
+    useful = mf / (flops_dev * chips) if flops_dev else 0.0
+    # Roofline fraction: useful model FLOP/s at the bound, vs peak.
+    mfu_bound = mf / chips / PEAK_FLOPS / bound if bound else 0.0
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "bound_s": bound,
+        "model_flops": mf,
+        "useful_flops_ratio": useful,
+        "roofline_mfu": mfu_bound,
+        "mem_per_device_gb": record["memory_analysis"]["peak_bytes_per_device"] / 1e9,
+    }
+
+
+def load_records(results_dir: Path = RESULTS_DIR) -> Dict[str, dict]:
+    out = {}
+    for f in sorted(results_dir.glob("*.json")):
+        rec = json.loads(f.read_text())
+        out[rec["cell"]] = rec
+    return out
+
+
+def table(records: Dict[str, dict], multi_pod: Optional[bool] = False) -> str:
+    rows = []
+    header = (
+        f"{'cell':58s} {'mem/dev':>8s} {'comp_ms':>9s} {'mem_ms':>9s} "
+        f"{'coll_ms':>9s} {'domin':>7s} {'useful':>7s} {'roofMFU':>8s}"
+    )
+    rows.append(header)
+    rows.append("-" * len(header))
+    for cell, rec in records.items():
+        if multi_pod is not None and rec.get("multi_pod") != multi_pod:
+            continue
+        if rec.get("status") == "skipped":
+            rows.append(f"{cell:58s} SKIPPED: {rec.get('reason','')}")
+            continue
+        if rec.get("status") != "ok":
+            rows.append(f"{cell:58s} ERROR: {rec.get('error','')[:60]}")
+            continue
+        t = roofline_terms(rec)
+        rows.append(
+            f"{cell:58s} {t['mem_per_device_gb']:7.2f}G "
+            f"{t['compute_s']*1e3:9.2f} {t['memory_s']*1e3:9.2f} "
+            f"{t['collective_s']*1e3:9.2f} {t['dominant']:>7s} "
+            f"{t['useful_flops_ratio']*100:6.1f}% {t['roofline_mfu']*100:7.2f}%"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all-meshes", action="store_true")
+    args = ap.parse_args()
+    records = load_records()
+    mp = None if args.all_meshes else args.multi_pod
+    print(table(records, multi_pod=mp))
+    if args.csv:
+        import csv
+
+        with open(args.csv, "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(
+                ["cell", "arch", "shape", "multi_pod", "pipeline", "chips",
+                 "mem_per_device_gb", "compute_s", "memory_s", "collective_s",
+                 "dominant", "useful_flops_ratio", "roofline_mfu"]
+            )
+            for cell, rec in records.items():
+                t = roofline_terms(rec)
+                if t is None:
+                    continue
+                w.writerow(
+                    [cell, rec["arch"], rec["shape"], rec["multi_pod"],
+                     rec["pipeline"], rec["chips"],
+                     t["mem_per_device_gb"], t["compute_s"], t["memory_s"],
+                     t["collective_s"], t["dominant"],
+                     t["useful_flops_ratio"], t["roofline_mfu"]]
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""End-to-end training driver.
+
+Examples (CPU container — reduced configs; on TPU drop --reduced):
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch granite-moe-3b-a800m --reduced --steps 50 --batch 8 --seq 128
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+    python -m repro.launch.train --arch granite-moe-3b-a800m --reduced \
+        --mesh 2,2,2 --pipeline --steps 20 --batch 8 --seq 128
+
+The driver: consults the planner for the configuration report, builds the
+mesh+plan, initializes or restores state, and runs the fault-tolerant
+Trainer (checkpointing, straggler monitor, expert migration).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default=None,
+                    help="comma mesh shape, e.g. 2,2,2 -> (pod,data,model)")
+    ap.add_argument("--pipeline", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--corpus", default=None, help="memmap token corpus path")
+    ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--migrate-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro import training
+    from repro.configs import get_arch
+    from repro.core import planner
+    from repro.core.platform import TPU_V5E
+    from repro.data import MemmapCorpus, Prefetcher, SyntheticTokens
+    from repro.models.model import LanguageModel
+    from repro.optim import OptimizerConfig
+    from repro.runtime import Trainer, TrainerConfig
+    from repro.sharding import host_mesh, make_plan, single_device_plan
+
+    arch = get_arch(args.arch)
+    if args.reduced:
+        arch = arch.reduced()
+
+    # Planner report (what this run would need at production scale).
+    best = planner.best_strategy(
+        get_arch(args.arch), TPU_V5E, 256, batch=256, seq=4096, zero="world"
+    )
+    if best is not None:
+        print(f"[planner] production-strategy for {args.arch} @256xv5e:")
+        print("          " + best.describe())
+
+    n_dev = len(jax.devices())
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        names = ("pod", "data", "model")[-len(shape):]
+        mesh = host_mesh(shape, names)
+        plan = make_plan(mesh, arch, pipeline_on_pod=args.pipeline)
+    elif n_dev > 1:
+        mesh = host_mesh((1, n_dev), ("data", "model"))
+        plan = make_plan(mesh, arch)
+    else:
+        plan = single_device_plan(arch)
+    print(f"[mesh] devices={plan.num_devices} ep={plan.ep} tp={plan.tp} "
+          f"pp={plan.pp} dp_axes={plan.dp_axes}")
+
+    lm = LanguageModel(arch, plan, impl=args.impl)
+    opt = OptimizerConfig(lr=args.lr, total_steps=args.steps)
+    with plan.mesh:
+        state = training.init_state(lm, jax.random.PRNGKey(args.seed), opt)
+        n_params = sum(
+            int(np.prod(p.shape)) for p in jax.tree.leaves(state["params"])
+        )
+        print(f"[model] {args.arch}{' (reduced)' if args.reduced else ''}: "
+              f"{n_params/1e6:.1f}M params")
+
+        if args.corpus:
+            data = MemmapCorpus(args.corpus, args.batch, args.seq)
+        else:
+            data = SyntheticTokens(arch.vocab_size, args.batch, args.seq)
+        data = Prefetcher(iter(data))
+
+        trainer = Trainer(
+            lm, opt,
+            TrainerConfig(
+                total_steps=args.steps,
+                checkpoint_dir=args.ckpt_dir,
+                checkpoint_every=args.ckpt_every,
+                migrate_every=args.migrate_every,
+            ),
+        )
+        out = trainer.fit(state, data)
+        print(f"[done] step={out['last_step']} "
+              f"loss={float(out['metrics']['loss']):.4f} "
+              f"migrations={len(out['migrations'])} "
+              f"stragglers={len(out['stragglers'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models.model import (  # noqa: F401
+    LanguageModel,
+    init_params,
+    param_tree,
+)

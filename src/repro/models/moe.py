@@ -1,0 +1,303 @@
+"""Mixture-of-Experts FFN with explicit expert-parallel all-to-all.
+
+This implements the paper's §III training flow
+
+    attn -> routing -> dispatch_a2a -> expert GEMM -> combine_a2a
+
+as an explicit ``shard_map`` over the refined mesh, so the collective
+schedule is fully controlled (the subject of the paper) rather than left to
+GSPMD heuristics:
+
+* tokens are sequence+batch sharded over (dp x sp) — Piper's expert-data
+  parallelism: every device routes its own tokens;
+* the dispatch/combine ``all_to_all`` spans exactly the ``"ep"`` axis (the
+  topologically-local fast domain, paper Eq 10);
+* expert weights are ZeRO-3 sharded over ("data","tp") on the d_ff dim and
+  gathered at use (reduce-scattered on the backward pass, automatically via
+  the all_gather transpose);
+* optionally (``plan.hierarchical_a2a``) the dispatch uses HALO's
+  hierarchical two-phase schedule from ``repro.core.halo`` instead of the
+  flat collective.
+
+Capacity-based dispatch (GShard/Tutel-style, static shapes): each device
+builds an (E, C, d) buffer; slot overflow beyond C = ceil(T*k/E * cf) is
+dropped (the paper's zero-padding baseline).  Everything is differentiable;
+expert-weight gradients reduce over the data axis through the gather
+transpose.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, MoECfg
+from repro.sharding import MeshPlan
+
+
+def _all_axes(plan: MeshPlan) -> Tuple[str, ...]:
+    # Under pipelining the pp axis holds different LAYERS: metric reductions
+    # must not mix stages (the pipeline executor masks + reduces itself).
+    return tuple(a for a in plan.mesh.axis_names if a != plan.pp_axis)
+
+
+def _route(x_tokens: jax.Array, w_router: jax.Array, moe: MoECfg):
+    """Top-k routing. x_tokens: (T, d) -> (weights (T,k), ids (T,k), probs)."""
+    logits = jnp.einsum(
+        "td,de->te", x_tokens.astype(jnp.float32), w_router.astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = lax.top_k(probs, moe.top_k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    return top_w, top_i, probs, logits
+
+
+def _aux_losses(probs, logits, top_i, moe: MoECfg, axes):
+    """Switch-style load-balancing aux loss + router z-loss, meaned over the
+    global token population via psum over every mesh axis."""
+    T = probs.shape[0]
+    E = moe.num_experts
+    counts = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    totals = lax.psum(jnp.float32(T), axes) if axes else jnp.float32(T)
+    counts_g = lax.psum(counts, axes) if axes else counts
+    probs_sum = lax.psum(probs.sum(0), axes) if axes else probs.sum(0)
+    frac_tokens = counts_g / (totals * moe.top_k)
+    frac_probs = probs_sum / totals
+    aux = E * jnp.sum(frac_tokens * frac_probs) * moe.aux_loss_coef
+    z_local = jnp.sum(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    z = (lax.psum(z_local, axes) if axes else z_local) / totals * moe.z_loss_coef
+    return aux, z, counts_g
+
+
+def _dispatch_indices(top_i, top_w, E: int, capacity: int):
+    """Slot assignment: position of each (token,k) pair within its expert's
+    capacity buffer.  Returns (flat_e, pos, keep, flat_w)."""
+    flat_e = top_i.reshape(-1)  # (T*k,)
+    flat_w = top_w.reshape(-1)
+    one_hot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*k, E)
+    pos_all = jnp.cumsum(one_hot, axis=0) - 1  # (T*k, E)
+    pos = jnp.take_along_axis(pos_all, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    pos = jnp.where(keep, pos, 0)
+    return flat_e, pos, keep, flat_w
+
+
+def _expert_ffn(tokens, w_up, w_gate, w_down, activation: str):
+    """Grouped expert GEMM. tokens: (E_l, C_r, d)."""
+    if activation == "swiglu":
+        gate = jnp.einsum("ecd,edf->ecf", tokens, w_gate)
+        up = jnp.einsum("ecd,edf->ecf", tokens, w_up)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", tokens, w_up))
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def _expert_ffn_pallas(tokens, w_up, w_gate, w_down, activation: str):
+    from repro.kernels.moe_gemm import ops as moe_ops
+
+    return moe_ops.grouped_ffn(tokens, w_up, w_gate, w_down, activation)
+
+
+def _transport_bf16(a2a_fn, x):
+    """Run a dispatch/combine collective with a bf16 payload in BOTH
+    directions: the forward cast makes the wire payload bf16, and because
+    the transpose of `astype` restores the cast, the backward cotangent
+    crosses the wire in bf16 too (measured 2x a2a wire on granite —
+    EXPERIMENTS.md §Perf)."""
+    orig = x.dtype
+    y = a2a_fn(x.astype(jnp.bfloat16))
+    y = _checkpoint_name(y, "ep_a2a")
+    return y.astype(orig)
+
+
+def moe_ffn(
+    params: Dict[str, jax.Array],
+    x: jax.Array,  # (b, s, d) global view
+    arch: ArchConfig,
+    plan: MeshPlan,
+    *,
+    token_sharded: bool = True,
+    impl: str = "xla",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """MoE FFN sub-layer (global view; explicit shard_map inside).
+
+    token_sharded=True: train/prefill — x sharded (dp, sp, None), dispatch
+    via all_to_all over the "ep" axis.
+    token_sharded=False: decode — x sharded (dp, None, None); tokens are
+    replicated across the ep/tp axes, each ep rank computes its local
+    experts, outputs combine via psum("ep") (weight-parallel decode).
+    """
+    moe = arch.moe
+    assert moe is not None
+    mesh = plan.mesh
+    ep_size = plan.ep
+    E = moe.num_experts
+    E_l = E // ep_size
+    axes = _all_axes(plan)
+
+    import numpy as _np
+
+    dp_div = int(_np.prod([mesh.shape[a] for a in plan.dp_axes])) if plan.dp_axes else 1
+    dp_spec = (
+        tuple(plan.dp_axes)
+        if plan.dp_axes and dp_div > 1 and x.shape[0] % dp_div == 0
+        else None
+    )
+    sp_spec = tuple(plan.sp_axes)
+    x_spec = P(dp_spec, sp_spec, None) if token_sharded else P(dp_spec, None, None)
+
+    wr_spec = P(None, None)
+    wu_spec = P("ep", None, ("data", "tp"))
+    wd_spec = P("ep", ("data", "tp"), None)
+
+    ffn_fn = _expert_ffn_pallas if impl == "pallas" else _expert_ffn
+    # In the decode path tokens are replicated over ep/tp — mean metrics over
+    # the dp axes only to avoid double counting.
+    metric_axes = axes if token_sharded else tuple(plan.dp_axes)
+
+    def body(wr, wu, wg, wd, assignment, xl):
+        b_l, s_l, d = xl.shape
+        T = b_l * s_l
+        xt = xl.reshape(T, d)
+        top_w, top_i, probs, logits = _route(xt, wr, moe)
+        # Metrics/aux use LOGICAL expert ids; dispatch uses PHYSICAL slots
+        # via the migration routing table.
+        aux, z, counts = _aux_losses(probs, logits, top_i, moe, metric_axes)
+        top_phys = assignment[top_i]
+
+        capacity = int(math.ceil(T * moe.top_k / E * moe.capacity_factor))
+        flat_e, pos, keep, flat_w = _dispatch_indices(top_phys, top_w, E, capacity)
+
+        src = jnp.repeat(xt, moe.top_k, axis=0)  # (T*k, d)
+        buf = jnp.zeros((E, capacity, d), xt.dtype)
+        buf = buf.at[flat_e, pos].add(src * keep[:, None].astype(xt.dtype))
+
+        # Gather ZeRO-3-sharded expert weights (transpose = reduce-scatter).
+        gather_axes = ("data", "tp") if "data" in axes else ("tp",)
+        wu_f = lax.all_gather(wu, gather_axes, axis=2, tiled=True)
+        wg_f = (
+            lax.all_gather(wg, gather_axes, axis=2, tiled=True)
+            if wg is not None
+            else None
+        )
+        wd_f = lax.all_gather(wd, gather_axes, axis=1, tiled=True)
+
+        if token_sharded and ep_size > 1:
+            if plan.hierarchical_a2a:
+                from repro.core import halo
+
+                a2a = lambda t: halo.hierarchical_all_to_all(t, plan)
+            else:
+                a2a = lambda t: lax.all_to_all(
+                    t, "ep", split_axis=0, concat_axis=0, tiled=True
+                )
+            recv = _transport_bf16(
+                a2a, buf.reshape(ep_size, E_l * capacity, d)
+            )
+            # recv[(i, e, c)] = source i's slot for my expert e.
+            recv = recv.reshape(ep_size, E_l, capacity, d)
+            expert_in = recv.transpose(1, 0, 2, 3).reshape(
+                E_l, ep_size * capacity, d
+            )
+            expert_out = ffn_fn(
+                expert_in,
+                wu_f,
+                wg_f,
+                wd_f,
+                arch.ffn_activation,
+            )
+            back = (
+                expert_out.reshape(E_l, ep_size, capacity, d)
+                .transpose(1, 0, 2, 3)
+                .reshape(ep_size, E_l * capacity, d)
+            )
+            y_buf = _transport_bf16(a2a, back).reshape(E, capacity, d)
+            vals = y_buf[flat_e, pos]
+        else:
+            # Decode / EP-disabled: compute only the local expert shard and
+            # psum partial outputs over "ep".
+            g = lax.axis_index("ep") if ep_size > 1 else 0
+            local = lax.dynamic_slice_in_dim(buf, g * E_l, E_l, axis=0)
+            expert_out = ffn_fn(local, wu_f, wg_f, wd_f, arch.ffn_activation)
+            y_local = jnp.zeros((E, capacity, d), expert_out.dtype)
+            y_local = lax.dynamic_update_slice_in_dim(
+                y_local, expert_out, g * E_l, axis=0
+            )
+            vals = y_local[flat_e, pos]
+            if ep_size > 1:
+                vals = lax.psum(vals, "ep")
+
+        vals = vals * (flat_w * keep.astype(jnp.float32))[:, None].astype(vals.dtype)
+        y = vals.reshape(T, moe.top_k, d).sum(axis=1)
+        y = y.reshape(b_l, s_l, d)
+        metrics = {
+            "moe_aux_loss": aux,
+            "moe_z_loss": z,
+            "expert_load": counts,
+        }
+        return y, metrics
+
+    wg = params.get("w_gate")
+    in_specs = (
+        wr_spec,
+        wu_spec,
+        wu_spec if wg is not None else P(),
+        wd_spec,
+        P(None),
+        x_spec,
+    )
+    out_specs = (x_spec, {"moe_aux_loss": P(), "moe_z_loss": P(), "expert_load": P()})
+
+    def wrapped(wr, wu, wg_, wd, assignment, xl):
+        return body(wr, wu, wg_ if wg is not None else None, wd, assignment, xl)
+
+    # Manual over every non-pipeline axis.  When nested inside the pipeline
+    # executor's shard_map (manual over pp_axis), the context mesh must be
+    # used — passing the concrete mesh would conflict with the outer manual
+    # axis types.
+    manual = set(a for a in mesh.axis_names if a != plan.pp_axis)
+    try:
+        ctx = jax.sharding.get_abstract_mesh()
+        have_ctx = ctx is not None and len(ctx.axis_names) > 0
+    except Exception:  # pragma: no cover
+        have_ctx = False
+    mesh_kw = {} if have_ctx else {"mesh": mesh}
+
+    y, metrics = jax.shard_map(
+        wrapped,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_vma=False,
+        axis_names=manual,
+        **mesh_kw,
+    )(
+        params["w_router"],
+        params["w_up"],
+        wg if wg is not None else jnp.zeros((), x.dtype),
+        params["w_down"],
+        params["assignment"],
+        x,
+    )
+
+    # Shared (always-active) experts — a dense FFN over all tokens.
+    if moe.num_shared_experts > 0:
+        from repro.models import layers
+
+        y = y + layers.dense_ffn(
+            {
+                "w_up": params["w_shared_up"],
+                "w_gate": params.get("w_shared_gate"),
+                "w_down": params["w_shared_down"],
+            },
+            x,
+            arch.ffn_activation,
+        )
+    return y, metrics

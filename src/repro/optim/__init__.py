@@ -1,0 +1,7 @@
+from repro.optim.optimizer import (  # noqa: F401
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    lr_schedule,
+)

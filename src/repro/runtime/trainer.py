@@ -1,0 +1,249 @@
+"""Fault-tolerant training loop.
+
+Production concerns handled here (DESIGN.md §3):
+
+* **checkpoint/restart** — periodic async checkpoints; on (re)start the loop
+  resumes from the latest one; the data stream is a pure function of step so
+  resume is exact.  SIGTERM/SIGINT trigger a final checkpoint before exit
+  (preemption handling).
+* **straggler mitigation** — per-step wall-time EMA; steps slower than
+  ``straggler_factor``x the EMA are logged with their ordinal so the
+  orchestrator can cordon slow hosts.  (On real multi-host TPU deployments
+  this feeds the controller that re-slices the job; here it is also what the
+  elastic-restart test hooks into.)
+* **expert migration** — the paper §VI controller: router load EMAs are
+  folded in every step from the training metrics; when group imbalance
+  exceeds ``migrate_threshold`` the Alg-2 rebalancer emits a new assignment
+  and the expert tensors are permuted in place (a single intra-EP-group
+  collective).
+* **elastic scaling** — checkpoints are mesh-independent (see
+  ``repro.checkpoint``): restarting on a larger/smaller mesh re-shards
+  automatically; the trainer only needs the new plan.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import migration as mig
+from repro.models.model import LanguageModel
+from repro.optim import OptimizerConfig
+from repro import training
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+    checkpoint_keep: int = 3
+    log_every: int = 10
+    # straggler monitor
+    straggler_factor: float = 2.0
+    # expert migration
+    migrate_every: int = 20
+    migrate_threshold: float = 1.3  # max/mean group load
+    migrate_max_swaps: int = 100
+
+
+class Trainer:
+    def __init__(
+        self,
+        lm: LanguageModel,
+        opt_cfg: OptimizerConfig,
+        cfg: TrainerConfig,
+        log_fn: Callable[[str], None] = print,
+    ):
+        self.lm = lm
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.log = log_fn
+        self.train_step = jax.jit(
+            training.make_train_step(lm, opt_cfg),
+            donate_argnums=(0,),
+        )
+        self.ckpt = (
+            CheckpointManager(
+                cfg.checkpoint_dir, keep=cfg.checkpoint_keep,
+                every=cfg.checkpoint_every,
+            )
+            if cfg.checkpoint_dir
+            else None
+        )
+        arch = lm.arch
+        self.load_stats = (
+            mig.LoadStats(arch.num_moe_layers, arch.moe.num_experts)
+            if arch.moe
+            else None
+        )
+        self.step_times: List[float] = []
+        self.stragglers: List[int] = []
+        self.migrations: List[Dict[str, Any]] = []
+        self._stop = False
+
+    # -- fault handling ------------------------------------------------------
+
+    def _install_signals(self):
+        def handler(signum, frame):
+            self.log(f"[trainer] signal {signum}: checkpoint + stop")
+            self._stop = True
+
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, handler)
+            except ValueError:  # non-main thread (tests)
+                pass
+
+    # -- expert migration ------------------------------------------------------
+
+    def _maybe_migrate(self, state, step: int):
+        if self.load_stats is None or step % self.cfg.migrate_every:
+            return state
+        arch, plan = self.lm.arch, self.lm.plan
+        if plan.ep <= 1:
+            return state
+        params = state["params"]
+        moe_positions = [
+            i for i, (_, f) in enumerate(arch.block_pattern) if f == "moe"
+        ]
+        # Assignments live per pattern-position, stacked over reps.
+        assign_all = np.concatenate(
+            [np.asarray(params["blocks"][i]["ffn"]["assignment"]) for i in moe_positions]
+        )  # (num_moe_layers, E) in (position-major, rep) order
+        imb = self.load_stats.imbalance(assign_all, plan.ep)
+        if imb < self.cfg.migrate_threshold:
+            return state
+        t0 = time.perf_counter()
+        new_blocks = list(params["blocks"])
+        ema = self.load_stats.ema  # (num_moe_layers, E) in stack order
+        total_swaps = 0
+        row = 0
+        for pos in moe_positions:
+            ffn = dict(new_blocks[pos]["ffn"])
+            old_assign = np.asarray(ffn["assignment"])  # (reps, E)
+            reps = old_assign.shape[0]
+            new_assign = np.empty_like(old_assign)
+            perms = np.empty_like(old_assign)
+            for r in range(reps):
+                na, swaps = mig.rebalance_assignment(
+                    ema[row], old_assign[r], plan.ep,
+                    max_iters=self.cfg.migrate_max_swaps,
+                )
+                total_swaps += swaps
+                new_assign[r] = na
+                perms[r] = mig.permutation_for(old_assign[r], na)
+                row += 1
+            new_ffn = mig.apply_migration_to_tree(ffn, perms)
+            import jax.numpy as jnp
+
+            new_ffn["assignment"] = jnp.asarray(new_assign)
+            blk = dict(new_blocks[pos])
+            blk["ffn"] = new_ffn
+            new_blocks[pos] = blk
+        # Moments for expert tensors migrate with the weights.
+        new_m_blocks, new_v_blocks = list(state["m"]["blocks"]), list(state["v"]["blocks"])
+        row = 0
+        for pos in moe_positions:
+            old_assign = np.asarray(params["blocks"][pos]["ffn"]["assignment"])
+            reps = old_assign.shape[0]
+            perms = np.stack(
+                [
+                    mig.permutation_for(
+                        old_assign[r],
+                        np.asarray(new_blocks[pos]["ffn"]["assignment"])[r],
+                    )
+                    for r in range(reps)
+                ]
+            )
+            for tree_blocks in (new_m_blocks, new_v_blocks):
+                blk = dict(tree_blocks[pos])
+                blk["ffn"] = mig.apply_migration_to_tree(dict(blk["ffn"]), perms)
+                tree_blocks[pos] = blk
+            row += reps
+        dt = time.perf_counter() - t0
+        self.migrations.append(
+            {"step": step, "imbalance": imb, "swaps": total_swaps, "seconds": dt}
+        )
+        self.log(
+            f"[migrate] step={step} imbalance={imb:.2f} swaps={total_swaps} "
+            f"({dt*1e3:.0f} ms)"
+        )
+        return {
+            "params": {**params, "blocks": tuple(new_blocks)},
+            "m": {**state["m"], "blocks": tuple(new_m_blocks)},
+            "v": {**state["v"], "blocks": tuple(new_v_blocks)},
+            "step": state["step"],
+        }
+
+    # -- main loop -------------------------------------------------------------
+
+    def fit(self, state, data: Iterator) -> Dict[str, Any]:
+        self._install_signals()
+        start_step = int(jax.device_get(state["step"]))
+        if self.ckpt is not None:
+            try:
+                abstract = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
+                )
+                state, ck_step = self.ckpt.restore_latest(abstract)
+                start_step = ck_step
+                self.log(f"[trainer] resumed from step {ck_step}")
+            except FileNotFoundError:
+                pass
+
+        metrics = {}
+        # Datasets exposing batch_at(step) are pure functions of the step —
+        # required for EXACT resume after restart; plain iterators are
+        # consumed best-effort.
+        indexed = hasattr(data, "batch_at")
+        data_it = None if indexed else iter(data)
+        step = start_step
+        for step in range(start_step, self.cfg.total_steps):
+            if self._stop:
+                break
+            batch = data.batch_at(step) if indexed else next(data_it)
+            t0 = time.perf_counter()
+            state, metrics = self.train_step(state, batch)
+            loss = float(jax.device_get(metrics["loss"]))
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+            # Straggler detection on the step-time EMA.
+            if len(self.step_times) > 5:
+                ema = float(np.mean(self.step_times[-20:-1]))
+                if dt > self.cfg.straggler_factor * ema:
+                    self.stragglers.append(step)
+                    self.log(
+                        f"[straggler] step={step} took {dt*1e3:.0f}ms "
+                        f"(ema {ema*1e3:.0f}ms)"
+                    )
+            if self.load_stats is not None and "expert_load" in metrics:
+                loads = np.asarray(jax.device_get(metrics["expert_load"]))
+                # (reps, n_moe_pos, E) -> stack order (pos-major, rep)
+                loads = np.concatenate(
+                    [loads[:, i, :] for i in range(loads.shape[1])]
+                )
+                self.load_stats.update(loads)
+            state = self._maybe_migrate(state, step + 1)
+            if step % self.cfg.log_every == 0:
+                self.log(
+                    f"[train] step={step} loss={loss:.4f} "
+                    f"({dt*1e3:.0f} ms/step)"
+                )
+            if self.ckpt is not None and self.ckpt.should_save(step + 1):
+                self.ckpt.save(step + 1, state, blocking=False)
+        if self.ckpt is not None:
+            self.ckpt.save(step + 1, state, blocking=True)
+        return {
+            "state": state,
+            "metrics": metrics,
+            "stragglers": self.stragglers,
+            "migrations": self.migrations,
+            "last_step": step,
+        }

@@ -1,0 +1,169 @@
+"""Training / serving step construction with full sharding metadata.
+
+These are the functions the launcher jits with explicit
+``in_shardings``/``out_shardings`` — both for real execution and for the
+multi-pod dry-run (``.lower().compile()`` on ShapeDtypeStructs).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import model as model_lib
+from repro.models.model import LanguageModel, safe_spec
+from repro.optim.optimizer import OptimizerConfig, adamw_init, adamw_update
+from repro.sharding import MeshPlan
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+# ---------------------------------------------------------------------------
+# Train state
+# ---------------------------------------------------------------------------
+
+
+def init_state(lm: LanguageModel, key, opt_cfg: OptimizerConfig):
+    params = model_lib.init_params(
+        lm.arch, key, DTYPES[lm.plan.master_dtype]
+    )
+    opt = adamw_init(params, DTYPES[lm.plan.optimizer_dtype])
+    return {"params": params, **opt}
+
+
+def state_specs(lm: LanguageModel) -> Dict[str, Any]:
+    pspecs = model_lib.param_specs(lm.arch, lm.plan)
+    return {
+        "params": pspecs,
+        "m": pspecs,
+        "v": pspecs,
+        "step": P(),
+    }
+
+
+def abstract_state(lm: LanguageModel) -> Dict[str, Any]:
+    params = model_lib.abstract_params(lm.arch, DTYPES[lm.plan.master_dtype])
+    odt = DTYPES[lm.plan.optimizer_dtype]
+    moments = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, odt), params)
+    return {
+        "params": params,
+        "m": moments,
+        "v": moments,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Batches
+# ---------------------------------------------------------------------------
+
+
+def batch_struct(arch: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run inputs)."""
+    b = shape.global_batch
+    if shape.kind == "train":
+        s = shape.seq_len
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if arch.frontend is not None:
+            # Backbone-only modality stub: precomputed frame/patch embeddings.
+            out["embeds"] = jax.ShapeDtypeStruct(
+                (b, s, arch.d_model), jnp.bfloat16
+            )
+        return out
+    if shape.kind == "prefill":
+        s = shape.seq_len
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if arch.frontend is not None:
+            out["embeds"] = jax.ShapeDtypeStruct((b, s, arch.d_model), jnp.bfloat16)
+        return out
+    # decode: one new token against a cache of seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if arch.frontend is not None:
+        out["embeds"] = jax.ShapeDtypeStruct((b, 1, arch.d_model), jnp.bfloat16)
+    return out
+
+
+def batch_specs(lm: LanguageModel, shape: ShapeSpec) -> Dict[str, Any]:
+    plan = lm.plan
+    struct = batch_struct(lm.arch, shape)
+    seq_logical = "seq" if shape.kind != "decode" else None
+    out = {}
+    for k, v in struct.items():
+        logical = ("batch", seq_logical) + (
+            (None,) if k == "embeds" else ()
+        )
+        out[k] = safe_spec(plan, v.shape, logical)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(lm: LanguageModel, opt_cfg: OptimizerConfig):
+    compute_dtype = DTYPES[lm.plan.compute_dtype]
+
+    def train_step(state, batch):
+        def loss_fn(params):
+            cparams = jax.tree.map(
+                lambda p: p.astype(compute_dtype)
+                if jnp.issubdtype(p.dtype, jnp.floating)
+                else p,
+                params,
+            )
+            return lm.loss(cparams, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True, allow_int=True
+        )(state["params"])
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state["params"], grads, {k: state[k] for k in ("m", "v", "step")}
+        )
+        metrics = {**metrics, **opt_metrics}
+        if metrics.get("expert_load") is None:
+            metrics.pop("expert_load", None)
+        new_state = {"params": new_params, **new_opt}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(lm: LanguageModel):
+    compute_dtype = DTYPES[lm.plan.compute_dtype]
+
+    def prefill_step(params, batch):
+        cparams = jax.tree.map(
+            lambda p: p.astype(compute_dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating)
+            else p,
+            params,
+        )
+        return lm.prefill(cparams, batch)
+
+    return prefill_step
+
+
+def make_decode_step(lm: LanguageModel):
+    compute_dtype = DTYPES[lm.plan.compute_dtype]
+
+    def decode_step(params, cache, batch, index):
+        cparams = jax.tree.map(
+            lambda p: p.astype(compute_dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating)
+            else p,
+            params,
+        )
+        return lm.decode_step(cparams, cache, batch, index)
+
+    return decode_step

@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture instantiates a REDUCED same-family config and
+runs one forward + one train step on CPU, asserting output shapes and
+finiteness.  The FULL configs are exercised by the dry-run only.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import training
+from repro.configs import ASSIGNED, get_arch
+from repro.models.model import LanguageModel, init_params
+from repro.optim import OptimizerConfig
+from repro.sharding import single_device_plan
+
+from conftest import tiny_batch
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_forward_shapes_and_finite(name):
+    arch = get_arch(name).reduced()
+    plan = single_device_plan(arch)
+    with plan.mesh:
+        lm = LanguageModel(arch, plan)
+        params = init_params(arch, jax.random.PRNGKey(0))
+        batch = tiny_batch(arch)
+        logits, aux, _ = jax.jit(lm.forward)(params, batch)
+        b, s = batch["tokens"].shape
+        assert logits.shape == (b, s, arch.padded_vocab())
+        assert bool(jnp.all(jnp.isfinite(logits[..., : arch.vocab_size])))
+        assert np.isfinite(float(aux["moe_aux_loss"]))
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_train_step(name):
+    arch = get_arch(name).reduced()
+    plan = single_device_plan(arch)
+    with plan.mesh:
+        lm = LanguageModel(arch, plan)
+        opt = OptimizerConfig(lr=1e-3)
+        state = training.init_state(lm, jax.random.PRNGKey(0), opt)
+        step = jax.jit(training.make_train_step(lm, opt))
+        state, metrics = step(state, tiny_batch(arch))
+        assert np.isfinite(float(metrics["loss"]))
+        assert np.isfinite(float(metrics["grad_norm"]))
+        assert int(state["step"]) == 1
+
+
+@pytest.mark.parametrize("name", ["granite-moe-3b-a800m", "mamba2-370m",
+                                  "gemma2-9b", "jamba-1.5-large-398b"])
+def test_loss_decreases(name):
+    arch = get_arch(name).reduced()
+    plan = single_device_plan(arch)
+    with plan.mesh:
+        lm = LanguageModel(arch, plan)
+        opt = OptimizerConfig(lr=5e-3)
+        state = training.init_state(lm, jax.random.PRNGKey(0), opt)
+        step = jax.jit(training.make_train_step(lm, opt))
+        batch = tiny_batch(arch)
+        losses = []
+        for _ in range(6):
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("name", ["smollm-360m", "mamba2-370m",
+                                  "jamba-1.5-large-398b", "gemma2-9b"])
+def test_prefill_decode_consistency(name):
+    """Prefill + single-token decode must match the full forward."""
+    import dataclasses
+
+    arch = get_arch(name).reduced()
+    if arch.moe:
+        arch = arch.replace(
+            moe=dataclasses.replace(arch.moe, capacity_factor=8.0)
+        )
+    plan = single_device_plan(arch)
+    with plan.mesh:
+        lm = LanguageModel(arch, plan)
+        params = init_params(arch, jax.random.PRNGKey(0))
+        b, s = 2, 32
+        toks = jax.random.randint(jax.random.PRNGKey(7), (b, s), 0,
+                                  arch.vocab_size)
+        full, _, _ = jax.jit(lm.forward)(params, {"tokens": toks})
+        pre, cache = jax.jit(lm.prefill)(params, {"tokens": toks[:, : s - 1]})
+
+        def pad(c):
+            if "k" in c:
+                return {
+                    k: jnp.pad(v, ((0, 0), (0, 0), (0, 1), (0, 0), (0, 0)))
+                    for k, v in c.items()
+                }
+            return c
+
+        cache = tuple(pad(c) for c in cache)
+        dec, _ = jax.jit(lm.decode_step)(
+            params, cache, {"tokens": toks[:, s - 1 : s]}, jnp.int32(s - 1)
+        )
+        np.testing.assert_allclose(
+            np.asarray(pre), np.asarray(full[:, s - 2]), atol=2e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(dec), np.asarray(full[:, s - 1]), atol=2e-4
+        )
+
+
+def test_param_counts_match_published():
+    expected = {
+        "granite-moe-3b-a800m": 3.3e9,
+        "grok-1-314b": 316e9,
+        "mamba2-370m": 0.37e9,
+        "deepseek-7b": 6.9e9,
+        "gemma2-9b": 9.2e9,
+        "yi-9b": 8.8e9,
+        "jamba-1.5-large-398b": 398e9,
+    }
+    for name, n in expected.items():
+        total = get_arch(name).total_params()
+        assert abs(total - n) / n < 0.06, (name, total, n)
+
+
+def test_m10b_scaling_matches_paper():
+    """Fig 14: M10B at E=128 -> 862B, E=256 -> 1.7T."""
+    assert abs(get_arch("piper-m10b-e128").total_params() - 862e9) < 10e9
+    assert abs(get_arch("piper-m10b-e256").total_params() - 1.72e12) < 2e10

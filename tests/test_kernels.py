@@ -1,0 +1,117 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.moe_gemm import ops as mm_ops
+from repro.kernels.moe_gemm import ref as mm_ref
+from repro.kernels.ssd import ops as ssd_ops
+from repro.kernels.ssd import ref as ssd_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "E,M,K,N",
+    [(2, 16, 32, 16), (4, 128, 64, 512), (3, 100, 96, 56), (8, 256, 128, 128),
+     (1, 64, 512, 64)],
+)
+def test_grouped_matmul(E, M, K, N, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (E, M, K), dtype)
+    w = jax.random.normal(k2, (E, K, N), dtype)
+    out = mm_ops.grouped_matmul(x, w, interpret=True)
+    ref = mm_ref.grouped_matmul(x, w).astype(dtype)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=TOL[dtype], atol=TOL[dtype] * 8,
+    )
+
+
+@pytest.mark.parametrize("activation", ["swiglu", "gelu"])
+def test_grouped_ffn(activation):
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 4)
+    E, C, d, f = 4, 64, 48, 96
+    toks = jax.random.normal(ks[0], (E, C, d))
+    wu = jax.random.normal(ks[1], (E, d, f)) * 0.1
+    wg = jax.random.normal(ks[2], (E, d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (E, f, d)) * 0.1
+    out = mm_ops.grouped_ffn(toks, wu, wg, wd, activation, interpret=True)
+    ref = mm_ref.grouped_ffn(toks, wu, wg, wd, activation)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,d,window,cap",
+    [
+        (2, 4, 2, 128, 32, None, None),
+        (1, 8, 8, 256, 64, 64, None),
+        (2, 4, 1, 96, 16, None, 50.0),
+        (1, 2, 2, 64, 128, 32, 30.0),
+    ],
+)
+def test_flash_attention(b, hq, hkv, s, d, window, cap, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    out = fa_ops.flash_attention(
+        q, k, v, window=window, logit_softcap=cap, interpret=True,
+        bq=64, bk=64,
+    )
+    ref = fa_ref.attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), window=window, softcap=cap,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=TOL[dtype], atol=TOL[dtype] * 4,
+    )
+
+
+@pytest.mark.parametrize(
+    "b,nc,cl,h,p,n", [(1, 2, 32, 4, 16, 8), (2, 2, 64, 8, 32, 16)]
+)
+def test_ssd_intra_chunk(b, nc, cl, h, p, n):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (b, nc, cl, h, p))
+    dA = -jnp.abs(jax.random.normal(ks[1], (b, nc, cl, h))) * 0.1
+    B = jax.random.normal(ks[2], (b, nc, cl, h, n))
+    C = jax.random.normal(ks[3], (b, nc, cl, h, n))
+    y = ssd_ops.ssd_intra_chunk(x, dA, B, C, interpret=True)
+    fold = lambda t: t.reshape((b * nc,) + t.shape[2:])
+    ref = ssd_ref.ssd_intra_chunk(fold(x), fold(dA), fold(B), fold(C))
+    np.testing.assert_allclose(
+        np.asarray(y).reshape(ref.shape), np.asarray(ref), atol=3e-5
+    )
+
+
+def test_full_model_pallas_matches_xla():
+    from repro.configs import get_arch
+    from repro.models.model import LanguageModel, init_params
+    from repro.sharding import single_device_plan
+
+    for name in ["granite-moe-3b-a800m", "mamba2-370m", "gemma2-9b"]:
+        arch = get_arch(name).reduced()
+        plan = single_device_plan(arch)
+        with plan.mesh:
+            params = init_params(arch, jax.random.PRNGKey(0))
+            toks = jax.random.randint(
+                jax.random.PRNGKey(5), (2, 64), 0, arch.vocab_size
+            )
+            lx, _, _ = jax.jit(
+                LanguageModel(arch, plan, impl="xla").forward
+            )(params, {"tokens": toks})
+            lp, _, _ = jax.jit(
+                LanguageModel(arch, plan, impl="pallas").forward
+            )(params, {"tokens": toks})
+            np.testing.assert_allclose(
+                np.asarray(lx), np.asarray(lp), atol=5e-5
+            )

@@ -1,0 +1,134 @@
+"""Expert migration: Algorithm 2 properties + function preservation."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import migration as mig
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    E=st.integers(4, 32),
+    ep=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_hill_climb_reduces_imbalance(E, ep, seed):
+    E = (E // ep) * ep
+    if E < ep:
+        return
+    rng = np.random.default_rng(seed)
+    loads = rng.exponential(1.0, E)
+    assignment = np.arange(E, dtype=np.int32)
+
+    def gap(assign):
+        e_l = E // ep
+        sums = np.zeros(ep)
+        np.add.at(sums, assign // e_l, loads)
+        return sums.max() - sums.min()
+
+    new_assign, swaps = mig.rebalance_assignment(loads, assignment, ep)
+    assert gap(new_assign) <= gap(assignment) + 1e-9
+    # group sizes preserved
+    e_l = E // ep
+    for g in range(ep):
+        assert (new_assign // e_l == g).sum() == e_l
+    # it is a permutation
+    assert sorted(new_assign.tolist()) == list(range(E))
+
+
+def test_hill_climb_terminates_and_counts():
+    loads = np.array([10.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 10.0])
+    groups = [[(0, 10.0), (7, 10.0)], [(1, 1.0), (2, 1.0)],
+              [(3, 1.0), (4, 1.0)], [(5, 1.0), (6, 1.0)]]
+    new_groups, swaps = mig.hill_climb_rebalance(groups, max_iters=100)
+    sums = [sum(l for _, l in g) for g in new_groups]
+    assert max(sums) - min(sums) < 20.0
+    assert 0 < swaps <= 100
+
+
+def test_permutation_roundtrip():
+    rng = np.random.default_rng(0)
+    E = 12
+    old = np.arange(E, dtype=np.int32)
+    new = rng.permutation(E).astype(np.int32)
+    perm = mig.permutation_for(old, new)
+    # W_new[s] = W_old[perm[s]]; logical expert e must end at new[e]
+    W_old = rng.normal(size=(E, 3))
+    W_new = W_old[perm]
+    for e in range(E):
+        np.testing.assert_allclose(W_new[new[e]], W_old[old[e]])
+
+
+def test_migration_preserves_model_function():
+    from repro.configs import get_arch
+    from repro.models.model import LanguageModel, init_params
+    from repro.sharding import single_device_plan
+
+    arch = get_arch("granite-moe-3b-a800m").reduced()
+    arch = arch.replace(
+        moe=dataclasses.replace(arch.moe, capacity_factor=16.0)
+    )
+    plan = single_device_plan(arch)
+    with plan.mesh:
+        lm = LanguageModel(arch, plan)
+        params = init_params(arch, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                  arch.vocab_size)
+        batch = {"tokens": toks}
+        logits0, _, _ = jax.jit(lm.forward)(params, batch)
+
+        rng = np.random.default_rng(0)
+        E = arch.moe.num_experts
+        ffn = params["blocks"][0]["ffn"]
+        old = np.asarray(ffn["assignment"])
+        reps = old.shape[0]
+        new = np.stack([rng.permutation(E) for _ in range(reps)]).astype(np.int32)
+        perms = np.stack(
+            [mig.permutation_for(old[r], new[r]) for r in range(reps)]
+        )
+        new_ffn = mig.apply_migration_to_tree(ffn, perms)
+        new_ffn["assignment"] = jnp.asarray(new)
+        blocks = list(params["blocks"])
+        blk = dict(blocks[0])
+        blk["ffn"] = new_ffn
+        blocks[0] = blk
+        params2 = {**params, "blocks": tuple(blocks)}
+        logits1, _, _ = jax.jit(lm.forward)(params2, batch)
+        np.testing.assert_allclose(
+            np.asarray(logits0), np.asarray(logits1), atol=1e-4
+        )
+
+
+def test_load_stats_and_trigger():
+    stats = mig.LoadStats(num_layers=2, num_experts=8, decay=0.5)
+    skewed = np.zeros((2, 8))
+    skewed[:, 0] = 100.0
+    skewed[:, 1:] = 1.0
+    for _ in range(5):
+        stats.update(skewed)
+    assign = np.tile(np.arange(8, dtype=np.int32), (2, 1))
+    imb = stats.imbalance(assign, ep=4)
+    assert imb > 1.5
+    balanced = np.ones((2, 8))
+    stats2 = mig.LoadStats(2, 8)
+    stats2.update(balanced)
+    assert stats2.imbalance(assign, ep=4) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_migration_cost_matches_paper_table4():
+    """Table IV rows: Mixtral 8x7B -> 2.63 GB, 52.6 ms; DeepSeek-V3 ->
+    21 GB, 420 ms.  (The paper's 'GB' column is GiB — 48*8*4096*14336/8
+    = 2.818e9 B = 2.625 GiB — and its latency divides that GiB number by
+    50, so we compare in the paper's own convention.)"""
+    GIB = 2**30
+    size, _ = mig.migration_cost(E=8, d_model=4096, d_ffn=14336)
+    assert abs(size / GIB - 2.63) < 0.05
+    assert abs(size / GIB / 50 * 1e3 - 52.6) < 1.0
+    size, _ = mig.migration_cost(E=256, d_model=7168, d_ffn=2048)
+    assert abs(size / GIB - 21.0) < 0.1
+    assert abs(size / GIB / 50 * 1e3 - 420.0) < 2.0
