@@ -289,23 +289,25 @@ def fig14_trillion_scaling() -> List[Row]:
     return rows
 
 
-def schedules() -> List[Row]:
-    """GPipe vs 1F1B (Eq 3-5): peak activations + bubble from the
-    discrete-event simulator."""
+def schedules(only: str = None) -> List[Row]:
+    """GPipe vs 1F1B (Eq 3-5): peak activations + bubble, simulated over the
+    same schedule IR (``core.schedules``) the SPMD executor interprets."""
     from repro.core import schedule_sim as ss
+    from repro.core import schedules as sched_lib
+    from repro.configs.base import SCHEDULES
 
     rows: List[Row] = []
     for PP, M in ((4, 8), (8, 32)):
-        us, g = _timed(lambda: ss.gpipe(PP, M))
-        rows.append(
-            (f"sched.gpipe_pp{PP}_m{M}", us,
-             f"peak={max(g.peak_in_flight)} bubble={g.bubble_fraction:.3f}")
-        )
-        us, f = _timed(lambda: ss.one_f_one_b(PP, M))
-        rows.append(
-            (f"sched.1f1b_pp{PP}_m{M}", us,
-             f"peak={max(f.peak_in_flight)} bubble={f.bubble_fraction:.3f}")
-        )
+        for name in SCHEDULES:
+            if only and name != only:
+                continue
+            ir = sched_lib.build(name, PP, M)
+            us, r = _timed(lambda: ss.simulate(sched_lib.build(name, PP, M)))
+            rows.append(
+                (f"sched.{name}_pp{PP}_m{M}", us,
+                 f"peak={max(r.peak_in_flight)} bubble={r.bubble_fraction:.3f}"
+                 f" ticks={ir.num_ticks} slots={ir.num_slots}")
+            )
     return rows
 
 

@@ -12,9 +12,19 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    from repro.configs.base import SCHEDULES
+
+    ap.add_argument("--schedule", default=None, choices=SCHEDULES,
+                    help="restrict the pipeline-schedule benches; "
+                         "default: both")
     args = ap.parse_args()
 
+    import functools
+
     from benchmarks import paper_figures as pf
+
+    sched_bench = functools.partial(pf.schedules, only=args.schedule)
+    functools.update_wrapper(sched_bench, pf.schedules)
 
     benches = [
         pf.table1_model_configs,
@@ -28,7 +38,7 @@ def main() -> None:
         pf.fig12_sota_throughput,
         pf.fig13_xmoe_comparison,
         pf.fig14_trillion_scaling,
-        pf.schedules,
+        sched_bench,
         pf.kernels,
     ]
     print("name,us_per_call,derived")

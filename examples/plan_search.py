@@ -42,9 +42,15 @@ def main():
     )
     print(f"{len(strategies)} feasible strategies (Eq 7-11); top "
           f"{args.top} by estimated MFU (Eq 12):\n")
-    for s in planner.rank_strategies(strategies)[: args.top]:
+    ranked = planner.rank_strategies(strategies)
+    for s in ranked[: args.top]:
         print("  " + s.describe())
-    if not strategies:
+    if ranked:
+        best = ranked[0]
+        print(f"\nchosen: PP={best.PP} EP={best.EP} DP={best.DP} "
+              f"schedule={best.schedule} "
+              f"(executor binds this via MeshPlan.schedule)")
+    else:
         print("  NONE — increase chips, enable ZeRO (--zero world), or "
               "reduce batch.")
 

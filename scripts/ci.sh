@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md).
+#
+# XLA_FLAGS forces 8 host CPU devices so the multidevice suites
+# (tests/test_multidevice.py, tests/test_pipeline_schedules.py) exercise
+# real meshes: EP all-to-all, HALO, and the schedule-driven pipeline
+# executor over a 2- and 4-stage "pod" axis.  The multidevice tests
+# re-exec themselves in a subprocess with the same flag, so this also works
+# when the parent pytest was started without it — exporting it here just
+# keeps single- and multi-process behavior identical.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python -m pytest -x -q "$@"

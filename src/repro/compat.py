@@ -1,0 +1,89 @@
+"""Version compatibility shims for the installed JAX.
+
+The codebase targets the current ``jax.shard_map`` API (keyword ``mesh``,
+``check_vma``, partial-manual via ``axis_names``).  Older JAX releases
+(<= 0.4.x, like the 0.4.37 baked into this container) only ship
+``jax.experimental.shard_map.shard_map`` with the (``check_rep``, ``auto``)
+spelling.  Everything in ``repro`` goes through :func:`shard_map` below so a
+single translation layer absorbs the difference.
+
+Also here: :func:`compiled_cost_analysis`, papering over
+``Compiled.cost_analysis()`` returning a per-device *list* of dicts on old
+JAX versus a plain dict on new ones.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Set
+
+import jax
+
+
+def shard_map(
+    f,
+    *,
+    mesh=None,
+    in_specs,
+    out_specs,
+    check_vma: bool = True,
+    axis_names: Optional[Set[str]] = None,
+):
+    """``jax.shard_map`` with graceful fallback to the experimental API.
+
+    ``axis_names`` names the *manual* axes (new-API semantics); on old JAX it
+    is translated to the complementary ``auto`` set.  ``check_vma`` maps onto
+    ``check_rep``.  ``mesh=None`` (new-API "use the context mesh") is only
+    legal where a concrete mesh can be recovered from the caller — old JAX
+    has no abstract-mesh context, so we require ``mesh`` there.
+    """
+    if hasattr(jax, "shard_map"):  # JAX >= 0.6
+        kw = {}
+        if mesh is not None:
+            kw["mesh"] = mesh
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(
+            f, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, **kw,
+        )
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    assert mesh is not None, (
+        "compat.shard_map: this JAX has no context-mesh support; "
+        "pass a concrete mesh"
+    )
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma, auto=auto,
+    )
+
+
+def partial_auto_shard_map() -> bool:
+    """True when shard_map supports *partial* manualness (manual over one
+    mesh axis, GSPMD-auto over the rest).
+
+    The new ``jax.shard_map`` lowers this properly; the 0.4.x experimental
+    one emits manual-subgroup shardings that this container's XLA build
+    aborts on (``spmd_partitioner.cc: IsManualSubgroup check failed``) even
+    for a standalone partial-auto region.  The pipeline executor consults
+    this to pick its composition: manual-over-pp with an auto interior
+    (production), or fully-manual with a locally-replicated interior
+    (compat).
+    """
+    return hasattr(jax, "shard_map")
+
+
+def compiled_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict on every JAX version.
+
+    Old JAX returns ``[{...} per device]`` (possibly empty); new JAX returns
+    the dict directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca) if ca else {}

@@ -99,9 +99,11 @@ def a2a_bandwidth_curve(msg_sizes: Tuple[int, ...] = (2**14, 2**17, 2**20)) -> L
     def f(x):
         return jax.lax.all_to_all(x, "x", 0, 0, tiled=True)
 
+    from repro import compat
+
     g = jax.jit(
-        jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x"),
-                      check_vma=False)
+        compat.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+                         check_vma=False)
     )
     for m in msg_sizes:
         rows_per = max(m // 4 // n, 1)

@@ -1,11 +1,10 @@
-"""Pipelined execution: Piper's PP-over-the-slow-axis composition (paper §III).
+"""Schedule-driven pipelined execution (paper §III, Eq 3–5).
 
 The layer stack is partitioned into ``PP`` stages along the pipeline mesh
 axis (the inter-pod "pod" axis in the production meshes — the slowest links,
 exactly where the paper confines P2P traffic instead of collectives).
 Microbatches flow between stages with ``lax.ppermute``; a ``lax.scan`` over
-clock ticks realizes the schedule; ``jax.grad`` differentiates through it,
-yielding the reverse pipeline for the backward pass.
+clock ticks realizes the schedule.
 
 Composition: the outer ``shard_map`` is *manual* only over the pipeline axis
 (``auto`` over data/ep/tp), so each stage's interior still runs the full
@@ -14,27 +13,127 @@ MoE dispatch with its "ep"-local all-to-all.  This is the paper's central
 claim made concrete: collectives (a2a, all-gather) stay inside the fast
 domain; only point-to-point microbatch hand-offs cross the slow axis.
 
-Schedule notes (DESIGN.md §3.3): the SPMD executor realizes the GPipe order
-(all forwards, then all backwards — the natural order under reverse-mode AD);
-the 1F1B schedule's *memory* profile (paper Eq 4/5) is modeled analytically
-in ``core.resource_model`` and validated against a discrete-event simulator
-in ``core.schedule_sim``.  Warmup/cooldown ticks compute garbage that is
-masked out of outputs and losses — the bubble materializes as wasted compute,
+Two executors interpret the schedule IR of ``core.schedules``:
+
+* :func:`pipelined_stack_forward` — the differentiable *forward* pipeline:
+  a scan over the IR's F-projection ticks; ``jax.grad`` through it yields
+  the reverse pipeline in GPipe order (all forwards, then all backwards —
+  the natural order under reverse-mode AD).  Used for loss evaluation and
+  as the ``schedule="gpipe"`` AD oracle in tests.
+
+* :func:`pipelined_step` — the schedule-*executing* train step: it
+  interprets the full per-tick op table (``F``/``B``/idle) of any built
+  schedule, so 1F1B actually runs with its Eq-4 memory profile instead of
+  relying on AD ordering.  Each stage's forward runs under ``jax.vjp``;
+  residuals are *stage inputs* parked in a scan-carried buffer with
+  ``Schedule.num_slots`` slots (``PP`` for 1F1B, ``M`` for GPipe — the
+  paper's Eq 4 vs Eq 3 gap realized in allocation), and the backward op
+  recomputes the stage from its saved input (stage-granular activation
+  checkpointing) before applying the cotangent handed back by the next
+  stage over a reverse ``ppermute``.  The per-microbatch loss head runs
+  inside the last stage, which is what lets B(mb) start before the last
+  F — the defining property of 1F1B.  The executor emits a per-tick
+  occupancy trace so tests can check the *executed* peak in-flight count
+  against ``schedule_sim`` on the same IR.
+
+SPMD cost note: every stage executes the same program each tick and masks
+the op it was not assigned, so a tick costs one fwd + one bwd regardless of
+schedule — plus one loss-head forward+vjp (full-vocab logits), which only
+the last stage's B ticks consume; bubbles materialize as masked compute,
 identical in cost to idle bubbles and visible to the roofline analysis.
+Fusing the unassigned op (and restricting the head to the last stage) via
+``lax.cond`` is a ROADMAP follow-up, pending stable pp-manual branch
+predicates under GSPMD at scale.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig
+from repro.core import schedules as sched_lib
+from repro.core.schedules import OP_B, OP_F
 from repro.models import transformer
 from repro.sharding import MeshPlan
+
+
+def _composition(plan: MeshPlan):
+    """(manual_axes, local_interior) for the outer pipeline shard_map.
+
+    Production composition: manual over the pipeline axis only, GSPMD-auto
+    interior (full expert-data-parallel machinery per stage).  When the
+    installed JAX cannot express partial manualness (see
+    ``compat.partial_auto_shard_map``), fall back to a fully-manual region
+    where every device inside a stage redundantly computes the whole
+    microbatch with collective-free block math (``local`` interior) — the
+    schedule execution, ppermute hand-offs and memory profile stay real;
+    only intra-stage parallelism is sacrificed, on a JAX that cannot run it
+    anyway."""
+    if compat.partial_auto_shard_map():
+        return {plan.pp_axis}, False
+    return set(plan.mesh.axis_names), True
+
+
+def _stage_block_params(block_params, arch: ArchConfig, plan: MeshPlan):
+    """Stage-major parameter layout: (reps, ...) -> (PP, rps, ...), explicitly
+    resharded so dim0 lives on the pipeline axis and the remaining dims keep
+    their ZeRO-3 sharding (leaving this to GSPMD triggers pathological
+    reshards and an XLA SPMD crash at 512-device scale)."""
+    from repro.models import model as model_lib  # deferred: avoids cycle
+
+    PP = plan.pp
+    period = len(arch.block_pattern)
+    reps = arch.num_layers // period
+    assert reps % PP == 0, (
+        f"{arch.name}: {reps} pattern-reps not divisible by PP={PP}"
+    )
+    rps = reps // PP
+    block_specs = model_lib.param_specs(arch, plan)["blocks"]
+
+    def stage_leaf(p, sp):
+        r = p.reshape((PP, rps) + p.shape[1:])
+        return lax.with_sharding_constraint(
+            r,
+            NamedSharding(plan.mesh, P(*((plan.pp_axis, None) + tuple(sp)[1:]))),
+        )
+
+    return jax.tree.map(stage_leaf, block_params, block_specs), rps
+
+
+def _act_dtype(block_params, fallback):
+    for p in jax.tree.leaves(block_params):
+        if jnp.issubdtype(p.dtype, jnp.floating):
+            return p.dtype
+    return fallback
+
+
+def _send_fwd(h, plan: MeshPlan):
+    perm = [(i, i + 1) for i in range(plan.pp - 1)]
+    if plan.compress_p2p:
+        from repro.core.compression import compressed_ppermute
+
+        return compressed_ppermute(h, plan.pp_axis, perm)
+    return lax.ppermute(h, plan.pp_axis, perm)
+
+
+def _send_bwd(g, plan: MeshPlan):
+    perm = [(i + 1, i) for i in range(plan.pp - 1)]
+    if plan.compress_p2p:
+        from repro.core.compression import compressed_ppermute
+
+        return compressed_ppermute(g, plan.pp_axis, perm)
+    return lax.ppermute(g, plan.pp_axis, perm)
+
+
+# ---------------------------------------------------------------------------
+# Forward executor (differentiable; IR F-projection)
+# ---------------------------------------------------------------------------
 
 
 def pipelined_stack_forward(
@@ -58,6 +157,10 @@ def pipelined_stack_forward(
     letting it cross the shard_map boundary trips an XLA SPMD crash at
     512-device scale.)
 
+    Tick validity masks come from the schedule IR's forward projection (the
+    warmup staircase common to every flush schedule); differentiating this
+    scan with ``jax.grad`` realizes the GPipe backward order.
+
     Returns (x, {"moe_aux_loss","moe_z_loss"}, expert_load or None).
     """
     pp_axis = plan.pp_axis
@@ -65,9 +168,6 @@ def pipelined_stack_forward(
     PP = plan.pp
     period = len(arch.block_pattern)
     reps = arch.num_layers // period
-    assert reps % PP == 0, (
-        f"{arch.name}: {reps} pattern-reps not divisible by PP={PP}"
-    )
     rps = reps // PP  # reps per stage
 
     M = num_microbatches or plan.microbatches or 2 * PP
@@ -76,35 +176,22 @@ def pipelined_stack_forward(
     assert b % M == 0, (b, M)
     b_mu = b // M
 
-    # Stage-major parameter layout: (reps, ...) -> (PP, rps, ...), explicitly
-    # resharded so dim0 lives on the pipeline axis and the remaining dims
-    # keep their ZeRO-3 sharding (leaving this to GSPMD triggers pathological
-    # reshards and an XLA SPMD crash at 512-device scale).
-    from repro.models import model as model_lib  # deferred: avoids cycle
-
-    block_specs = model_lib.param_specs(arch, plan)["blocks"]
-
-    from jax.sharding import NamedSharding
-
-    def stage_leaf(p, sp):
-        r = p.reshape((PP, rps) + p.shape[1:])
-        return lax.with_sharding_constraint(
-            r, NamedSharding(plan.mesh, P(*((pp_axis, None) + tuple(sp)[1:])))
-        )
-
-    staged = jax.tree.map(stage_leaf, block_params, block_specs)
+    staged, _ = _stage_block_params(block_params, arch, plan)
     xm = x.reshape((M, b_mu, s) + ((d,) if embed_fn is None else ()))
     pos_mu = positions[:b_mu]
 
+    # IR F-projection: F(stage, mb) is valid at tick stage + mb.
+    fvalid, _fmb, T = sched_lib.forward_tick_tables(PP, M)
+
     has_moe = arch.num_moe_layers > 0
     mesh = plan.mesh
-    auto = frozenset(a for a in mesh.axis_names if a != pp_axis)
+    manual_axes, local = _composition(plan)
 
     def stage_program(stage_params, emb_params, xm_local):
         # in_spec P(pp_axis) leaves a leading length-1 stage dim: drop it.
         stage_params = jax.tree.map(lambda p: p[0], stage_params)
         stage = lax.axis_index(pp_axis)
-        T = M + PP - 1
+        valid_t = jnp.asarray(fvalid)  # (PP, T) bool
 
         def stage_fn(h):
             # unroll=True: the nested while(layer-scan)-inside-while(ticks)
@@ -119,15 +206,19 @@ def pipelined_stack_forward(
                 impl=impl,
                 token_sharded=True,
                 unroll=True,
+                local=local,
             )
 
         # Steer GSPMD to the canonical activation layout inside the stage —
         # without this the partitioner invents mixed shardings for the
         # carried microbatch and hits an XLA involuntary-remat bug at
-        # 512-device scale.
+        # 512-device scale.  (No-op in the fully-manual compat composition:
+        # there is no auto interior to steer.)
         act_spec = P(tuple(plan.dp_axes), tuple(plan.sp_axes), None)
 
         def constrain(h):
+            if local:
+                return h
             return lax.with_sharding_constraint(h, act_spec)
 
         def tick(carry, xs):
@@ -138,28 +229,20 @@ def pipelined_stack_forward(
             inp = constrain(jnp.where(stage == 0, x0, h_prev))
             h_out, aux_d, loads_d = stage_fn(inp)
             h_out = constrain(h_out)
-            valid = ((t >= stage) & (t < stage + M)).astype(jnp.float32)
-            aux = aux + aux_d["moe_aux_loss"] * valid
-            z = z + aux_d["moe_z_loss"] * valid
+            valid = valid_t[stage, t].astype(jnp.float32)
+            # (1,)-shaped accumulators: old-JAX shard_map AD mis-specs
+            # SCALAR residuals crossing the region boundary (it names dim 0
+            # of every residual), so keep these rank-1.
+            aux = aux + aux_d["moe_aux_loss"][None] * valid
+            z = z + aux_d["moe_z_loss"][None] * valid
             if loads is not None and loads_d is not None:
                 loads = loads + loads_d * valid
-            perm = [(i, i + 1) for i in range(PP - 1)]
-            if plan.compress_p2p:
-                from repro.core.compression import compressed_ppermute
-
-                sent = compressed_ppermute(h_out, pp_axis, perm)
-            else:
-                sent = lax.ppermute(h_out, pp_axis, perm)
+            sent = _send_fwd(h_out, plan)
             return (sent, aux, z, loads), h_out
 
-        if embed_fn is not None:
-            act_dtype = next(
-                p.dtype
-                for p in jax.tree.leaves(block_params)
-                if jnp.issubdtype(p.dtype, jnp.floating)
-            )
-        else:
-            act_dtype = x.dtype
+        act_dtype = (
+            _act_dtype(block_params, x.dtype) if embed_fn is not None else x.dtype
+        )
         zero_h = jnp.zeros((b_mu, s, d), act_dtype)
         zero_loads = (
             jnp.zeros(
@@ -170,7 +253,8 @@ def pipelined_stack_forward(
             if has_moe
             else None
         )
-        carry0 = (zero_h, jnp.float32(0.0), jnp.float32(0.0), zero_loads)
+        carry0 = (zero_h, jnp.zeros((1,), jnp.float32),
+                  jnp.zeros((1,), jnp.float32), zero_loads)
         # Feed microbatches as scan xs (padded with PP-1 dummy ticks): the
         # scan transpose then stacks cotangents instead of scatter-adding
         # into a captured buffer — both faster and a workaround for an XLA
@@ -202,20 +286,18 @@ def pipelined_stack_forward(
 
     def wrapped(stage_params, emb_params, xm_in):
         out, aux, z, loads = stage_program(stage_params, emb_params, xm_in)
-        aux = aux[None]
-        z = z[None]
         out = out[None]
         if loads is None:
             return out, aux, z, jnp.zeros((), jnp.float32)
         return out, aux, z, loads[None]
 
-    out, aux, z, loads = jax.shard_map(
+    out, aux, z, loads = compat.shard_map(
         wrapped,
         mesh=mesh,
         in_specs=in_specs,
         out_specs=out_specs,
         check_vma=False,
-        axis_names={pp_axis},
+        axis_names=manual_axes,
     )(staged, embed_params if embed_params is not None else jnp.zeros(()), xm)
 
     # out: (PP, M, b_mu, s, d) — only the last stage's block is the real
@@ -233,6 +315,316 @@ def pipelined_stack_forward(
     else:
         loads = None
     return y, metrics, loads
+
+
+# ---------------------------------------------------------------------------
+# Schedule-executing train step (forward + hand-rolled pipelined backward)
+# ---------------------------------------------------------------------------
+
+
+def _partition_floats(tree):
+    """Split a pytree into (float leaves, merge_fn); vjp differentiates the
+    float leaves only (int tables like the expert-migration assignment ride
+    along untouched)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    is_f = [jnp.issubdtype(l.dtype, jnp.floating) for l in leaves]
+    floats = [l for l, f in zip(leaves, is_f) if f]
+
+    def merge(new_floats):
+        it = iter(new_floats)
+        return jax.tree.unflatten(
+            treedef, [next(it) if f else l for l, f in zip(leaves, is_f)]
+        )
+
+    def rebuild_grads(float_grads):
+        """Grad tree matching ``tree``: zeros for non-float leaves."""
+        it = iter(float_grads)
+        return jax.tree.unflatten(
+            treedef,
+            [next(it) if f else jnp.zeros_like(l) for l, f in zip(leaves, is_f)],
+        )
+
+    return floats, merge, rebuild_grads
+
+
+def pipelined_step(
+    block_params,
+    x: jax.Array,  # (b, s) int32 tokens OR (b, s, d) embedded inputs
+    labels: jax.Array,  # (b, s) int32
+    arch: ArchConfig,
+    plan: MeshPlan,
+    *,
+    positions: jax.Array,
+    head_fn: Callable,  # (head_params, embed_params, y (b_mu,s,d), labels) -> ce sum
+    head_params,
+    schedule: Optional[str] = None,
+    impl: str = "xla",
+    num_microbatches: Optional[int] = None,
+    embed_fn=None,
+    embed_params=None,
+) -> Tuple[jax.Array, Any, Dict[str, jax.Array], jax.Array]:
+    """Execute one training step's forward AND backward under a schedule IR.
+
+    Interprets ``schedules.build(schedule, PP, M)`` tick by tick (see module
+    docstring).  Gradients are accumulated in fp32 on the stage that owns
+    each parameter and returned in the caller's layout:
+
+    Returns ``(loss, grads, metrics, occupancy)`` where ``grads`` is
+    ``{"blocks": <same structure as block_params>, "embed": ...,
+    "head": <same structure as head_params>}`` and ``occupancy`` is the
+    executed (PP, num_ticks) in-flight residual count — comparable 1:1 with
+    ``Schedule.occupancy_trace()``.
+    """
+    pp_axis = plan.pp_axis
+    assert pp_axis is not None
+    PP = plan.pp
+    sched_name = schedule or plan.schedule
+    period = len(arch.block_pattern)
+    reps = arch.num_layers // period
+
+    M = num_microbatches or plan.microbatches or 2 * PP
+    b, s = x.shape[:2]
+    d = arch.d_model
+    assert b % M == 0, (b, M)
+    b_mu = b // M
+
+    sched = sched_lib.build(sched_name, PP, M)
+    tt = sched_lib.tick_tables(sched)
+    T = sched.num_ticks
+    K = sched.num_slots
+
+    staged, rps = _stage_block_params(block_params, arch, plan)
+    xm = x.reshape((M, b_mu, s) + ((d,) if embed_fn is None else ()))
+    lm_ = labels.reshape(M, b_mu, s)
+    pos_mu = positions[:b_mu]
+
+    has_moe = arch.num_moe_layers > 0
+    mesh = plan.mesh
+    manual_axes, local = _composition(plan)
+    # Buffer/wire dtype: parameter dtype when embedding in-pipeline, the
+    # input embeds' own dtype otherwise (input-driven promotion keeps stage
+    # outputs in x.dtype there) — mirrors pipelined_stack_forward.
+    act_dtype = (
+        _act_dtype(block_params, x.dtype) if embed_fn is not None else x.dtype
+    )
+    emb_in = embed_params if embed_params is not None else jnp.zeros(())
+
+    def stage_program(stage_params, emb_p, head_p, xm_local, labels_local):
+        stage_params = jax.tree.map(lambda p: p[0], stage_params)
+        stage = lax.axis_index(pp_axis)
+        is_last = stage == PP - 1
+
+        kind_t = jnp.asarray(tt.kind)
+        mb_t = jnp.asarray(tt.mb)
+        slot_t = jnp.asarray(tt.slot)
+        afwd_t = jnp.asarray(tt.arrive_fwd)
+        abwd_t = jnp.asarray(tt.arrive_bwd)
+
+        act_spec = P(tuple(plan.dp_axes), tuple(plan.sp_axes), None)
+
+        def constrain(h):
+            if local:
+                return h
+            return lax.with_sharding_constraint(h, act_spec)
+
+        sp_floats, sp_merge, sp_rebuild = _partition_floats(stage_params)
+
+        def full_stage(sp_f, emb_, x0, h_in):
+            """(stage float params, embed, raw microbatch, arrived act) ->
+            ((h_out, aux, z), loads).  Stage 0 reads the raw microbatch
+            (embedding inside the pipeline); others the arrived activation."""
+            sp = sp_merge(sp_f)
+            if embed_fn is not None:
+                x_emb = embed_fn(emb_, x0)
+            else:
+                x_emb = x0
+            inp = constrain(jnp.where(stage == 0, x_emb, h_in))
+            h_out, aux_d, loads_d = transformer.stack_forward(
+                sp, inp, arch, plan,
+                positions=pos_mu, impl=impl, token_sharded=True, unroll=True,
+                local=local,
+            )
+            return (
+                constrain(h_out),
+                aux_d["moe_aux_loss"],
+                aux_d["moe_z_loss"],
+            ), loads_d
+
+        zero_h = jnp.zeros((b_mu, s, d), act_dtype)
+        zero_loads = (
+            jnp.zeros(
+                (rps, sum(1 for _, f in arch.block_pattern if f == "moe"),
+                 arch.moe.num_experts),
+                jnp.float32,
+            )
+            if has_moe
+            else None
+        )
+        f32z = jnp.float32(0.0)
+        gacc0 = [jnp.zeros(l.shape, jnp.float32) for l in sp_floats]
+        gemb0 = jax.tree.map(
+            lambda l: jnp.zeros(l.shape, jnp.float32), emb_p
+        )
+        ghead0 = jax.tree.map(
+            lambda l: jnp.zeros(l.shape, jnp.float32), head_p
+        )
+
+        def tick(carry, t):
+            (in_buf, cot_buf, recv_h, recv_g, gacc, gemb, ghead,
+             ce, aux, z, loads, live) = carry
+
+            # -- 1. park wire arrivals in their residual slots -------------
+            a_f = afwd_t[stage, t]
+            cur = lax.dynamic_index_in_dim(in_buf, a_f, 0, keepdims=False)
+            in_buf = lax.dynamic_update_index_in_dim(
+                in_buf, jnp.where(a_f >= 0, recv_h, cur), a_f, 0
+            )
+            a_b = abwd_t[stage, t]
+            curc = lax.dynamic_index_in_dim(cot_buf, a_b, 0, keepdims=False)
+            cot_buf = lax.dynamic_update_index_in_dim(
+                cot_buf, jnp.where(a_b >= 0, recv_g, curc), a_b, 0
+            )
+
+            # -- 2. the tick's op (one of F / B / idle, from the IR) -------
+            kind = kind_t[stage, t]
+            mb = mb_t[stage, t]
+            slot = slot_t[stage, t]
+            is_f = kind == OP_F
+            is_b = kind == OP_B
+            x0 = lax.dynamic_index_in_dim(xm_local, mb, 0, keepdims=False)
+            lbl = lax.dynamic_index_in_dim(labels_local, mb, 0, keepdims=False)
+            h_in = lax.dynamic_index_in_dim(in_buf, slot, 0, keepdims=False)
+
+            # One vjp serves both op kinds: its primal output is the F
+            # result; its pullback is the B recompute-and-backprop.
+            (y, aux_d, z_d), vjp_fn, loads_d = jax.vjp(
+                full_stage, sp_floats, emb_p, x0, h_in, has_aux=True
+            )
+
+            # -- 3. forward bookkeeping ------------------------------------
+            fmask = is_f.astype(jnp.float32)
+            aux = aux + aux_d * fmask
+            z = z + z_d * fmask
+            if loads is not None and loads_d is not None:
+                loads = loads + loads_d * fmask
+
+            # -- 4. loss head + cotangent seed (last stage only) -----------
+            ce_mb, head_vjp = jax.vjp(
+                lambda hp, e, yy: head_fn(hp, e, yy, lbl), head_p, emb_p, y
+            )
+            g_hp, g_emb_h, g_y = head_vjp(jnp.float32(1.0 / (b * s)))
+            y_cot = jnp.where(
+                is_last,
+                g_y.astype(act_dtype),
+                lax.dynamic_index_in_dim(cot_buf, slot, 0, keepdims=False),
+            )
+
+            # -- 5. backward op --------------------------------------------
+            inv_m = jnp.float32(1.0 / M)
+            g_sp, g_emb_s, _g_x0, g_h = vjp_fn((y_cot, inv_m, inv_m))
+            bmask = is_b.astype(jnp.float32)
+            lmask = bmask * is_last.astype(jnp.float32)
+            gacc = [
+                a + g.astype(jnp.float32) * bmask for a, g in zip(gacc, g_sp)
+            ]
+            gemb = jax.tree.map(
+                lambda a, g_s, g_hd: a
+                + g_s.astype(jnp.float32) * bmask
+                + g_hd.astype(jnp.float32) * lmask,
+                gemb, g_emb_s, g_emb_h,
+            )
+            ghead = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) * lmask, ghead, g_hp
+            )
+            ce = ce + ce_mb * lmask
+
+            # -- 6. occupancy + wire sends ---------------------------------
+            live = live + is_f.astype(jnp.int32) - is_b.astype(jnp.int32)
+            sent_h = _send_fwd(y, plan)
+            sent_g = _send_bwd(g_h.astype(act_dtype), plan)
+            carry = (in_buf, cot_buf, sent_h, sent_g, gacc, gemb, ghead,
+                     ce, aux, z, loads, live)
+            return carry, live
+
+        carry0 = (
+            jnp.zeros((K, b_mu, s, d), act_dtype),
+            jnp.zeros((K, b_mu, s, d), act_dtype),
+            zero_h, zero_h,
+            gacc0, gemb0, ghead0,
+            f32z, f32z, f32z, zero_loads, jnp.int32(0),
+        )
+        carry, occ = lax.scan(tick, carry0, jnp.arange(T))
+        (_, _, _, _, gacc, gemb, ghead, ce, aux, z, loads, _) = carry
+        g_blocks = sp_rebuild(gacc)
+        return g_blocks, gemb, ghead, ce, aux, z, loads, occ
+
+    in_specs = (
+        jax.tree.map(lambda v: P(pp_axis), staged),
+        jax.tree.map(lambda v: P(), emb_in),
+        jax.tree.map(lambda v: P(), head_params),
+        P(None),
+        P(None),
+    )
+    out_specs = (
+        jax.tree.map(lambda v: P(pp_axis), staged),  # stage-stacked grads
+        jax.tree.map(lambda v: P(pp_axis), emb_in),
+        jax.tree.map(lambda v: P(pp_axis), head_params),
+        P(pp_axis),  # ce
+        P(pp_axis),  # aux
+        P(pp_axis),  # z
+        P(pp_axis) if has_moe else P(),
+        P(pp_axis),  # occupancy (PP, T)
+    )
+
+    def wrapped(stage_params, emb_p, head_p, xm_in, lbl_in):
+        g_blocks, gemb, ghead, ce, aux, z, loads, occ = stage_program(
+            stage_params, emb_p, head_p, xm_in, lbl_in
+        )
+        lead = lambda v: v[None]
+        g_blocks = jax.tree.map(lead, g_blocks)
+        gemb = jax.tree.map(lead, gemb)
+        ghead = jax.tree.map(lead, ghead)
+        if loads is None:
+            loads = jnp.zeros((), jnp.float32)
+        else:
+            loads = loads[None]
+        return (g_blocks, gemb, ghead, ce[None], aux[None],
+                z[None], loads, occ[None])
+
+    (g_blocks, gemb, ghead, ce, aux, z, loads, occ) = compat.shard_map(
+        wrapped,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_vma=False,
+        axis_names=manual_axes,
+    )(staged, emb_in, head_params, xm, lm_)
+
+    # Stage-stacked (PP, rps, ...) grads -> the caller's (reps, ...) layout.
+    g_blocks = jax.tree.map(
+        lambda g: g.reshape((reps,) + g.shape[2:]), g_blocks
+    )
+    # Embedding grads: stage 0 (lookup scatter) + last stage (tied head).
+    gemb = jax.tree.map(lambda g: jnp.sum(g, axis=0), gemb)
+    ghead = jax.tree.map(lambda g: jnp.sum(g, axis=0), ghead)
+
+    ce_mean = jnp.sum(ce) / (b * s)
+    aux_mean = jnp.sum(aux) / M
+    z_mean = jnp.sum(z) / M
+    loss = ce_mean + aux_mean + z_mean
+    if has_moe:
+        loads = loads.reshape((reps,) + loads.shape[2:])
+    else:
+        loads = None
+    metrics = {
+        "loss": loss,
+        "ce": ce_mean,
+        "moe_aux_loss": aux_mean,
+        "moe_z_loss": z_mean,
+        "expert_load": loads,
+    }
+    grads = {"blocks": g_blocks, "embed": gemb, "head": ghead}
+    return loss, grads, metrics, occ
 
 
 def bubble_fraction(PP: int, M: int) -> float:

@@ -13,7 +13,7 @@ import math
 from dataclasses import dataclass, replace
 from typing import Iterable, List, Optional, Tuple
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import ArchConfig, DEFAULT_SCHEDULE, SCHEDULES
 from repro.core import resource_model as rm
 from repro.core.platform import Platform
 
@@ -24,6 +24,7 @@ class Strategy:
     EP: int
     DP: int
     alpha: int  # microbatch multiplier (M = alpha * PP)
+    schedule: str  # pipeline schedule bound into the executor (Eq 3/4 memory)
     checkpoint_activations: bool
     bytes_per_param: int  # 16 = fp32 master+moments; 10 = bf16 moments
     estimate: rm.Estimate
@@ -36,7 +37,8 @@ class Strategy:
         e = self.estimate
         return (
             f"PP={self.PP:<3d} EP={self.EP:<3d} DP={self.DP:<3d} "
-            f"alpha={self.alpha} ckpt={int(self.checkpoint_activations)} "
+            f"alpha={self.alpha} sched={self.schedule:<5s} "
+            f"ckpt={int(self.checkpoint_activations)} "
             f"Bp={self.bytes_per_param:<2d} "
             f"mem0={e.mem_stage0/1e9:7.1f}GB mfu={e.mfu*100:5.1f}% "
             f"t_step={e.t_step*1e3:8.1f}ms "
@@ -68,7 +70,7 @@ def valid_strategies(
     Eq 8:  EP | E
     Eq 9:  PP <= L (>= 1 layer per stage)
     Eq 10: EP <= fast-interconnect domain
-    Eq 11: stage-0 1F1B peak <= HBM
+    Eq 11: stage-0 schedule peak (Eq 3 GPipe / Eq 4 1F1B) <= HBM
     """
     shape = rm.ModelShape.from_arch(arch)
     E = shape.E if shape.E else 1
@@ -83,44 +85,56 @@ def valid_strategies(
             if EP > platform.fast_domain:  # Eq 10
                 continue
             DP = rest // EP
+            # Schedules only differ in executed memory profile (Eq 3 vs 4);
+            # a PP=1 "pipeline" is degenerate, keep the single default entry.
+            schedules = SCHEDULES if PP > 1 else (DEFAULT_SCHEDULE,)
             for alpha in alphas:
                 M = alpha * PP
                 if batch % (DP * M) or batch // (DP * M) == 0:
                     continue
-                for ckpt in (False, True):
-                    # 16 B/param = paper's fp16+fp32-master policy;
-                    # 12 B = our executor (fp32 master+moments, transient
-                    # bf16 compute copies); 8 B = bf16 moments fallback.
-                    for bpp in (16, 12, 8):
-                        t = rm.TrainSetup(
-                            b=batch,
-                            s=seq,
-                            PP=PP,
-                            EP=EP,
-                            DP=DP,
-                            alpha=alpha,
-                            checkpoint_activations=ckpt,
-                            bytes_per_param=bpp,
-                            zero=zero,
-                            imbalance=imbalance,
-                        )
-                        est = rm.estimate(
-                            shape, t, platform, overlap_fraction=overlap_fraction
-                        )
-                        if not est.mem_ok:  # Eq 11
+                for schedule in schedules:
+                    for ckpt in (False, True):
+                        # 16 B/param = paper's fp16+fp32-master policy;
+                        # 12 B = our executor (fp32 master+moments, transient
+                        # bf16 compute copies); 8 B = bf16 moments fallback.
+                        for bpp in (16, 12, 8):
+                            t = rm.TrainSetup(
+                                b=batch,
+                                s=seq,
+                                PP=PP,
+                                EP=EP,
+                                DP=DP,
+                                alpha=alpha,
+                                schedule=schedule,
+                                checkpoint_activations=ckpt,
+                                bytes_per_param=bpp,
+                                zero=zero,
+                                imbalance=imbalance,
+                            )
+                            est = rm.estimate(
+                                shape, t, platform,
+                                overlap_fraction=overlap_fraction,
+                            )
+                            if not est.mem_ok:  # Eq 11
+                                continue
+                            out.append(
+                                Strategy(PP, EP, DP, alpha, schedule, ckpt,
+                                         bpp, est)
+                            )
+                            break  # cheapest fitting policy wins this cfg
+                        else:
                             continue
-                        out.append(
-                            Strategy(PP, EP, DP, alpha, ckpt, bpp, est)
-                        )
-                        break  # cheapest policy that fits wins for this cfg
-                    else:
-                        continue
-                    break
+                        break
     return out
 
 
 def rank_strategies(strategies: List[Strategy]) -> List[Strategy]:
-    return sorted(strategies, key=lambda s: -s.estimate.mfu)
+    """Rank by estimated MFU; among MFU ties (e.g. GPipe vs 1F1B of the same
+    partition — identical bubble, different residency) prefer the smaller
+    stage-0 peak, which is how 1F1B wins whenever both fit."""
+    return sorted(
+        strategies, key=lambda s: (-s.estimate.mfu, s.estimate.mem_stage0)
+    )
 
 
 def best_strategy(

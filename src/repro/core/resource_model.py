@@ -14,7 +14,7 @@ import math
 from dataclasses import dataclass, field, replace
 from typing import Dict, Optional
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import ArchConfig, DEFAULT_SCHEDULE, SCHEDULES
 from repro.core.platform import Platform
 
 
@@ -99,6 +99,10 @@ class TrainSetup:
     EP: int = 1
     DP: int = 1  # external data parallelism (replica groups)
     alpha: int = 4  # microbatch multiplier: M = alpha * PP
+    # Pipeline schedule: picks the peak-memory formula (Eq 3 for GPipe's
+    # all-M-in-flight profile, Eq 4 for 1F1B's PP-i) and is bound into the
+    # executor by the planner.
+    schedule: str = DEFAULT_SCHEDULE
     bytes_per_param: int = 16  # paper §III-A1 (fp16 + fp32 master + Adam)
     bytes_act: int = 2  # activation dtype
     flash_attention: bool = True  # 4bHs^2 -> 2bHs (paper)
@@ -233,6 +237,15 @@ def memory_pp_1f1b(m: ModelShape, t: TrainSetup, stage: int = 0) -> float:
 def memory_1f1b_skew(m: ModelShape, t: TrainSetup) -> float:
     """Eq 5: stage-0 minus stage-(PP-1) activation skew."""
     return memory_pp_1f1b(m, t, 0) - memory_pp_1f1b(m, t, t.PP - 1)
+
+
+def memory_pp(m: ModelShape, t: TrainSetup, stage: int = 0) -> float:
+    """Schedule-aware per-stage pipeline peak (Eq 3 or Eq 4 per
+    ``t.schedule``) — what the planner's Eq-11 feasibility check uses."""
+    assert t.schedule in SCHEDULES, t.schedule
+    if t.schedule == "gpipe":
+        return memory_pp_gpipe(m, t)  # all M in flight on every stage
+    return memory_pp_1f1b(m, t, stage)
 
 
 # ---------------------------------------------------------------------------
@@ -376,7 +389,7 @@ def estimate(
     model_flops = flops_per_step(m, t)
     mfu = model_flops / (platform.peak_flops * t.P * t_step)
 
-    mem0 = memory_pp_1f1b(m, t, 0) if t.PP > 1 else memory_edp(m, t)
+    mem0 = memory_pp(m, t, 0) if t.PP > 1 else memory_edp(m, t)
     return Estimate(
         t_compute=tc,
         t_a2a=ta2a,

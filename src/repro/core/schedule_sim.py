@@ -1,19 +1,26 @@
-"""Discrete-event simulator for pipeline schedules (GPipe / 1F1B).
+"""Discrete-event simulator over the schedule IR (GPipe / 1F1B).
 
 Validates the paper's 1F1B analysis (Eq 4/5): peak in-flight microbatch
 activations per stage, bubble fraction, and step makespan.  Used by tests
-(cross-check against ``core.resource_model``) and by the schedule benchmark.
+(cross-check against ``core.resource_model`` and the SPMD executor) and by
+the schedule benchmark.
 
-The simulator is schedule-accurate, not time-accurate: forward and backward
-work units take ``t_fwd`` / ``t_bwd`` (backward ~2x forward by default), and
-stage-to-stage hand-off is immediate (P2P cost is modeled separately in the
-resource model).
+The op *order* comes from ``core.schedules`` — the same tick-table IR the
+executor interprets — so simulator and executor can never drift apart.  The
+simulator replays each stage's IR op sequence with real durations: forward
+and backward work units take ``t_fwd`` / ``t_bwd`` (backward ~2x forward by
+default), and stage-to-stage hand-off is immediate (P2P cost is modeled
+separately in the resource model).  It is schedule-accurate, not
+time-accurate.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Literal, Tuple
+from dataclasses import dataclass
+from typing import List
+
+from repro.core import schedules as sched_lib
+from repro.core.schedules import Schedule, peak_activations_1f1b  # noqa: F401
 
 
 @dataclass(frozen=True)
@@ -27,93 +34,48 @@ class Op:
 
 @dataclass
 class ScheduleResult:
+    schedule: Schedule
     ops: List[Op]
     makespan: float
     bubble_fraction: float  # idle time / (stages * makespan)
     peak_in_flight: List[int]  # per stage: max live fwd activations
 
 
-def _simulate(order_fn, PP: int, M: int, t_fwd: float, t_bwd: float) -> ScheduleResult:
-    """order_fn(stage) -> list of (kind, mb) in execution order for a stage."""
-    ready_f = [[0.0] * M for _ in range(PP)]  # earliest start of F(mb) per stage
-    ready_b = [[None] * M for _ in range(PP)]
-    done_f: Dict[Tuple[int, int], float] = {}
-    done_b: Dict[Tuple[int, int], float] = {}
-    t_stage = [0.0] * PP
-    ops: List[Op] = []
-    pending = {s: list(order_fn(s)) for s in range(PP)}
+def simulate(
+    sched: Schedule, t_fwd: float = 1.0, t_bwd: float = 2.0
+) -> ScheduleResult:
+    """Replay the IR's per-stage op order with real fwd/bwd durations —
+    through the same ``schedules.list_schedule`` dependency resolver that
+    built the IR, so the two cannot drift."""
+    PP = sched.PP
+    placed = sched_lib.list_schedule(
+        [sched.stage_order(s) for s in range(PP)], t_fwd=t_fwd, t_bwd=t_bwd
+    )
+    ops = [Op(s, mb, kind, start, end)
+           for s, (kind, mb), start, end in placed]
+    # Peak in-flight residency: +1 per F, -1 per B, in start order per stage.
     in_flight = [0] * PP
     peak = [0] * PP
-
-    progressed = True
-    while progressed and any(pending.values()):
-        progressed = False
-        for s in range(PP):
-            while pending[s]:
-                kind, mb = pending[s][0]
-                if kind == "F":
-                    dep = 0.0 if s == 0 else done_f.get((s - 1, mb))
-                else:
-                    dep = (
-                        done_f.get((s, mb))
-                        if s == PP - 1
-                        else done_b.get((s + 1, mb))
-                    )
-                    if dep is not None and done_f.get((s, mb)) is None:
-                        dep = None
-                if dep is None:
-                    break
-                dur = t_fwd if kind == "F" else t_bwd
-                start = max(t_stage[s], dep)
-                end = start + dur
-                ops.append(Op(s, mb, kind, start, end))
-                t_stage[s] = end
-                if kind == "F":
-                    done_f[(s, mb)] = end
-                    in_flight[s] += 1
-                    peak[s] = max(peak[s], in_flight[s])
-                else:
-                    done_b[(s, mb)] = end
-                    in_flight[s] -= 1
-                pending[s].pop(0)
-                progressed = True
+    for o in sorted(ops, key=lambda o: o.start):
+        if o.kind == "F":
+            in_flight[o.stage] += 1
+            peak[o.stage] = max(peak[o.stage], in_flight[o.stage])
+        else:
+            in_flight[o.stage] -= 1
     makespan = max(o.end for o in ops)
     busy = sum(o.end - o.start for o in ops)
     bubble = 1.0 - busy / (PP * makespan)
-    return ScheduleResult(ops, makespan, bubble, peak)
+    return ScheduleResult(sched, ops, makespan, bubble, peak)
 
 
 def gpipe(PP: int, M: int, t_fwd: float = 1.0, t_bwd: float = 2.0) -> ScheduleResult:
-    """All forwards, then all backwards (our SPMD executor's order)."""
-
-    def order(stage):
-        return [("F", m) for m in range(M)] + [("B", m) for m in range(M)]
-
-    return _simulate(order, PP, M, t_fwd, t_bwd)
+    """All forwards, then all backwards."""
+    return simulate(sched_lib.build("gpipe", PP, M), t_fwd, t_bwd)
 
 
 def one_f_one_b(PP: int, M: int, t_fwd: float = 1.0, t_bwd: float = 2.0) -> ScheduleResult:
-    """1F1B (PipeDream-flush): stage i warms up with (PP - i) forwards, then
-    alternates 1F/1B, then drains."""
-
-    def order(stage):
-        warmup = min(PP - stage, M)
-        seq: List[Tuple[str, int]] = [("F", m) for m in range(warmup)]
-        f_next, b_next = warmup, 0
-        while b_next < M:
-            if f_next < M:
-                seq.append(("B", b_next))
-                b_next += 1
-                seq.append(("F", f_next))
-                f_next += 1
-            else:
-                seq.append(("B", b_next))
-                b_next += 1
-        return seq
-
-    return _simulate(order, PP, M, t_fwd, t_bwd)
+    """1F1B (PipeDream-flush)."""
+    return simulate(sched_lib.build("1f1b", PP, M), t_fwd, t_bwd)
 
 
-def peak_activations_1f1b(PP: int) -> List[int]:
-    """Paper Eq 4: stage i holds (PP - i) in-flight microbatches at peak."""
-    return [PP - i for i in range(PP)]
+BY_NAME = {"gpipe": gpipe, "1f1b": one_f_one_b}

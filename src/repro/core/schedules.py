@@ -1,0 +1,366 @@
+"""Static schedule IR for pipeline parallelism (paper §III, Eq 3–5).
+
+A :class:`Schedule` is a per-stage, per-tick op table: at global clock tick
+``t``, stage ``s`` executes exactly one of
+
+* ``("F", mb)`` — forward of microbatch ``mb`` through the stage;
+* ``("B", mb)`` — backward of microbatch ``mb`` (consumes the residual saved
+  by the matching F and the cotangent handed back by stage ``s+1``);
+* ``None``      — idle (a bubble tick).
+
+The IR is the **single source of truth** for pipeline schedules: the
+discrete-event simulator (``core.schedule_sim``) replays it with real
+fwd/bwd durations to get makespan / bubble / peak-memory numbers, and the
+SPMD executor (``core.pipeline``) interprets the very same table tick by
+tick on the device mesh.  New schedules (interleaved / virtual stages) are
+added as pure builders here and both consumers pick them up unchanged.
+
+Tick semantics match the executor's communication model: an op's outputs
+are ``lax.ppermute``-d at the END of its tick and become visible to the
+neighbor at the START of tick ``t+1``.  The builders therefore place ops by
+list-scheduling the canonical per-stage op orders with unit-time ops, which
+yields integral start ticks that respect
+
+    F(s, mb)  at tick  >  F(s-1, mb)        (activation hand-off)
+    B(s, mb)  at tick  >  B(s+1, mb)        (cotangent hand-off)
+    B(s, mb)  at tick  >  F(s, mb)          (residual exists)
+
+Residual slots: each (stage, mb) is assigned a fixed buffer slot for its
+whole residency — from the tick its input activation *arrives* (F tick of
+stage ``s-1`` plus one; F tick itself on stage 0) until its B op frees it.
+``Schedule.num_slots`` is the buffer depth the executor must allocate; for
+1F1B it is ``PP`` independent of M (the paper's Eq 4 point), for GPipe it
+is ``M``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import SCHEDULES
+
+Op = Tuple[str, int]  # ("F"|"B", mb)
+
+# Integer op encoding for the executor's tick tables.
+OP_IDLE, OP_F, OP_B = 0, 1, 2
+
+
+# ---------------------------------------------------------------------------
+# Canonical per-stage op orders
+# ---------------------------------------------------------------------------
+
+
+def gpipe_order(PP: int, M: int, stage: int) -> List[Op]:
+    """GPipe: all forwards, then all backwards."""
+    return [("F", m) for m in range(M)] + [("B", m) for m in range(M)]
+
+
+def one_f_one_b_order(PP: int, M: int, stage: int) -> List[Op]:
+    """1F1B (PipeDream-flush): stage ``s`` warms up with ``PP - s``
+    forwards, then alternates 1B/1F, then drains the remaining backwards."""
+    warmup = min(PP - stage, M)
+    seq: List[Op] = [("F", m) for m in range(warmup)]
+    f_next, b_next = warmup, 0
+    while b_next < M:
+        seq.append(("B", b_next))
+        b_next += 1
+        if f_next < M:
+            seq.append(("F", f_next))
+            f_next += 1
+    return seq
+
+
+_ORDERS = {"gpipe": gpipe_order, "1f1b": one_f_one_b_order}
+assert set(_ORDERS) == set(SCHEDULES), "configs.base.SCHEDULES drifted"
+
+
+# ---------------------------------------------------------------------------
+# IR
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """Immutable tick-table IR (see module docstring)."""
+
+    name: str
+    PP: int
+    M: int
+    num_ticks: int
+    # ops[stage][tick] -> ("F"|"B", mb) or None (idle)
+    ops: Tuple[Tuple[Optional[Op], ...], ...]
+    # max simultaneously-live (F-done, B-pending) microbatches per stage
+    peak_in_flight: Tuple[int, ...]
+    # residual-buffer geometry: fixed slot per (stage, mb), depth num_slots
+    slots: Tuple[Tuple[int, ...], ...]  # slots[stage][mb]
+    num_slots: int
+
+    # -- views --------------------------------------------------------------
+
+    def stage_order(self, stage: int) -> List[Op]:
+        """Execution order of a stage's ops (idle ticks dropped)."""
+        return [op for op in self.ops[stage] if op is not None]
+
+    def op_ticks(self, kind: str) -> Dict[Tuple[int, int], int]:
+        """{(stage, mb): tick} for every op of ``kind``."""
+        return {
+            (s, op[1]): t
+            for s, row in enumerate(self.ops)
+            for t, op in enumerate(row)
+            if op is not None and op[0] == kind
+        }
+
+    def occupancy_trace(self) -> np.ndarray:
+        """(PP, num_ticks) int32: live (F-done, B-pending) microbatches per
+        stage AFTER each tick — the executor must reproduce this exactly."""
+        out = np.zeros((self.PP, self.num_ticks), np.int32)
+        for s, row in enumerate(self.ops):
+            live = 0
+            for t, op in enumerate(row):
+                if op is not None:
+                    live += 1 if op[0] == "F" else -1
+                out[s, t] = live
+        return out
+
+    def describe(self) -> str:
+        rows = []
+        for s, row in enumerate(self.ops):
+            cells = [
+                "   . " if op is None else f"{op[0]}{op[1]:<3d} " for op in row
+            ]
+            rows.append(f"stage {s}: " + "".join(cells))
+        return "\n".join(rows)
+
+
+# ---------------------------------------------------------------------------
+# Builder: list-schedule an op order into the tick table
+# ---------------------------------------------------------------------------
+
+
+def list_schedule(
+    stage_orders: List[List[Op]], t_fwd: float = 1.0, t_bwd: float = 2.0
+) -> List[Tuple[int, Op, float, float]]:
+    """Greedy dependency-resolving list scheduler over per-stage op orders.
+
+    The ONE place the pipeline dependency rules live (both the IR builder —
+    with unit durations, so starts become integral ticks — and the
+    discrete-event simulator call this):
+
+        F(s, mb) waits on F(s-1, mb);  B(s, mb) waits on F(s, mb) and,
+        below the last stage, on B(s+1, mb);  each stage is sequential.
+
+    Returns [(stage, op, start, end)] or raises on a deadlocked order.
+    """
+    PP = len(stage_orders)
+    pending = {s: list(stage_orders[s]) for s in range(PP)}
+    done_f: Dict[Tuple[int, int], float] = {}
+    done_b: Dict[Tuple[int, int], float] = {}
+    t_stage = [0.0] * PP
+    placed: List[Tuple[int, Op, float, float]] = []
+
+    progressed = True
+    while progressed and any(pending.values()):
+        progressed = False
+        for s in range(PP):
+            while pending[s]:
+                kind, mb = pending[s][0]
+                if kind == "F":
+                    dep = 0.0 if s == 0 else done_f.get((s - 1, mb))
+                else:
+                    dep = (
+                        done_f.get((s, mb))
+                        if s == PP - 1
+                        else done_b.get((s + 1, mb))
+                    )
+                    if dep is not None and done_f.get((s, mb)) is None:
+                        dep = None
+                if dep is None:
+                    break
+                dur = t_fwd if kind == "F" else t_bwd
+                start = max(t_stage[s], dep)
+                end = start + dur
+                t_stage[s] = end
+                (done_f if kind == "F" else done_b)[(s, mb)] = end
+                placed.append((s, (kind, mb), start, end))
+                pending[s].pop(0)
+                progressed = True
+    assert not any(pending.values()), "deadlocked op order"
+    return placed
+
+
+def _place_ops(name: str, PP: int, M: int) -> List[List[Optional[Op]]]:
+    """Unit-time list scheduling of the canonical per-stage orders."""
+    order = _ORDERS[name]
+    placed = list_schedule(
+        [order(PP, M, s) for s in range(PP)], t_fwd=1.0, t_bwd=1.0
+    )
+    T = int(max(end for _, _, _, end in placed))
+    table: List[List[Optional[Op]]] = [[None] * T for _ in range(PP)]
+    for s, op, start, _end in placed:
+        t = int(start)
+        assert t == start and table[s][t] is None
+        table[s][t] = op
+    return table
+
+
+def _assign_slots(
+    table: List[List[Optional[Op]]], PP: int, M: int
+) -> Tuple[Tuple[Tuple[int, ...], ...], int]:
+    """Fixed residual slot per (stage, mb): smallest free slot over the
+    arrival→backward lifetime."""
+    f_tick = {
+        (s, op[1]): t
+        for s, row in enumerate(table)
+        for t, op in enumerate(row)
+        if op and op[0] == "F"
+    }
+    b_tick = {
+        (s, op[1]): t
+        for s, row in enumerate(table)
+        for t, op in enumerate(row)
+        if op and op[0] == "B"
+    }
+    slots: List[Tuple[int, ...]] = []
+    depth = 0
+    for s in range(PP):
+        lifetimes = []
+        for mb in range(M):
+            alloc = f_tick[(s, mb)] if s == 0 else f_tick[(s - 1, mb)] + 1
+            lifetimes.append((alloc, b_tick[(s, mb)], mb))
+        free_at: List[int] = []  # free_at[slot] = first tick slot is free
+        stage_slots = [0] * M
+        for alloc, free, mb in sorted(lifetimes):
+            for i, fa in enumerate(free_at):
+                if fa <= alloc:
+                    stage_slots[mb] = i
+                    free_at[i] = free + 1
+                    break
+            else:
+                stage_slots[mb] = len(free_at)
+                free_at.append(free + 1)
+        slots.append(tuple(stage_slots))
+        depth = max(depth, len(free_at))
+    return tuple(slots), depth
+
+
+def _validate(sched: Schedule) -> None:
+    f = sched.op_ticks("F")
+    b = sched.op_ticks("B")
+    PP, M = sched.PP, sched.M
+    for s in range(PP):
+        for mb in range(M):
+            assert (s, mb) in f and (s, mb) in b, (sched.name, s, mb)
+            assert b[(s, mb)] > f[(s, mb)]
+            if s > 0:
+                assert f[(s, mb)] > f[(s - 1, mb)]
+            if s < PP - 1:
+                assert b[(s, mb)] > b[(s + 1, mb)]
+
+
+@lru_cache(maxsize=None)
+def build(name: str, PP: int, M: int) -> Schedule:
+    """Build (and cache) the tick-table IR for a named schedule."""
+    if name not in _ORDERS:
+        raise ValueError(
+            f"unknown schedule {name!r}; available: {sorted(_ORDERS)}"
+        )
+    assert PP >= 1 and M >= 1, (PP, M)
+    table = _place_ops(name, PP, M)
+    occupancy = []
+    for s in range(PP):
+        live = peak = 0
+        for op in table[s]:
+            if op:
+                live += 1 if op[0] == "F" else -1
+                peak = max(peak, live)
+        occupancy.append(peak)
+    slots, depth = _assign_slots(table, PP, M)
+    sched = Schedule(
+        name=name,
+        PP=PP,
+        M=M,
+        num_ticks=len(table[0]),
+        ops=tuple(tuple(row) for row in table),
+        peak_in_flight=tuple(occupancy),
+        slots=slots,
+        num_slots=depth,
+    )
+    _validate(sched)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Executor tables
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TickTables:
+    """The IR lowered to dense int32 arrays the SPMD executor indexes with
+    ``[stage, tick]`` inside its clock scan.
+
+    ``arrive_fwd``/``arrive_bwd`` give the residual-buffer slot into which a
+    wire payload arriving at the START of a tick must be stored (-1: no
+    arrival): the activation ppermuted by stage ``s-1``'s F at ``t-1``, and
+    the cotangent ppermuted by stage ``s+1``'s B at ``t-1``, respectively.
+    """
+
+    kind: np.ndarray  # (PP, T) in {OP_IDLE, OP_F, OP_B}
+    mb: np.ndarray  # (PP, T) microbatch of the op (0 when idle)
+    slot: np.ndarray  # (PP, T) residual slot of the op's mb (0 when idle)
+    arrive_fwd: np.ndarray  # (PP, T) slot to store arriving activation, -1
+    arrive_fwd_mb: np.ndarray  # (PP, T) arriving microbatch id, -1
+    arrive_bwd: np.ndarray  # (PP, T) slot to store arriving cotangent, -1
+
+
+def tick_tables(sched: Schedule) -> TickTables:
+    PP, T = sched.PP, sched.num_ticks
+    kind = np.zeros((PP, T), np.int32)
+    mb = np.zeros((PP, T), np.int32)
+    slot = np.zeros((PP, T), np.int32)
+    arrive_fwd = np.full((PP, T), -1, np.int32)
+    arrive_fwd_mb = np.full((PP, T), -1, np.int32)
+    arrive_bwd = np.full((PP, T), -1, np.int32)
+    for s in range(PP):
+        for t, op in enumerate(sched.ops[s]):
+            if op is None:
+                continue
+            k, m = op
+            kind[s, t] = OP_F if k == "F" else OP_B
+            mb[s, t] = m
+            slot[s, t] = sched.slots[s][m]
+            if k == "F" and s + 1 < PP and t + 1 < T:
+                arrive_fwd[s + 1, t + 1] = sched.slots[s + 1][m]
+                arrive_fwd_mb[s + 1, t + 1] = m
+            if k == "B" and s > 0 and t + 1 < T:
+                arrive_bwd[s - 1, t + 1] = sched.slots[s - 1][m]
+    return TickTables(kind, mb, slot, arrive_fwd, arrive_fwd_mb, arrive_bwd)
+
+
+def forward_tick_tables(PP: int, M: int) -> Tuple[np.ndarray, np.ndarray, int]:
+    """F-projection of the IR for the forward-only executor: masks/microbatch
+    ids over the first ``M + PP - 1`` ticks (every schedule's F ops occupy
+    the same warmup-free prefix; the IR is validated to agree).
+
+    Returns (valid (PP, Tf) bool, mb (PP, Tf) int32, Tf).
+    """
+    sched = build("gpipe", PP, M)
+    Tf = M + PP - 1
+    valid = np.zeros((PP, Tf), bool)
+    mb = np.zeros((PP, Tf), np.int32)
+    for (s, m), t in sched.op_ticks("F").items():
+        assert t < Tf and t == s + m, (
+            "gpipe F-projection must be the canonical staircase"
+        )
+        valid[s, t] = True
+        mb[s, t] = m
+    return valid, mb, Tf
+
+
+def peak_activations_1f1b(PP: int) -> List[int]:
+    """Paper Eq 4: stage i holds (PP - i) in-flight microbatches at peak."""
+    return [PP - i for i in range(PP)]

@@ -57,6 +57,7 @@ def run_cell(
     shape_name: str,
     multi_pod: bool,
     pipeline: bool = False,
+    schedule: str = None,
     hierarchical_a2a: bool = False,
     compress_p2p: bool = False,
     remat: str = None,
@@ -84,6 +85,7 @@ def run_cell(
         "shape": shape_name,
         "multi_pod": multi_pod,
         "pipeline": pipeline,
+        "schedule": schedule,
         "hierarchical_a2a": hierarchical_a2a,
         "compress_p2p": compress_p2p,
     }
@@ -100,10 +102,13 @@ def run_cell(
         mesh = make_production_mesh(multi_pod=multi_pod)
         chips = mesh.devices.size
         opt_dtype, auto_remat = choose_memory_policy(arch, shape, chips)
+        from repro.configs.base import DEFAULT_SCHEDULE
+
         plan = make_plan(
             mesh,
             arch,
             pipeline_on_pod=pipeline,
+            schedule=schedule or DEFAULT_SCHEDULE,
             remat=remat or auto_remat,
             optimizer_dtype=opt_dtype,
             hierarchical_a2a=hierarchical_a2a,
@@ -124,6 +129,7 @@ def run_cell(
             ep=plan.ep,
             tp=plan.tp,
             pp=plan.pp,
+            schedule=plan.schedule if plan.pp > 1 else None,
             optimizer_dtype=opt_dtype,
             remat=plan.remat,
         )
@@ -182,7 +188,9 @@ def run_cell(
 
         ma = compiled.memory_analysis()
         print(ma)
-        ca = compiled.cost_analysis() or {}
+        from repro.compat import compiled_cost_analysis
+
+        ca = compiled_cost_analysis(compiled)
         # cost_analysis visits while-loop bodies once; analyze_hlo multiplies
         # by trip counts (see hlo_analysis docstring) — it is the authoritative
         # number for the roofline.
@@ -308,6 +316,8 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--pipeline", action="store_true",
                     help="Piper: pipeline stages over the pod axis")
+    ap.add_argument("--schedule", default=None,
+                    help="pipeline schedule (gpipe|1f1b)")
     ap.add_argument("--hierarchical-a2a", action="store_true")
     ap.add_argument("--compress-p2p", action="store_true")
     ap.add_argument("--remat", default=None)
@@ -325,6 +335,7 @@ def main():
         args.shape,
         args.multi_pod,
         pipeline=args.pipeline,
+        schedule=args.schedule,
         hierarchical_a2a=args.hierarchical_a2a,
         compress_p2p=args.compress_p2p,
         remat=args.remat,

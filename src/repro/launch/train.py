@@ -30,6 +30,9 @@ def main():
     ap.add_argument("--mesh", default=None,
                     help="comma mesh shape, e.g. 2,2,2 -> (pod,data,model)")
     ap.add_argument("--pipeline", action="store_true")
+    ap.add_argument("--schedule", default=None,
+                    help="pipeline schedule (gpipe|1f1b); default: the "
+                         "planner's choice, else 1f1b")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--corpus", default=None, help="memmap token corpus path")
@@ -63,19 +66,30 @@ def main():
         print(f"[planner] production-strategy for {args.arch} @256xv5e:")
         print("          " + best.describe())
 
+    # The schedule binds planner -> plan -> executor: an explicit flag wins,
+    # else inherit the planner's ranked choice.
+    from repro.configs.base import DEFAULT_SCHEDULE
+
+    schedule = args.schedule or (
+        best.schedule if best is not None else DEFAULT_SCHEDULE
+    )
+
     n_dev = len(jax.devices())
     if args.mesh:
         shape = tuple(int(x) for x in args.mesh.split(","))
         names = ("pod", "data", "model")[-len(shape):]
         mesh = host_mesh(shape, names)
-        plan = make_plan(mesh, arch, pipeline_on_pod=args.pipeline)
+        plan = make_plan(
+            mesh, arch, pipeline_on_pod=args.pipeline, schedule=schedule
+        )
     elif n_dev > 1:
         mesh = host_mesh((1, n_dev), ("data", "model"))
-        plan = make_plan(mesh, arch)
+        plan = make_plan(mesh, arch, schedule=schedule)
     else:
         plan = single_device_plan(arch)
     print(f"[mesh] devices={plan.num_devices} ep={plan.ep} tp={plan.tp} "
-          f"pp={plan.pp} dp_axes={plan.dp_axes}")
+          f"pp={plan.pp} dp_axes={plan.dp_axes}"
+          + (f" schedule={plan.schedule}" if plan.pp > 1 else ""))
 
     lm = LanguageModel(arch, plan, impl=args.impl)
     opt = OptimizerConfig(lr=args.lr, total_steps=args.steps)

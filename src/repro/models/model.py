@@ -283,15 +283,22 @@ class LanguageModel:
             x, NamedSharding(self.plan.mesh, spec)
         )
 
-    def _head(self, params, x) -> jax.Array:
+    def _logits(self, w, x) -> jax.Array:
+        """Shared head-logit pipeline (einsum, fp32, softcap, vocab-pad
+        mask) — used by both the outside-the-pipeline head and the
+        in-pipeline per-microbatch loss head, which must stay identical."""
         a = self.arch
-        w = params["embed"].T if a.tie_embeddings else params["lm_head"]
         logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
         logits = logits.astype(jnp.float32)
         logits = softcap(logits, a.final_logit_softcap)
         # Mask the vocab padding region.
         pad_mask = jnp.arange(self.vp) < a.vocab_size
         return jnp.where(pad_mask, logits, -1e30)
+
+    def _head(self, params, x) -> jax.Array:
+        a = self.arch
+        w = params["embed"].T if a.tie_embeddings else params["lm_head"]
+        return self._logits(w, x)
 
     # -- forward ------------------------------------------------------------
 
@@ -329,32 +336,7 @@ class LanguageModel:
         if self.plan.pp_axis is not None:
             from repro.core import pipeline
 
-            if a.frontend is not None and "embeds" in batch:
-                # Precomputed frontend embeddings: no table, no embed grads —
-                # safe to embed outside the pipeline.
-                x = self._embed(params, batch)
-                embed_fn, embed_params = None, None
-            else:
-                # Tokens: embedding lookup runs INSIDE stage 0 (paper-style
-                # placement; keeps the scatter-add backward pod-local).
-                x = batch["tokens"]
-                scale = (
-                    math.sqrt(a.d_model) if a.scale_embeddings else None
-                )
-
-                embed_grad = self.plan.embed_grad
-
-                def embed_fn(table, toks):
-                    if not embed_grad:
-                        # Dry-run-only XLA-bug workaround; see
-                        # MeshPlan.embed_grad.
-                        table = lax.stop_gradient(table)
-                    e = jnp.take(table, toks, axis=0)
-                    if scale is not None:
-                        e = e * jnp.asarray(scale, e.dtype)
-                    return e
-
-                embed_params = params["embed"]
+            x, embed_fn, embed_params = self._pipeline_inputs(params, batch)
             b, s = x.shape[:2]
             positions = jnp.broadcast_to(
                 jnp.arange(s, dtype=jnp.int32)[None], (b, s)
@@ -372,6 +354,99 @@ class LanguageModel:
             positions=positions, impl=self.impl,
             token_sharded=token_sharded,
         )
+
+    def _pipeline_inputs(self, params, batch):
+        """(x, embed_fn, embed_params) for the in-pipeline stage-0 embedding
+        (paper-style placement; keeps the scatter-add backward pod-local)."""
+        a = self.arch
+        if a.frontend is not None and "embeds" in batch:
+            # Precomputed frontend embeddings: no table, no embed grads —
+            # safe to embed outside the pipeline.
+            return self._embed(params, batch), None, None
+        scale = math.sqrt(a.d_model) if a.scale_embeddings else None
+        embed_grad = self.plan.embed_grad
+
+        def embed_fn(table, toks):
+            if not embed_grad:
+                # Dry-run-only XLA-bug workaround; see MeshPlan.embed_grad.
+                table = lax.stop_gradient(table)
+            e = jnp.take(table, toks, axis=0)
+            if scale is not None:
+                e = e * jnp.asarray(scale, e.dtype)
+            return e
+
+        return batch["tokens"], embed_fn, params["embed"]
+
+    def _make_head_fn(self):
+        """Per-microbatch loss head for the schedule-executing pipeline:
+        (head_params, embed_params, y (b_mu, s, d), labels) -> summed CE.
+
+        Runs INSIDE the last pipeline stage so B(mb) can start as soon as
+        F(mb) finishes there — the property that makes 1F1B a schedule
+        rather than an accounting fiction."""
+        a = self.arch
+        tied = a.tie_embeddings
+
+        def head_fn(head_params, embed_params, y, labels):
+            h = rms_norm(y, head_params["final_norm"], a.norm_eps)
+            w = embed_params.T if tied else head_params["lm_head"]
+            logits = self._logits(w, h)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+            return jnp.sum(lse - ll)
+
+        return head_fn
+
+    def loss_and_grads(self, params, batch, *, schedule: Optional[str] = None):
+        """Pipelined loss AND gradients under a schedule IR (``plan.schedule``
+        unless overridden) — the training path for pipelined plans, replacing
+        ``jax.grad``-through-the-forward so the executed op order is the
+        schedule's, not reverse-mode AD's.
+
+        Returns (loss, grads, metrics) with ``grads`` matching the ``params``
+        tree; ``metrics["pipeline_occupancy"]`` carries the executed (PP,
+        num_ticks) in-flight residual counts.
+        """
+        from repro.core import pipeline
+
+        a = self.arch
+        assert self.plan.pp_axis is not None, "loss_and_grads needs a PP plan"
+        x, embed_fn, embed_params = self._pipeline_inputs(params, batch)
+        if embed_params is None and a.tie_embeddings:
+            # Frontend inputs skip the in-pipeline lookup, but a tied head
+            # still reads (and backprops into) the table at the last stage.
+            embed_params = params["embed"]
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None], (b, s)
+        )
+        head_params = {"final_norm": params["final_norm"]}
+        if not a.tie_embeddings:
+            head_params["lm_head"] = params["lm_head"]
+        loss, g, metrics, occupancy = pipeline.pipelined_step(
+            params["blocks"],
+            x,
+            batch["labels"],
+            a,
+            self.plan,
+            positions=positions,
+            head_fn=self._make_head_fn(),
+            head_params=head_params,
+            schedule=schedule,
+            impl=self.impl,
+            embed_fn=embed_fn,
+            embed_params=embed_params,
+        )
+        grads = {"blocks": g["blocks"], "final_norm": g["head"]["final_norm"]}
+        if not a.tie_embeddings:
+            grads["lm_head"] = g["head"]["lm_head"]
+        if embed_params is not None:
+            grads["embed"] = g["embed"]
+        else:
+            grads["embed"] = jnp.zeros_like(params["embed"])
+        metrics = dict(metrics)
+        metrics["pipeline_occupancy"] = occupancy
+        return loss, grads, metrics
 
     def loss(self, params, batch):
         """Causal LM loss (sequence-chunked CE). Returns (loss, metrics)."""

@@ -38,6 +38,7 @@ from jax import lax
 from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ArchConfig, MoECfg
 from repro.sharding import MeshPlan
 
@@ -74,6 +75,27 @@ def _aux_losses(probs, logits, top_i, moe: MoECfg, axes):
     z_local = jnp.sum(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
     z = (lax.psum(z_local, axes) if axes else z_local) / totals * moe.z_loss_coef
     return aux, z, counts_g
+
+
+def _capacity(T: int, moe: MoECfg) -> int:
+    """Per-rank expert slot budget C = ceil(T*k/E * cf) (GShard/Tutel) —
+    shared by the sharded and single-rank dispatch paths."""
+    return int(
+        math.ceil(T * moe.top_k / moe.num_experts * moe.capacity_factor)
+    )
+
+
+def _scatter_to_buffers(xt, flat_e, pos, keep, E: int, capacity: int):
+    """Token rows -> (E, C, d) capacity buffers (overflow masked to zero)."""
+    src = jnp.repeat(xt, len(flat_e) // xt.shape[0], axis=0)  # (T*k, d)
+    buf = jnp.zeros((E, capacity, xt.shape[-1]), xt.dtype)
+    return buf.at[flat_e, pos].add(src * keep[:, None].astype(xt.dtype))
+
+
+def _combine_expert_outputs(vals, flat_w, keep, T: int, k: int, d: int):
+    """Weighted top-k combine of gathered expert outputs back to tokens."""
+    vals = vals * (flat_w * keep.astype(jnp.float32))[:, None].astype(vals.dtype)
+    return vals.reshape(T, k, d).sum(axis=1)
 
 
 def _dispatch_indices(top_i, top_w, E: int, capacity: int):
@@ -116,6 +138,57 @@ def _transport_bf16(a2a_fn, x):
     y = a2a_fn(x.astype(jnp.bfloat16))
     y = _checkpoint_name(y, "ep_a2a")
     return y.astype(orig)
+
+
+def moe_ffn_local(
+    params: Dict[str, jax.Array],
+    x: jax.Array,  # (b, s, d) — the caller's full (replicated) token block
+    arch: ArchConfig,
+    *,
+    impl: str = "xla",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Collective-free single-rank MoE: the exact routing/capacity/expert
+    math of :func:`moe_ffn`'s body with EP = 1 and no mesh.
+
+    Used by the pipeline executor's *compat interior* (old JAX cannot nest a
+    manual shard_map inside another manual region — see ``repro.compat``),
+    where every device inside a stage redundantly computes the full
+    microbatch, and by any caller that wants the reference semantics.
+    """
+    moe = arch.moe
+    assert moe is not None
+    E = moe.num_experts
+    b, s, d = x.shape
+    T = b * s
+    xt = x.reshape(T, d)
+    top_w, top_i, probs, logits = _route(xt, params["w_router"], moe)
+    aux, z, counts = _aux_losses(probs, logits, top_i, moe, ())
+    top_phys = params["assignment"][top_i]
+    capacity = _capacity(T, moe)
+    flat_e, pos, keep, flat_w = _dispatch_indices(top_phys, top_w, E, capacity)
+    buf = _scatter_to_buffers(xt, flat_e, pos, keep, E, capacity)
+
+    ffn_fn = _expert_ffn_pallas if impl == "pallas" else _expert_ffn
+    wg = params.get("w_gate")
+    y_buf = ffn_fn(buf, params["w_up"], wg, params["w_down"], arch.ffn_activation)
+    vals = y_buf[flat_e, pos]
+    y = _combine_expert_outputs(vals, flat_w, keep, T, moe.top_k, d)
+    y = y.reshape(b, s, d)
+
+    if moe.num_shared_experts > 0:
+        from repro.models import layers
+
+        y = y + layers.dense_ffn(
+            {
+                "w_up": params["w_shared_up"],
+                "w_gate": params.get("w_shared_gate"),
+                "w_down": params["w_shared_down"],
+            },
+            x,
+            arch.ffn_activation,
+        )
+    metrics = {"moe_aux_loss": aux, "moe_z_loss": z, "expert_load": counts}
+    return y, metrics
 
 
 def moe_ffn(
@@ -173,12 +246,9 @@ def moe_ffn(
         aux, z, counts = _aux_losses(probs, logits, top_i, moe, metric_axes)
         top_phys = assignment[top_i]
 
-        capacity = int(math.ceil(T * moe.top_k / E * moe.capacity_factor))
+        capacity = _capacity(T, moe)
         flat_e, pos, keep, flat_w = _dispatch_indices(top_phys, top_w, E, capacity)
-
-        src = jnp.repeat(xt, moe.top_k, axis=0)  # (T*k, d)
-        buf = jnp.zeros((E, capacity, d), xt.dtype)
-        buf = buf.at[flat_e, pos].add(src * keep[:, None].astype(xt.dtype))
+        buf = _scatter_to_buffers(xt, flat_e, pos, keep, E, capacity)
 
         # Gather ZeRO-3-sharded expert weights (transpose = reduce-scatter).
         gather_axes = ("data", "tp") if "data" in axes else ("tp",)
@@ -235,8 +305,7 @@ def moe_ffn(
             if ep_size > 1:
                 vals = lax.psum(vals, "ep")
 
-        vals = vals * (flat_w * keep.astype(jnp.float32))[:, None].astype(vals.dtype)
-        y = vals.reshape(T, moe.top_k, d).sum(axis=1)
+        y = _combine_expert_outputs(vals, flat_w, keep, T, moe.top_k, d)
         y = y.reshape(b_l, s_l, d)
         metrics = {
             "moe_aux_loss": aux,
@@ -271,7 +340,7 @@ def moe_ffn(
         have_ctx = False
     mesh_kw = {} if have_ctx else {"mesh": mesh}
 
-    y, metrics = jax.shard_map(
+    y, metrics = compat.shard_map(
         wrapped,
         in_specs=in_specs,
         out_specs=out_specs,

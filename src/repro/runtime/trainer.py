@@ -186,6 +186,15 @@ class Trainer:
 
     def fit(self, state, data: Iterator) -> Dict[str, Any]:
         self._install_signals()
+        plan = self.lm.plan
+        if plan.pp_axis is not None and plan.pp > 1:
+            # The schedule-executing pipeline path (core.pipeline
+            # .pipelined_step): backward runs in the bound schedule's op
+            # order, not jax.grad's.
+            self.log(
+                f"[trainer] pipelined: PP={plan.pp} schedule={plan.schedule} "
+                f"(M={plan.microbatches or 2 * plan.pp})"
+            )
         start_step = int(jax.device_get(state["step"]))
         if self.ckpt is not None:
             try:

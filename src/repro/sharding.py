@@ -37,7 +37,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import ArchConfig, DEFAULT_SCHEDULE, SCHEDULES
 
 # ---------------------------------------------------------------------------
 # Mesh refinement
@@ -86,6 +86,10 @@ class MeshPlan:
     tp_axis: str = "tp"
     pp_axis: Optional[str] = None  # "pod" when Piper pipelines across pods
     pp: int = 1
+    # Pipeline schedule (a core.schedules builder name).  1F1B is the
+    # paper's schedule (Eq 4 memory profile); "gpipe" keeps the all-F-then-
+    # all-B order.  Only consulted when pp > 1.
+    schedule: str = DEFAULT_SCHEDULE
     # memory-policy knobs the planner searches over
     remat: str = "full"  # none | dots | full
     optimizer_dtype: str = "float32"  # adam m/v dtype
@@ -108,6 +112,9 @@ class MeshPlan:
     rules: Dict[str, Optional[Tuple[str, ...]]] = field(default_factory=dict)
 
     def __post_init__(self):
+        assert self.schedule in SCHEDULES, (
+            f"unknown schedule {self.schedule!r}; choose from {SCHEDULES}"
+        )
         if not self.rules:
             self.rules = default_rules(self)
 
@@ -185,6 +192,7 @@ def make_plan(
     arch: ArchConfig,
     *,
     pipeline_on_pod: bool = False,
+    schedule: str = DEFAULT_SCHEDULE,
     remat: str = "full",
     optimizer_dtype: str = "float32",
     hierarchical_a2a: bool = False,
@@ -222,6 +230,7 @@ def make_plan(
         sp_axes=("ep", "tp"),
         pp_axis=pp_axis,
         pp=pp,
+        schedule=schedule,
         remat=remat,
         optimizer_dtype=optimizer_dtype,
         hierarchical_a2a=hierarchical_a2a,

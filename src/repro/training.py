@@ -113,20 +113,31 @@ def batch_specs(lm: LanguageModel, shape: ShapeSpec) -> Dict[str, Any]:
 
 def make_train_step(lm: LanguageModel, opt_cfg: OptimizerConfig):
     compute_dtype = DTYPES[lm.plan.compute_dtype]
+    pipelined = lm.plan.pp_axis is not None and lm.plan.pp > 1
+
+    def cast(params):
+        return jax.tree.map(
+            lambda p: p.astype(compute_dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating)
+            else p,
+            params,
+        )
 
     def train_step(state, batch):
-        def loss_fn(params):
-            cparams = jax.tree.map(
-                lambda p: p.astype(compute_dtype)
-                if jnp.issubdtype(p.dtype, jnp.floating)
-                else p,
-                params,
-            )
-            return lm.loss(cparams, batch)
+        if pipelined:
+            # Schedule-driven executor: the pipeline computes its own
+            # backward in the bound schedule's op order (1F1B executes with
+            # its Eq-4 memory profile) instead of jax.grad re-deriving a
+            # GPipe-ordered reverse pipeline from the forward scan.
+            loss, grads, metrics = lm.loss_and_grads(cast(state["params"]), batch)
+            metrics.pop("pipeline_occupancy", None)
+        else:
+            def loss_fn(params):
+                return lm.loss(cast(params), batch)
 
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True, allow_int=True
-        )(state["params"])
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True, allow_int=True
+            )(state["params"])
         new_params, new_opt, opt_metrics = adamw_update(
             opt_cfg, state["params"], grads, {k: state[k] for k in ("m", "v", "step")}
         )

@@ -1,0 +1,161 @@
+"""Schedule IR (core.schedules) + simulator (core.schedule_sim) properties.
+
+The IR is the single source of truth for pipeline schedules: these tests pin
+its invariants (dependency-correct tick placement, Eq-4 peaks, buffer
+geometry) and that the simulator consumes the same IR.  The SPMD executor's
+agreement with the IR is covered in tests/test_pipeline_schedules.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import SCHEDULES
+from repro.core import schedule_sim as ss
+from repro.core import schedules as S
+
+GRID = [(2, 2), (2, 4), (3, 6), (4, 4), (4, 8), (4, 5), (8, 16)]
+
+
+@pytest.mark.parametrize("name", SCHEDULES)
+@pytest.mark.parametrize("PP,M", GRID)
+def test_ir_wellformed(name, PP, M):
+    sched = S.build(name, PP, M)
+    f = sched.op_ticks("F")
+    b = sched.op_ticks("B")
+    assert len(f) == len(b) == PP * M  # every op exactly once
+    for s in range(PP):
+        for mb in range(M):
+            assert b[(s, mb)] > f[(s, mb)]  # residual exists
+            if s > 0:  # activation hand-off is one ppermute tick
+                assert f[(s, mb)] > f[(s - 1, mb)]
+            if s < PP - 1:  # cotangent hand-off
+                assert b[(s, mb)] > b[(s + 1, mb)]
+    # at most one op per (stage, tick) is structural in the table; the tick
+    # count matches the unit-time makespan of the flush schedules
+    assert sched.num_ticks == 2 * (M + PP - 1)
+
+
+@pytest.mark.parametrize("name", SCHEDULES)
+@pytest.mark.parametrize("PP,M", GRID)
+def test_ir_matches_canonical_stage_orders(name, PP, M):
+    """The tick table is a faithful placement of the canonical op orders."""
+    sched = S.build(name, PP, M)
+    order = S.gpipe_order if name == "gpipe" else S.one_f_one_b_order
+    for s in range(PP):
+        assert sched.stage_order(s) == order(PP, M, s)
+
+
+@pytest.mark.parametrize("PP,M", GRID)
+def test_peaks_eq3_eq4(PP, M):
+    """GPipe holds all M microbatches (Eq 3); 1F1B holds PP - i (Eq 4)."""
+    g = S.build("gpipe", PP, M)
+    assert list(g.peak_in_flight) == [M] * PP
+    f = S.build("1f1b", PP, M)
+    assert list(f.peak_in_flight) == [
+        min(PP - i, M) for i in range(PP)
+    ]
+    if M >= PP:
+        assert list(f.peak_in_flight) == S.peak_activations_1f1b(PP)
+
+
+@pytest.mark.parametrize("PP,M", GRID)
+def test_residual_buffer_depth(PP, M):
+    """Executor buffer depth: M slots for GPipe, PP for 1F1B — Eq 3 vs Eq 4
+    realized in allocation, independent of M."""
+    assert S.build("gpipe", PP, M).num_slots == M
+    assert S.build("1f1b", PP, M).num_slots == min(PP, M)
+
+
+@pytest.mark.parametrize("name", SCHEDULES)
+@pytest.mark.parametrize("PP,M", GRID)
+def test_slot_lifetimes_disjoint(name, PP, M):
+    """No two microbatches may occupy a stage's slot at the same tick
+    (lifetime: activation arrival -> backward)."""
+    sched = S.build(name, PP, M)
+    f = sched.op_ticks("F")
+    b = sched.op_ticks("B")
+    for s in range(PP):
+        by_slot = {}
+        for mb in range(M):
+            alloc = f[(s, mb)] if s == 0 else f[(s - 1, mb)] + 1
+            by_slot.setdefault(sched.slots[s][mb], []).append(
+                (alloc, b[(s, mb)])
+            )
+        for intervals in by_slot.values():
+            intervals.sort()
+            for (a0, b0), (a1, _) in zip(intervals, intervals[1:]):
+                assert b0 < a1, (name, PP, M, s, intervals)
+
+
+@pytest.mark.parametrize("name", SCHEDULES)
+def test_sim_consumes_ir(name):
+    """The simulator replays the IR: its per-stage op sequence and peaks are
+    the IR's, with real durations only stretching time."""
+    for PP, M in ((2, 4), (4, 8)):
+        sched = S.build(name, PP, M)
+        r = ss.simulate(sched, t_fwd=1.0, t_bwd=2.0)
+        assert r.schedule is sched
+        assert r.peak_in_flight == list(sched.peak_in_flight)
+        for s in range(PP):
+            sim_order = [
+                (o.kind, o.mb)
+                for o in sorted(r.ops, key=lambda o: o.start)
+                if o.stage == s
+            ]
+            assert sim_order == sched.stage_order(s)
+
+
+def test_sim_named_entrypoints():
+    g = ss.gpipe(4, 8)
+    assert g.peak_in_flight == [8, 8, 8, 8]
+    f = ss.one_f_one_b(4, 8)
+    assert f.peak_in_flight == [4, 3, 2, 1]
+    assert set(ss.BY_NAME) == set(SCHEDULES)
+
+
+@pytest.mark.parametrize("name", SCHEDULES)
+def test_tick_tables_arrivals(name):
+    """Lowered executor tables: an arrival at (s, t) is exactly the op its
+    neighbor ppermuted at t-1, parked in the receiver's slot for that mb."""
+    PP, M = 4, 8
+    sched = S.build(name, PP, M)
+    tt = S.tick_tables(sched)
+    T = sched.num_ticks
+    for s in range(PP):
+        for t in range(T):
+            op = sched.ops[s][t]
+            k = tt.kind[s, t]
+            if op is None:
+                assert k == S.OP_IDLE
+                continue
+            assert k == (S.OP_F if op[0] == "F" else S.OP_B)
+            assert tt.mb[s, t] == op[1]
+            assert tt.slot[s, t] == sched.slots[s][op[1]]
+            if op[0] == "F" and s + 1 < PP:
+                assert tt.arrive_fwd[s + 1, t + 1] == sched.slots[s + 1][op[1]]
+                assert tt.arrive_fwd_mb[s + 1, t + 1] == op[1]
+            if op[0] == "B" and s > 0:
+                assert tt.arrive_bwd[s - 1, t + 1] == sched.slots[s - 1][op[1]]
+
+
+def test_forward_projection_staircase():
+    valid, mb, T = S.forward_tick_tables(4, 8)
+    assert T == 11
+    for s in range(4):
+        ticks = np.nonzero(valid[s])[0]
+        assert list(ticks) == list(range(s, s + 8))
+        assert list(mb[s, ticks]) == list(range(8))
+
+
+def test_occupancy_trace_matches_sim_peaks():
+    for name in SCHEDULES:
+        sched = S.build(name, 4, 8)
+        occ = sched.occupancy_trace()
+        assert occ.shape == (4, sched.num_ticks)
+        assert list(occ.max(axis=1)) == list(sched.peak_in_flight)
+        assert (occ[:, -1] == 0).all()  # fully drained
+
+
+def test_unknown_schedule_rejected():
+    with pytest.raises(ValueError):
+        S.build("interleaved-not-yet", 4, 8)
