@@ -1,0 +1,230 @@
+"""Padded-capacity vs ragged expert-GEMM dispatch microbench.
+
+For routing loads from uniform to heavily Zipf-skewed (the paper's §II-A
+imbalanced skinny-GEMM regime), measures what each dispatch mode *issues*
+to the MXU versus what the router actually routed:
+
+* **capacity** (GShard/Tutel (E, C, d) buffers, C = ceil(T·k/E · cf)):
+  issued rows = E·C regardless of load — underfilled experts multiply
+  zeros, overflowing experts drop tokens;
+* **ragged** (sort-based dropless dispatch + ragged grouped GEMM): issued
+  rows = occupied row tiles only — the waste is bounded by the masked tile
+  tails (< bm rows per occupied expert) and nothing is dropped.
+
+Optionally (--time) wall-clocks the two dispatch *index pipelines* (the
+O(T·k·E) one-hot-cumsum vs the O(T·k·log) argsort) under jit on this host.
+
+Emits ``BENCH_moe_gemm.json``:
+
+    PYTHONPATH=src python benchmarks/moe_gemm_bench.py [--time] [--out F]
+    PYTHONPATH=src python benchmarks/moe_gemm_bench.py --smoke \
+        --check-schema BENCH_moe_gemm.json    # CI schema-rot gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_OUT = ROOT / "BENCH_moe_gemm.json"
+
+# Skew levels: (name, zipf exponent); None = uniform, inf = all-to-one.
+SKEWS = [
+    ("uniform", None),
+    ("zipf_1.05", 1.05),
+    ("zipf_1.2", 1.2),
+    ("zipf_1.5", 1.5),
+    ("all_to_one", float("inf")),
+]
+
+
+def sample_routing(T: int, k: int, E: int, alpha, seed: int) -> np.ndarray:
+    """(T, k) expert assignments with k distinct experts per token, drawn
+    from a Zipf(alpha) expert popularity (None = uniform, inf = the k
+    hottest experts take everything)."""
+    rng = np.random.default_rng(seed)
+    if alpha is None:
+        p = np.ones(E)
+    elif math.isinf(alpha):
+        top = np.zeros((T, k), np.int64)
+        top[:] = np.arange(k)  # degenerate: all tokens -> first k experts
+        return top
+    else:
+        p = 1.0 / np.arange(1, E + 1) ** alpha
+        rng.shuffle(p)
+    p = p / p.sum()
+    # Gumbel top-k: distinct experts per token, marginals follow p.
+    g = rng.gumbel(size=(T, E)) + np.log(p)[None, :]
+    return np.argpartition(-g, k - 1, axis=1)[:, :k]
+
+
+def ragged_issued_rows(counts: np.ndarray, bm: int) -> int:
+    """Rows the ragged kernel issues: occupied (tile, expert) work items x
+    bm — the exact work-item math of kernels.moe_gemm.ragged_metadata."""
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+    first = offsets[:-1] // bm
+    last = np.where(counts > 0, (offsets[1:] - 1) // bm, first - 1)
+    return int(np.maximum(last - first + 1, 0).sum()) * bm
+
+
+def measure_skew(T: int, k: int, E: int, cf: float, bm: int, alpha,
+                 seed: int) -> dict:
+    top = sample_routing(T, k, E, alpha, seed)
+    counts = np.bincount(top.reshape(-1), minlength=E)
+    routed = T * k
+    C = math.ceil(routed / E * cf)
+    kept_cap = int(np.minimum(counts, C).sum())
+    issued_cap = E * C
+    issued_rag = ragged_issued_rows(counts, bm)
+    return {
+        "load_max_over_mean": float(counts.max() / max(counts.mean(), 1e-9)),
+        "experts_empty": int((counts == 0).sum()),
+        "routed_rows": routed,
+        "capacity": {
+            "issued_rows": issued_cap,
+            "kept_rows": kept_cap,
+            "wasted_flop_fraction": 1.0 - kept_cap / issued_cap,
+            "drop_rate": 1.0 - kept_cap / routed,
+        },
+        "ragged": {
+            "issued_rows": issued_rag,
+            "kept_rows": routed,
+            "wasted_flop_fraction": 1.0 - routed / issued_rag,
+            "drop_rate": 0.0,
+        },
+        "dispatch_time_us": {"capacity": None, "ragged": None},
+    }
+
+
+def time_dispatch(T: int, k: int, E: int, cf: float, top: np.ndarray) -> dict:
+    """Wall-clock the jit'd slot-assignment pipelines (not the GEMMs):
+    one-hot-cumsum (capacity) vs argsort (ragged) on this host."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import moe as moe_lib
+
+    capacity = math.ceil(T * k / E * cf)
+    top_i = jnp.asarray(top, jnp.int32)
+    flat_e = top_i.reshape(-1)
+
+    cap = jax.jit(
+        lambda fe: moe_lib._dispatch_indices(
+            fe.reshape(T, k), jnp.ones((T, k), jnp.float32), E, capacity
+        )[:3]
+    )
+    rag = jax.jit(lambda fe: moe_lib._sort_dispatch(fe, E))
+
+    def bench(fn):
+        out = fn(flat_e)
+        jax.block_until_ready(out)
+        n, t0 = 0, time.perf_counter()
+        while time.perf_counter() - t0 < 0.5:
+            jax.block_until_ready(fn(flat_e))
+            n += 1
+        return (time.perf_counter() - t0) / n * 1e6
+
+    return {"capacity": bench(cap), "ragged": bench(rag)}
+
+
+def run(T: int, k: int, E: int, cf: float, bm: int, seed: int,
+        timed: bool) -> dict:
+    out = {
+        "meta": {
+            "tokens": T, "top_k": k, "experts": E, "capacity_factor": cf,
+            "ragged_tile_rows": bm, "seed": seed,
+            "timed": timed,
+        },
+        "skews": [],
+    }
+    for name, alpha in SKEWS:
+        rec = {"name": name, "zipf_alpha": None if alpha is None else alpha}
+        rec.update(measure_skew(T, k, E, cf, bm, alpha, seed))
+        if timed:
+            top = sample_routing(T, k, E, alpha, seed)
+            rec["dispatch_time_us"] = time_dispatch(T, k, E, cf, top)
+        out["skews"].append(rec)
+    # Headline: wherever capacity wastes >= 30%, how bad is ragged?
+    hot = [s for s in out["skews"]
+           if s["capacity"]["wasted_flop_fraction"] >= 0.30]
+    out["summary"] = {
+        "capacity_waste_max": max(
+            s["capacity"]["wasted_flop_fraction"] for s in out["skews"]
+        ),
+        "ragged_waste_max": max(
+            s["ragged"]["wasted_flop_fraction"] for s in out["skews"]
+        ),
+        "ragged_waste_where_capacity_ge_30pct": (
+            max(s["ragged"]["wasted_flop_fraction"] for s in hot)
+            if hot else None
+        ),
+        "capacity_drop_max": max(
+            s["capacity"]["drop_rate"] for s in out["skews"]
+        ),
+        "ragged_drop_max": 0.0,
+    }
+    return out
+
+
+def schema(node):
+    """Recursive key structure (dict keys; list element schema)."""
+    if isinstance(node, dict):
+        return {k: schema(v) for k, v in sorted(node.items())}
+    if isinstance(node, list):
+        return [schema(node[0])] if node else []
+    return "leaf"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=131072)
+    ap.add_argument("--top-k", type=int, default=2)
+    ap.add_argument("--experts", type=int, default=64)
+    ap.add_argument("--cf", type=float, default=1.25)
+    ap.add_argument("--bm", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--time", action="store_true",
+                    help="also wall-clock the jit'd dispatch pipelines")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, no timing — schema/CI mode")
+    ap.add_argument("--out", type=Path, default=None)
+    ap.add_argument("--check-schema", type=Path, default=None,
+                    help="compare the emitted JSON's key structure against "
+                         "this committed file; exit 1 on drift")
+    args = ap.parse_args()
+
+    if args.smoke:
+        rec = run(T=2048, k=2, E=8, cf=args.cf, bm=32, seed=args.seed,
+                  timed=False)
+    else:
+        rec = run(T=args.tokens, k=args.top_k, E=args.experts, cf=args.cf,
+                  bm=args.bm, seed=args.seed, timed=args.time)
+
+    if args.check_schema:
+        committed = json.loads(args.check_schema.read_text())
+        if schema(committed) != schema(rec):
+            print(f"SCHEMA DRIFT: {args.check_schema} no longer matches "
+                  f"what this bench emits — regenerate and commit it.",
+                  file=sys.stderr)
+            sys.exit(1)
+        print(f"schema ok: {args.check_schema}")
+        return
+
+    out = args.out or DEFAULT_OUT
+    out.write_text(json.dumps(rec, indent=1) + "\n")
+    s = rec["summary"]
+    print(f"wrote {out}")
+    print(f"capacity waste max {s['capacity_waste_max']:.1%} "
+          f"(drop max {s['capacity_drop_max']:.1%}); "
+          f"ragged waste max {s['ragged_waste_max']:.1%} (drop 0)")
+
+
+if __name__ == "__main__":
+    main()

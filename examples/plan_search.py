@@ -48,8 +48,9 @@ def main():
     if ranked:
         best = ranked[0]
         print(f"\nchosen: PP={best.PP} EP={best.EP} DP={best.DP} "
-              f"schedule={best.schedule} "
-              f"(executor binds this via MeshPlan.schedule)")
+              f"schedule={best.schedule} dispatch={best.dispatch} "
+              f"(executor binds the schedule via MeshPlan.schedule and the "
+              f"dispatch via MoECfg.dispatch)")
     else:
         print("  NONE — increase chips, enable ZeRO (--zero world), or "
               "reduce batch.")

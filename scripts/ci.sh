@@ -14,4 +14,14 @@ cd "$(dirname "$0")/.."
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Kernel-focused stage: the Pallas kernels (interpret mode on CPU) and the
+# MoE dispatch property suite, run first so a kernel regression fails fast.
+python -m pytest tests/test_kernels.py tests/test_moe_dispatch.py \
+    tests/test_moe_properties.py -q
+
+# Bench schema-rot gate: the smoke bench must still emit the exact key
+# structure of the committed BENCH_moe_gemm.json (regenerate + commit it
+# whenever the bench schema intentionally changes).
+python benchmarks/moe_gemm_bench.py --smoke --check-schema BENCH_moe_gemm.json
+
 exec python -m pytest -x -q "$@"

@@ -23,6 +23,14 @@ from typing import Optional, Sequence, Tuple
 SCHEDULES: Tuple[str, ...] = ("gpipe", "1f1b")
 DEFAULT_SCHEDULE = "1f1b"
 
+# Expert dispatch modes the system understands end-to-end: the MoE layer
+# executes them (``repro.models.moe``), the resource model prices them
+# (capacity pays the cf padding-FLOPs tax and drops overflow tokens; ragged
+# pays the sort + tile-metadata overhead but is dropless), and the planner
+# enumerates them per Strategy.  Single source of truth, like SCHEDULES.
+DISPATCH_MODES: Tuple[str, ...] = ("capacity", "ragged")
+DEFAULT_DISPATCH = "capacity"
+
 # ---------------------------------------------------------------------------
 # Sub-configs
 # ---------------------------------------------------------------------------
@@ -40,6 +48,16 @@ class MoECfg:
     aux_loss_coef: float = 0.01  # Switch-style load balancing loss
     z_loss_coef: float = 1e-3  # router z-loss
     router_dtype: str = "float32"
+    # Expert dispatch: "capacity" = GShard/Tutel (E, C, d) zero-padded
+    # buffers, overflow dropped; "ragged" = MegaBlocks-style sort-based
+    # dropless dispatch (sorted rows + per-expert offsets, ragged grouped
+    # GEMM).  Under EP, ragged still bounds the a2a payload at the
+    # capacity-mode wire size, but budgets rows per *rank* instead of per
+    # expert, which strictly dominates per-expert capacity on kept tokens.
+    dispatch: str = DEFAULT_DISPATCH
+
+    def __post_init__(self):
+        assert self.dispatch in DISPATCH_MODES, self.dispatch
 
 
 @dataclass(frozen=True)

@@ -13,7 +13,13 @@ import math
 from dataclasses import dataclass, replace
 from typing import Iterable, List, Optional, Tuple
 
-from repro.configs.base import ArchConfig, DEFAULT_SCHEDULE, SCHEDULES
+from repro.configs.base import (
+    ArchConfig,
+    DEFAULT_DISPATCH,
+    DEFAULT_SCHEDULE,
+    DISPATCH_MODES,
+    SCHEDULES,
+)
 from repro.core import resource_model as rm
 from repro.core.platform import Platform
 
@@ -28,6 +34,9 @@ class Strategy:
     checkpoint_activations: bool
     bytes_per_param: int  # 16 = fp32 master+moments; 10 = bf16 moments
     estimate: rm.Estimate
+    # Expert dispatch mode (capacity padding tax vs ragged sort overhead) —
+    # ranked per config like the pipeline schedule.
+    dispatch: str = DEFAULT_DISPATCH
 
     @property
     def world(self) -> int:
@@ -38,12 +47,14 @@ class Strategy:
         return (
             f"PP={self.PP:<3d} EP={self.EP:<3d} DP={self.DP:<3d} "
             f"alpha={self.alpha} sched={self.schedule:<5s} "
+            f"disp={self.dispatch:<8s} "
             f"ckpt={int(self.checkpoint_activations)} "
             f"Bp={self.bytes_per_param:<2d} "
             f"mem0={e.mem_stage0/1e9:7.1f}GB mfu={e.mfu*100:5.1f}% "
             f"t_step={e.t_step*1e3:8.1f}ms "
             f"(comp={e.t_compute*1e3:.1f} a2a={e.t_a2a*1e3:.1f} "
             f"p2p={e.t_p2p*1e3:.1f} dp={e.t_dp_grad*1e3:.1f} "
+            f"disp={e.t_dispatch*1e3:.1f} drop={e.drop_rate:.2f} "
             f"bubble={e.bubble_fraction:.2f})"
         )
 
@@ -88,52 +99,64 @@ def valid_strategies(
             # Schedules only differ in executed memory profile (Eq 3 vs 4);
             # a PP=1 "pipeline" is degenerate, keep the single default entry.
             schedules = SCHEDULES if PP > 1 else (DEFAULT_SCHEDULE,)
+            # MoE archs rank both dispatch modes (capacity padding tax +
+            # drops vs ragged sort overhead); dense archs have no dispatch.
+            dispatches = DISPATCH_MODES if shape.E else (DEFAULT_DISPATCH,)
             for alpha in alphas:
                 M = alpha * PP
                 if batch % (DP * M) or batch // (DP * M) == 0:
                     continue
                 for schedule in schedules:
-                    for ckpt in (False, True):
-                        # 16 B/param = paper's fp16+fp32-master policy;
-                        # 12 B = our executor (fp32 master+moments, transient
-                        # bf16 compute copies); 8 B = bf16 moments fallback.
-                        for bpp in (16, 12, 8):
-                            t = rm.TrainSetup(
-                                b=batch,
-                                s=seq,
-                                PP=PP,
-                                EP=EP,
-                                DP=DP,
-                                alpha=alpha,
-                                schedule=schedule,
-                                checkpoint_activations=ckpt,
-                                bytes_per_param=bpp,
-                                zero=zero,
-                                imbalance=imbalance,
-                            )
-                            est = rm.estimate(
-                                shape, t, platform,
-                                overlap_fraction=overlap_fraction,
-                            )
-                            if not est.mem_ok:  # Eq 11
+                    for dispatch in dispatches:
+                        for ckpt in (False, True):
+                            # 16 B/param = paper's fp16+fp32-master policy;
+                            # 12 B = our executor (fp32 master+moments,
+                            # transient bf16 compute copies); 8 B = bf16
+                            # moments fallback.
+                            for bpp in (16, 12, 8):
+                                t = rm.TrainSetup(
+                                    b=batch,
+                                    s=seq,
+                                    PP=PP,
+                                    EP=EP,
+                                    DP=DP,
+                                    alpha=alpha,
+                                    schedule=schedule,
+                                    checkpoint_activations=ckpt,
+                                    bytes_per_param=bpp,
+                                    zero=zero,
+                                    imbalance=imbalance,
+                                    dispatch=dispatch,
+                                )
+                                est = rm.estimate(
+                                    shape, t, platform,
+                                    overlap_fraction=overlap_fraction,
+                                )
+                                if not est.mem_ok:  # Eq 11
+                                    continue
+                                out.append(
+                                    Strategy(PP, EP, DP, alpha, schedule,
+                                             ckpt, bpp, est,
+                                             dispatch=dispatch)
+                                )
+                                break  # cheapest fitting policy wins
+                            else:
                                 continue
-                            out.append(
-                                Strategy(PP, EP, DP, alpha, schedule, ckpt,
-                                         bpp, est)
-                            )
-                            break  # cheapest fitting policy wins this cfg
-                        else:
-                            continue
-                        break
+                            break
     return out
 
 
 def rank_strategies(strategies: List[Strategy]) -> List[Strategy]:
     """Rank by estimated MFU; among MFU ties (e.g. GPipe vs 1F1B of the same
-    partition — identical bubble, different residency) prefer the smaller
-    stage-0 peak, which is how 1F1B wins whenever both fit."""
+    partition — identical bubble, different residency) prefer the lower
+    drop rate (dropless ragged beats capacity at equal speed — dropped
+    tokens are silent quality loss, not time), then the smaller stage-0
+    peak, which is how 1F1B wins whenever both fit."""
     return sorted(
-        strategies, key=lambda s: (-s.estimate.mfu, s.estimate.mem_stage0)
+        strategies,
+        key=lambda s: (
+            -s.estimate.mfu, s.estimate.drop_rate, s.estimate.mem_stage0
+        ),
     )
 
 

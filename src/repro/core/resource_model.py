@@ -14,8 +14,19 @@ import math
 from dataclasses import dataclass, field, replace
 from typing import Dict, Optional
 
-from repro.configs.base import ArchConfig, DEFAULT_SCHEDULE, SCHEDULES
+from repro.configs.base import (
+    ArchConfig,
+    DEFAULT_DISPATCH,
+    DEFAULT_SCHEDULE,
+    DISPATCH_MODES,
+    SCHEDULES,
+)
 from repro.core.platform import Platform
+
+# Row-tile granularity of the ragged grouped-GEMM kernel
+# (kernels/moe_gemm bm): the only padding the ragged dispatch pays is the
+# masked tile tails, < bm rows per occupied expert.
+RAGGED_TILE_ROWS = 128
 
 
 @dataclass(frozen=True)
@@ -35,6 +46,7 @@ class ModelShape:
     d_ffn_dense: int
     vocab: int
     n_attn: int = -1  # attention mixers (SSM archs have fewer); -1 -> L
+    cf: float = 1.25  # capacity factor (prices the padding-FLOPs tax)
 
     def __post_init__(self):
         if self.n_attn < 0:
@@ -56,6 +68,7 @@ class ModelShape:
             d_ffn_dense=a.d_ff,
             vocab=a.vocab_size,
             n_attn=a.num_attn_layers,
+            cf=a.moe.capacity_factor if a.moe else 1.25,
         )
 
     # -- parameter counts (paper Table III) ---------------------------------
@@ -115,6 +128,11 @@ class TrainSetup:
     # Calibration (paper §VI: skewed routing keeps GPUs underutilized; Fig 9)
     imbalance: float = 1.0  # expert-compute inflation from load skew
     step_overhead: float = 0.0  # fixed per-step host/dataloader seconds
+    # Expert dispatch mode (repro.models.moe): "capacity" pays the cf
+    # padding-FLOPs tax and drops overflow under skew; "ragged" pays the
+    # sort + tile-metadata overhead but multiplies no zeros and drops
+    # nothing.
+    dispatch: str = DEFAULT_DISPATCH
 
     @property
     def M(self) -> int:
@@ -127,6 +145,70 @@ class TrainSetup:
     @property
     def P(self) -> int:
         return self.PP * self.EP * self.DP
+
+
+# ---------------------------------------------------------------------------
+# Dispatch-mode costs (capacity padding tax vs ragged sort overhead)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DispatchCosts:
+    """What an expert-dispatch mode costs on top of the routed math.
+
+    flops_factor — issued / useful routed-expert FLOPs (capacity multiplies
+    zeros up to cf; ragged only pays the masked tile tails).
+    drop_rate — expected fraction of routed assignments dropped (capacity
+    overflow under skew; ragged is dropless).
+    act_factor — expert activation-buffer inflation ((E, C, d) padding vs
+    the exact sorted rows).
+    bytes_per_layer — per-rank dispatch bookkeeping HBM traffic per MoE
+    layer per step (one-hot-cumsum position matrix vs argsort + permute).
+    """
+
+    flops_factor: float
+    drop_rate: float
+    act_factor: float
+    bytes_per_layer: float
+
+
+def dispatch_costs(m: ModelShape, t: TrainSetup) -> DispatchCosts:
+    assert t.dispatch in DISPATCH_MODES, t.dispatch
+    if m.E == 0:
+        return DispatchCosts(1.0, 0.0, 1.0, 0.0)
+    # Routed rows handled per rank per step (all microbatches).
+    rows = t.b * t.s * m.k / (t.DP * t.EP)
+    if t.dispatch == "capacity":
+        # The (E, C, d) buffer holds cf x the routed rows; every padded row
+        # is multiplied through all three GEMMs.  Overflow beyond C drops:
+        # with load skew `imbalance` (max/mean expert load) the hottest
+        # experts overflow once imbalance > cf.
+        return DispatchCosts(
+            flops_factor=m.cf,
+            drop_rate=max(0.0, 1.0 - m.cf / max(t.imbalance, 1e-9)),
+            act_factor=m.cf,
+            # one-hot (rows x E) int32 position matrix: materialize,
+            # cumsum, gather (~3 passes).
+            bytes_per_layer=3.0 * rows * m.E * 4.0,
+        )
+    # Ragged: the only padding is the masked tail of each expert's last
+    # row tile (< bm rows per occupied expert, straddle revisits included).
+    # Each rank runs the ragged GEMM over its E/EP local experts.
+    experts_local = max(m.E / t.EP, 1.0)
+    waste = min(
+        1.0, experts_local * RAGGED_TILE_ROWS / (2.0 * max(rows, 1.0))
+    )
+    return DispatchCosts(
+        flops_factor=1.0 + waste,
+        drop_rate=0.0,
+        act_factor=1.0,
+        # argsort passes over (key, payload-index) pairs + the gather/
+        # scatter permutation of the row payload itself.
+        bytes_per_layer=(
+            rows * 8.0 * max(math.log2(max(rows, 2.0)), 1.0)
+            + 2.0 * rows * m.d_model * t.bytes_act
+        ),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -143,12 +225,15 @@ def _attn_act_per_layer(m: ModelShape, t: TrainSetup, b: int) -> float:
 
 
 def _expert_act_per_layer(m: ModelShape, t: TrainSetup, b: int, EP: int) -> float:
-    """Paper: 2 * bsk/EP * (3 d_ffn + d_model) bytes."""
+    """Paper: 2 * bsk/EP * (3 d_ffn + d_model) bytes — scaled by the
+    dispatch mode's buffer inflation (capacity holds cf x the routed rows
+    as zero padding; ragged holds exactly the sorted rows)."""
     if m.E == 0:
         # dense FFN activations: up+gate+down inputs ~ (2*n_mat-? ) use
         # bytes_act * b*s*(n_mat*d_ffn + d_model)
         return t.bytes_act * b * t.s * (m.n_mat * m.d_ffn_dense + m.d_model)
-    return t.bytes_act * (b * t.s * m.k / EP) * (
+    act_factor = dispatch_costs(m, t).act_factor
+    return t.bytes_act * (b * t.s * m.k / EP) * act_factor * (
         m.n_mat * m.d_ffn_moe + m.d_model
     )
 
@@ -311,7 +396,13 @@ def t_compute(m: ModelShape, t: TrainSetup, platform: Platform) -> float:
         m.n_attn * m.attn_params_per_layer + 2 * m.vocab * m.d_model
     ) * tokens + 12.0 * m.n_attn * t.b * t.s * t.s * m.H * m.d_h
     dense_flops = 6.0 * (m.L - m.L_moe) * m.dense_ffn_params * tokens
-    moe_flops = 6.0 * m.L_moe * (m.k + m.E_s) * m.expert_params * tokens
+    # Routed experts pay the dispatch mode's padding tax (capacity: cf x
+    # zeros through the MXU; ragged: masked tile tails only); the
+    # always-active shared experts are densely batched either way.
+    disp = dispatch_costs(m, t)
+    moe_flops = 6.0 * m.L_moe * (
+        m.k * disp.flops_factor + m.E_s
+    ) * m.expert_params * tokens
 
     # per-expert GEMM shape: (tokens*k/E per device-expert) x d x d_ffn
     if m.E:
@@ -348,6 +439,10 @@ class Estimate:
     mfu: float
     mem_stage0: float
     mem_ok: bool
+    # Dispatch-mode accounting (see dispatch_costs)
+    t_dispatch: float = 0.0
+    drop_rate: float = 0.0
+    moe_flops_factor: float = 1.0
 
 
 def estimate(
@@ -382,9 +477,21 @@ def estimate(
     else:
         tdp = 0.0
 
+    # Dispatch bookkeeping (slot assignment / sort + permute) is per-rank
+    # HBM-bound work, fwd+bwd, for each hosted MoE layer.
+    disp = dispatch_costs(m, t)
+    t_disp = (
+        2 * disp.bytes_per_layer * (m.L_moe / t.PP) / platform.hbm_bw
+        if m.E
+        else 0.0
+    )
+
     bubble = (t.PP - 1) / t.M if t.PP > 1 else 0.0
     exposed = (ta2a + tp2p + tdp) * (1.0 - overlap_fraction)
-    t_step = (tc * t.imbalance + exposed) * (1 + bubble) + t.step_overhead
+    t_step = (
+        (tc * t.imbalance + t_disp + exposed) * (1 + bubble)
+        + t.step_overhead
+    )
 
     model_flops = flops_per_step(m, t)
     mfu = model_flops / (platform.peak_flops * t.P * t_step)
@@ -400,4 +507,7 @@ def estimate(
         mfu=mfu,
         mem_stage0=mem0,
         mem_ok=mem0 <= platform.hbm_bytes,
+        t_dispatch=t_disp,
+        drop_rate=disp.drop_rate,
+        moe_flops_factor=disp.flops_factor,
     )

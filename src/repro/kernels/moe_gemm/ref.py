@@ -1,4 +1,11 @@
-"""Pure-jnp oracle for the grouped expert GEMM / grouped FFN."""
+"""Pure-jnp oracles for the grouped expert GEMM / grouped FFN.
+
+Both the padded (E, C, d) capacity layout and the ragged sorted-rows +
+offsets layout have an oracle here.  The ragged oracles gather the full
+per-row expert weight (O(T·d·f) temp) — they exist for correctness
+reference and as the XLA fallback of the ragged dispatch path on shapes
+where that temp is acceptable; the Pallas kernels are the perf path.
+"""
 
 from __future__ import annotations
 
@@ -14,11 +21,61 @@ def grouped_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
 
 
 def grouped_ffn(tokens, w_up, w_gate, w_down, activation: str = "swiglu"):
-    """tokens: (E, C, d) -> (E, C, d); the MoE expert-FFN oracle."""
+    """tokens: (E, C, d) -> (E, C, d); the MoE expert-FFN oracle.
+
+    Mirrors the kernel path's precision contract: the hidden activation
+    stays fp32 until after the down-projection.
+    """
     if activation == "swiglu":
         gate = grouped_matmul(tokens, w_gate)
         up = grouped_matmul(tokens, w_up)
-        h = (jax.nn.silu(gate) * up).astype(tokens.dtype)
+        h = jax.nn.silu(gate) * up
     else:
-        h = jax.nn.gelu(grouped_matmul(tokens, w_up)).astype(tokens.dtype)
+        h = jax.nn.gelu(grouped_matmul(tokens, w_up))
     return grouped_matmul(h, w_down).astype(tokens.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Ragged (sorted rows + offsets) oracles
+# ---------------------------------------------------------------------------
+
+
+def row_experts(offsets: jax.Array, T: int) -> jax.Array:
+    """Expert id per row of a sorted ragged layout; rows >= offsets[-1]
+    (padding) map to E (one past the last expert)."""
+    return jnp.searchsorted(
+        offsets[1:], jnp.arange(T, dtype=offsets.dtype), side="right"
+    )
+
+
+def ragged_matmul(x: jax.Array, w: jax.Array, offsets: jax.Array):
+    """out[t] = x[t] @ w[expert_of(t)]; zero for padding rows."""
+    T = x.shape[0]
+    E = w.shape[0]
+    e = jnp.minimum(row_experts(offsets, T), E - 1)
+    out = jnp.einsum(
+        "tk,tkn->tn", x, w[e], preferred_element_type=jnp.float32
+    )
+    own = (jnp.arange(T, dtype=offsets.dtype) < offsets[-1])[:, None]
+    return jnp.where(own, out, 0.0).astype(x.dtype)
+
+
+def ragged_ffn(tokens, w_up, w_gate, w_down, offsets,
+               activation: str = "swiglu"):
+    """Dropless grouped FFN oracle over sorted rows; differentiable, so it
+    doubles as the jax.grad reference for the custom-VJP kernel path."""
+    T = tokens.shape[0]
+    E = w_up.shape[0]
+    e = jnp.minimum(row_experts(offsets, T), E - 1)
+    x32 = tokens.astype(jnp.float32)
+    if activation == "swiglu":
+        gate = jnp.einsum("tk,tkf->tf", x32, w_gate[e].astype(jnp.float32))
+        up = jnp.einsum("tk,tkf->tf", x32, w_up[e].astype(jnp.float32))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(
+            jnp.einsum("tk,tkf->tf", x32, w_up[e].astype(jnp.float32))
+        )
+    out = jnp.einsum("tf,tfd->td", h, w_down[e].astype(jnp.float32))
+    own = (jnp.arange(T, dtype=offsets.dtype) < offsets[-1])[:, None]
+    return jnp.where(own, out, 0.0).astype(tokens.dtype)

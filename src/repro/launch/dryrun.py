@@ -42,6 +42,46 @@ def _cell_name(arch, shape, multi_pod, pipeline, tag=""):
     return f"{arch}--{shape}--{mesh}{pipe}{tag}"
 
 
+def _dispatch_model_record(arch, shape, chips: int, plan) -> dict:
+    """Resource-model view of the cell's MoE dispatch: issued vs routed
+    expert FLOPs, wasted fraction, drop rate and the expert activation
+    bytes, for both dispatch modes (repro.core.resource_model)."""
+    from repro.configs.base import DISPATCH_MODES
+    from repro.core import resource_model as rm
+    from repro.core.platform import TPU_V5E
+
+    if arch.moe is None:
+        return {}
+    m = rm.ModelShape.from_arch(arch)
+    PP = max(plan.pp, 1)
+    EP = max(plan.ep, 1)
+    DP = max(chips // (PP * EP), 1)  # tp folded into the replica count
+    out = {}
+    for mode in DISPATCH_MODES:
+        t = rm.TrainSetup(
+            b=shape.global_batch, s=shape.seq_len, PP=PP, EP=EP, DP=DP,
+            dispatch=mode, zero="world",
+        )
+        est = rm.estimate(m, t, TPU_V5E)
+        disp = rm.dispatch_costs(m, t)
+        routed = 6.0 * m.L_moe * m.k * m.expert_params * t.b * t.s
+        out[mode] = {
+            "moe_flops_routed": routed,
+            "moe_flops_issued": routed * disp.flops_factor,
+            "wasted_flop_fraction": 1.0 - 1.0 / disp.flops_factor,
+            "drop_rate": disp.drop_rate,
+            "expert_act_bytes_per_layer": rm._expert_act_per_layer(
+                m, t, t.b / t.DP, t.EP
+            ),
+            "dispatch_bytes_per_layer": disp.bytes_per_layer,
+            "t_step_s": est.t_step,
+            "t_dispatch_s": est.t_dispatch,
+            "mem_stage0_bytes": est.mem_stage0,
+        }
+    out["selected"] = arch.moe.dispatch
+    return out
+
+
 def choose_memory_policy(arch, shape, chips: int):
     """Planner-informed defaults so the full config fits 16 GB/chip."""
     params = arch.total_params()
@@ -61,9 +101,12 @@ def run_cell(
     hierarchical_a2a: bool = False,
     compress_p2p: bool = False,
     remat: str = None,
+    dispatch: str = None,
     tag: str = "",
     save: bool = True,
 ) -> dict:
+    import dataclasses
+
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -78,6 +121,10 @@ def run_cell(
 
     arch = get_arch(arch_name)
     shape = SHAPES[shape_name]
+    if dispatch and arch.moe is not None:
+        arch = arch.replace(
+            moe=dataclasses.replace(arch.moe, dispatch=dispatch)
+        )
     cell = _cell_name(arch_name, shape_name, multi_pod, pipeline, tag)
     record = {
         "cell": cell,
@@ -88,6 +135,7 @@ def run_cell(
         "schedule": schedule,
         "hierarchical_a2a": hierarchical_a2a,
         "compress_p2p": compress_p2p,
+        "dispatch": arch.moe.dispatch if arch.moe else None,
     }
 
     ok, why = shape_applicable(arch, shape)
@@ -132,6 +180,12 @@ def run_cell(
             schedule=plan.schedule if plan.pp > 1 else None,
             optimizer_dtype=opt_dtype,
             remat=plan.remat,
+        )
+        # Dispatch-aware analytical FLOPs/memory for this cell (both modes,
+        # so the padding-tax / sort-overhead tradeoff is visible next to
+        # the compiled HLO numbers).
+        record["dispatch_model"] = _dispatch_model_record(
+            arch, shape, chips, plan
         )
 
         with plan.mesh:
@@ -321,6 +375,9 @@ def main():
     ap.add_argument("--hierarchical-a2a", action="store_true")
     ap.add_argument("--compress-p2p", action="store_true")
     ap.add_argument("--remat", default=None)
+    ap.add_argument("--dispatch", default=None,
+                    help="MoE expert dispatch (capacity|ragged); default: "
+                         "the arch config's mode")
     ap.add_argument("--tag", default="")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--jobs", type=int, default=3)
@@ -339,6 +396,7 @@ def main():
         hierarchical_a2a=args.hierarchical_a2a,
         compress_p2p=args.compress_p2p,
         remat=args.remat,
+        dispatch=args.dispatch,
         tag=args.tag,
     )
     status = rec.get("status")

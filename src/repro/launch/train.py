@@ -37,6 +37,9 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--corpus", default=None, help="memmap token corpus path")
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--dispatch", default=None,
+                    help="MoE expert dispatch (capacity|ragged); default: "
+                         "the planner's ranked choice")
     ap.add_argument("--migrate-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -73,6 +76,21 @@ def main():
     schedule = args.schedule or (
         best.schedule if best is not None else DEFAULT_SCHEDULE
     )
+
+    # Same for the expert dispatch: flag wins, else the planner's choice
+    # binds into MoECfg.dispatch (the MoE layer executes whatever the
+    # config says — capacity buffers or the sort-based ragged path).
+    if arch.moe is not None:
+        import dataclasses
+
+        dispatch = args.dispatch or (
+            best.dispatch if best is not None else arch.moe.dispatch
+        )
+        if dispatch != arch.moe.dispatch:
+            arch = arch.replace(
+                moe=dataclasses.replace(arch.moe, dispatch=dispatch)
+            )
+        print(f"[trainer] moe dispatch: {arch.moe.dispatch}")
 
     n_dev = len(jax.devices())
     if args.mesh:

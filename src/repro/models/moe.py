@@ -19,11 +19,22 @@ GSPMD heuristics:
   hierarchical two-phase schedule from ``repro.core.halo`` instead of the
   flat collective.
 
-Capacity-based dispatch (GShard/Tutel-style, static shapes): each device
-builds an (E, C, d) buffer; slot overflow beyond C = ceil(T*k/E * cf) is
-dropped (the paper's zero-padding baseline).  Everything is differentiable;
-expert-weight gradients reduce over the data axis through the gather
-transpose.
+Two dispatch modes (``MoECfg.dispatch``):
+
+* **capacity** (GShard/Tutel-style, static shapes): each device builds an
+  (E, C, d) buffer; slot overflow beyond C = ceil(T*k/E * cf) is dropped
+  (the paper's zero-padding baseline — §II-A's wasted skinny-GEMM cycles).
+* **ragged** (MegaBlocks-style, dropless): ``argsort`` the flat expert
+  assignments into contiguous per-expert row segments, run the ragged
+  grouped GEMM over exactly the occupied rows (``kernels.moe_gemm``), and
+  combine through the inverse permutation.  Locally this drops nothing and
+  multiplies no zeros; under EP the a2a payload is the sorted rows + local
+  expert ids at the capacity-mode wire size, budgeted per destination
+  *rank* (E_l*C rows) rather than per expert — every token kept by
+  per-expert capacity is also kept here, and usually more.
+
+Everything is differentiable; expert-weight gradients reduce over the data
+axis through the gather transpose.
 """
 
 from __future__ import annotations
@@ -112,20 +123,150 @@ def _dispatch_indices(top_i, top_w, E: int, capacity: int):
 
 
 def _expert_ffn(tokens, w_up, w_gate, w_down, activation: str):
-    """Grouped expert GEMM. tokens: (E_l, C_r, d)."""
+    """Grouped expert GEMM. tokens: (E_l, C_r, d).
+
+    fp32 accumulation (preferred_element_type) so the bf16 XLA baseline is
+    numerically comparable with the Pallas kernels, which accumulate in
+    fp32 natively; only the final down-projection casts back.
+    """
+    f32 = jnp.float32
     if activation == "swiglu":
-        gate = jnp.einsum("ecd,edf->ecf", tokens, w_gate)
-        up = jnp.einsum("ecd,edf->ecf", tokens, w_up)
+        gate = jnp.einsum("ecd,edf->ecf", tokens, w_gate,
+                          preferred_element_type=f32)
+        up = jnp.einsum("ecd,edf->ecf", tokens, w_up,
+                        preferred_element_type=f32)
         h = jax.nn.silu(gate) * up
     else:
-        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", tokens, w_up))
-    return jnp.einsum("ecf,efd->ecd", h, w_down)
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", tokens, w_up,
+                                   preferred_element_type=f32))
+    out = jnp.einsum("ecf,efd->ecd", h, w_down, preferred_element_type=f32)
+    return out.astype(tokens.dtype)
 
 
 def _expert_ffn_pallas(tokens, w_up, w_gate, w_down, activation: str):
     from repro.kernels.moe_gemm import ops as moe_ops
 
     return moe_ops.grouped_ffn(tokens, w_up, w_gate, w_down, activation)
+
+
+# -- ragged (sort-based, dropless) dispatch ---------------------------------
+
+
+def _sort_dispatch(flat_e: jax.Array, E: int):
+    """Sort-based dispatch: replaces the O(T·k·E) one-hot-cumsum slot
+    assignment with an O(T·k·log) argsort into contiguous per-expert row
+    segments.  Returns (order, inv, offsets): ``order`` permutes flat
+    (token,k) pairs into expert-sorted order, ``inv`` is its inverse, and
+    ``offsets`` (E+1,) are the per-expert prefix sums."""
+    order = jnp.argsort(flat_e)  # stable: ties keep token order
+    inv = jnp.argsort(order)
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
+    )
+    return order, inv, offsets
+
+
+def _ragged_rows_ffn(xs, w_up, w_gate, w_down, offsets, activation: str,
+                     impl: str):
+    """Grouped FFN over expert-sorted rows.  impl="pallas" runs the ragged
+    Pallas kernels (custom VJP, fp32 accumulation both directions);
+    impl="xla" runs the differentiable dense-select oracle (reference
+    semantics, O(T·d·f) weight-gather temp)."""
+    from repro.kernels.moe_gemm import ops as moe_ops
+    from repro.kernels.moe_gemm import ref as moe_ref
+
+    if impl == "pallas":
+        return moe_ops.ragged_ffn(
+            xs, w_up, w_gate, w_down, offsets, activation
+        )
+    return moe_ref.ragged_ffn(xs, w_up, w_gate, w_down, offsets, activation)
+
+
+def _moe_ragged_local(xt, top_phys, top_w, w_up, w_gate, w_down,
+                      activation: str, impl: str, E: int, k: int):
+    """Dropless single-rank MoE compute: sort → ragged FFN → inverse
+    permutation → weighted combine.  Processes every (token, k) pair —
+    no capacity, no drops, no zero-padding beyond the kernel's row tile."""
+    T, d = xt.shape
+    flat_e = top_phys.reshape(-1)
+    flat_w = top_w.reshape(-1)
+    order, inv, offsets = _sort_dispatch(flat_e, E)
+    xs = jnp.take(xt, order // k, axis=0)  # (T*k, d) expert-sorted
+    ys = _ragged_rows_ffn(xs, w_up, w_gate, w_down, offsets, activation,
+                          impl)
+    vals = jnp.take(ys, inv, axis=0)  # back to flat (token, k) order
+    keep = jnp.ones_like(flat_e, dtype=bool)
+    return _combine_expert_outputs(vals, flat_w, keep, T, k, d)
+
+
+def _moe_ragged_sharded(xt, top_phys, top_w, wu_f, wg_f, wd_f,
+                        activation: str, impl: str, moe: MoECfg,
+                        ep_size: int, capacity: int, a2a):
+    """Dropless-style EP dispatch: sorted rows + local expert ids as the
+    all-to-all payload.
+
+    Rows are argsorted by global expert id (contiguous per-destination
+    segments, experts contiguous per rank) and packed into a per-rank send
+    buffer of S = E_l*C rows — the exact wire size of capacity mode — with
+    the row budget aggregated per *rank* instead of per expert: since
+    sum_e min(c_e, C) <= min(sum_e c_e, E_l*C), every token capacity mode
+    keeps is kept here too (usually strictly more; the local path keeps
+    all).  Each receiver re-sorts the merged segments by local expert id
+    (sentinel E_l marks empty slots, sorting them to the never-computed
+    tail), runs the ragged grouped FFN over exactly the occupied rows, and
+    returns results through the inverse permutations.
+    """
+    T, d = xt.shape
+    k = moe.top_k
+    E = moe.num_experts
+    E_l = E // ep_size
+    flat_e = top_phys.reshape(-1)
+    flat_w = top_w.reshape(-1)
+    Tk = flat_e.shape[0]
+    order, inv, _ = _sort_dispatch(flat_e, E)
+    sorted_e = flat_e[order]
+    xs = jnp.take(xt, order // k, axis=0)  # (Tk, d) expert-sorted
+
+    S = E_l * capacity  # per-destination row budget == capacity wire size
+    dest = sorted_e // E_l  # nondecreasing
+    dcounts = jnp.zeros((ep_size,), jnp.int32).at[dest].add(1)
+    dstart = jnp.cumsum(dcounts) - dcounts
+    pos = jnp.arange(Tk, dtype=jnp.int32) - dstart[dest]
+    keep_s = pos < S  # rank-budget overflow (sorted order)
+    posd = jnp.where(keep_s, pos, S)  # out-of-range => scatter-dropped
+    send_x = (
+        jnp.zeros((ep_size, S, d), xt.dtype)
+        .at[dest, posd].set(xs, mode="drop")
+    )
+    lid = (sorted_e - dest * E_l).astype(jnp.int32)
+    send_id = (
+        jnp.full((ep_size, S), E_l, jnp.int32)  # sentinel: empty slot
+        .at[dest, posd].set(lid, mode="drop")
+    )
+
+    recv_x = _transport_bf16(a2a, send_x).reshape(ep_size * S, d)
+    recv_id = lax.all_to_all(
+        send_id, "ep", split_axis=0, concat_axis=0, tiled=True
+    ).reshape(ep_size * S)
+
+    order2 = jnp.argsort(recv_id)  # sentinels sort to the tail
+    counts2 = jnp.zeros((E_l + 1,), jnp.int32).at[recv_id].add(1)
+    offsets2 = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(counts2[:E_l]).astype(jnp.int32)]
+    )
+    xr = jnp.take(recv_x, order2, axis=0)
+    ys = _ragged_rows_ffn(xr, wu_f, wg_f, wd_f, offsets2, activation, impl)
+    back = (
+        jnp.zeros((ep_size * S, d), ys.dtype).at[order2].set(ys)
+        .reshape(ep_size, S, d)
+    )
+    y_buf = _transport_bf16(a2a, back)  # (ep, S, d)
+    vals = y_buf[dest, jnp.minimum(posd, S - 1)]
+    vals = jnp.where(keep_s[:, None], vals, 0.0)
+    vals = jnp.take(vals, inv, axis=0)  # back to flat (token, k) order
+    return _combine_expert_outputs(vals, flat_w, keep_s[inv], T, k, d)
 
 
 def _transport_bf16(a2a_fn, x):
@@ -164,15 +305,25 @@ def moe_ffn_local(
     top_w, top_i, probs, logits = _route(xt, params["w_router"], moe)
     aux, z, counts = _aux_losses(probs, logits, top_i, moe, ())
     top_phys = params["assignment"][top_i]
-    capacity = _capacity(T, moe)
-    flat_e, pos, keep, flat_w = _dispatch_indices(top_phys, top_w, E, capacity)
-    buf = _scatter_to_buffers(xt, flat_e, pos, keep, E, capacity)
-
-    ffn_fn = _expert_ffn_pallas if impl == "pallas" else _expert_ffn
     wg = params.get("w_gate")
-    y_buf = ffn_fn(buf, params["w_up"], wg, params["w_down"], arch.ffn_activation)
-    vals = y_buf[flat_e, pos]
-    y = _combine_expert_outputs(vals, flat_w, keep, T, moe.top_k, d)
+    if moe.dispatch == "ragged":
+        y = _moe_ragged_local(
+            xt, top_phys, top_w, params["w_up"], wg, params["w_down"],
+            arch.ffn_activation, impl, E, moe.top_k,
+        )
+    else:
+        capacity = _capacity(T, moe)
+        flat_e, pos, keep, flat_w = _dispatch_indices(
+            top_phys, top_w, E, capacity
+        )
+        buf = _scatter_to_buffers(xt, flat_e, pos, keep, E, capacity)
+
+        ffn_fn = _expert_ffn_pallas if impl == "pallas" else _expert_ffn
+        y_buf = ffn_fn(
+            buf, params["w_up"], wg, params["w_down"], arch.ffn_activation
+        )
+        vals = y_buf[flat_e, pos]
+        y = _combine_expert_outputs(vals, flat_w, keep, T, moe.top_k, d)
     y = y.reshape(b, s, d)
 
     if moe.num_shared_experts > 0:
@@ -247,8 +398,6 @@ def moe_ffn(
         top_phys = assignment[top_i]
 
         capacity = _capacity(T, moe)
-        flat_e, pos, keep, flat_w = _dispatch_indices(top_phys, top_w, E, capacity)
-        buf = _scatter_to_buffers(xt, flat_e, pos, keep, E, capacity)
 
         # Gather ZeRO-3-sharded expert weights (transpose = reduce-scatter).
         gather_axes = ("data", "tp") if "data" in axes else ("tp",)
@@ -260,15 +409,43 @@ def moe_ffn(
         )
         wd_f = lax.all_gather(wd, gather_axes, axis=1, tiled=True)
 
-        if token_sharded and ep_size > 1:
-            if plan.hierarchical_a2a:
-                from repro.core import halo
+        if plan.hierarchical_a2a:
+            from repro.core import halo
 
-                a2a = lambda t: halo.hierarchical_all_to_all(t, plan)
-            else:
-                a2a = lambda t: lax.all_to_all(
-                    t, "ep", split_axis=0, concat_axis=0, tiled=True
+            a2a = lambda t: halo.hierarchical_all_to_all(t, plan)
+        else:
+            a2a = lambda t: lax.all_to_all(
+                t, "ep", split_axis=0, concat_axis=0, tiled=True
+            )
+
+        if moe.dispatch == "ragged" and token_sharded:
+            # Sort-based dropless dispatch.  With EP the a2a payload is the
+            # sorted rows + ids (rank-level row budget, capacity wire
+            # size); without EP the whole block is processed ragged.
+            if ep_size > 1:
+                y = _moe_ragged_sharded(
+                    xt, top_phys, top_w, wu_f, wg_f, wd_f,
+                    arch.ffn_activation, impl, moe, ep_size, capacity, a2a,
                 )
+            else:
+                y = _moe_ragged_local(
+                    xt, top_phys, top_w, wu_f, wg_f, wd_f,
+                    arch.ffn_activation, impl, E, moe.top_k,
+                )
+            y = y.reshape(b_l, s_l, d)
+            metrics = {
+                "moe_aux_loss": aux,
+                "moe_z_loss": z,
+                "expert_load": counts,
+            }
+            return y, metrics
+
+        # Capacity dispatch (decode always uses it: replicated tokens +
+        # psum("ep") combine need the static per-expert slot layout).
+        flat_e, pos, keep, flat_w = _dispatch_indices(top_phys, top_w, E, capacity)
+        buf = _scatter_to_buffers(xt, flat_e, pos, keep, E, capacity)
+
+        if token_sharded and ep_size > 1:
             recv = _transport_bf16(
                 a2a, buf.reshape(ep_size, E_l * capacity, d)
             )
