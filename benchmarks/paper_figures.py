@@ -301,10 +301,18 @@ def schedules(only: str = None) -> List[Row]:
         for name in SCHEDULES:
             if only and name != only:
                 continue
-            ir = sched_lib.build(name, PP, M)
-            us, r = _timed(lambda: ss.simulate(sched_lib.build(name, PP, M)))
+            # Interleaved runs at V=2 with per-chunk durations t/V so its
+            # makespan/bubble is comparable at equal total work.
+            V = 2 if name == "interleaved_1f1b" else 1
+            ir = sched_lib.build(name, PP, M, V)
+            us, r = _timed(
+                lambda: ss.simulate(
+                    sched_lib.build(name, PP, M, V), 1.0 / V, 2.0 / V
+                )
+            )
+            tag = f"sched.{name}_pp{PP}_m{M}" + (f"_v{V}" if V > 1 else "")
             rows.append(
-                (f"sched.{name}_pp{PP}_m{M}", us,
+                (tag, us,
                  f"peak={max(r.peak_in_flight)} bubble={r.bubble_fraction:.3f}"
                  f" ticks={ir.num_ticks} slots={ir.num_slots}")
             )

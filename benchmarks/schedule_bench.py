@@ -1,0 +1,141 @@
+"""Pipeline-schedule benchmark: bubble fraction, peak residual slots and
+p2p hand-offs vs (PP, M, V) — the trade interleaved virtual stages buy
+(paper §III Eq 3–5 and the Megatron interleaved-1F1B literature).
+
+Every row comes from the real schedule IR (``core.schedules.build``) and
+its discrete-event replay (``core.schedule_sim.simulate`` with per-chunk
+durations t/V), NOT from the closed forms — the closed forms are asserted
+against the IR in tests/test_schedule_invariants.py, and this bench records
+what the executor would actually run.
+
+Emits ``BENCH_schedules.json``:
+
+    PYTHONPATH=src python benchmarks/schedule_bench.py [--out F]
+    PYTHONPATH=src python benchmarks/schedule_bench.py --smoke \
+        --check-schema BENCH_schedules.json    # CI schema-rot gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_OUT = ROOT / "BENCH_schedules.json"
+
+# (PP, M) grid; every M is a multiple of its PP so the interleaved builder
+# is constructible, and V sweeps {1, 2, 4} (V=1 == plain 1f1b).
+GRID = [(2, 4), (2, 8), (4, 8), (4, 16), (8, 16), (8, 32)]
+GRID_SMOKE = [(2, 4), (4, 8)]
+VSTAGES = (1, 2, 4)
+T_FWD, T_BWD = 1.0, 2.0  # full-stage durations (bwd ~2x fwd)
+
+
+def measure(name: str, PP: int, M: int, V: int) -> dict:
+    from repro.core import schedule_sim as ss
+    from repro.core import schedules as sched_lib
+
+    ir = sched_lib.build(name, PP, M, V)
+    # Per-chunk durations: a chunk is 1/V of a stage, so makespans are
+    # comparable across V at equal total work.
+    r = ss.simulate(ir, t_fwd=T_FWD / V, t_bwd=T_BWD / V)
+    return {
+        "schedule": name,
+        "PP": PP,
+        "M": M,
+        "V": V,
+        "ticks": ir.num_ticks,
+        "makespan": r.makespan,
+        "bubble_fraction": r.bubble_fraction,
+        "num_slots": ir.num_slots,
+        "peak_in_flight": list(ir.peak_in_flight),
+        "p2p_events": ir.p2p_events(),
+    }
+
+
+def run(grid) -> dict:
+    out = {
+        "meta": {
+            "t_fwd": T_FWD,
+            "t_bwd": T_BWD,
+            "vstages": list(VSTAGES),
+            "grid": [list(c) for c in grid],
+        },
+        "sweep": [],
+    }
+    for PP, M in grid:
+        for name in ("gpipe", "1f1b"):
+            out["sweep"].append(measure(name, PP, M, 1))
+        for V in VSTAGES:
+            if V == 1:
+                continue
+            out["sweep"].append(measure("interleaved_1f1b", PP, M, V))
+
+    flat = [s for s in out["sweep"] if s["schedule"] == "1f1b"]
+    il = [s for s in out["sweep"] if s["schedule"] == "interleaved_1f1b"]
+    pair = [
+        (f, i)
+        for f in flat
+        for i in il
+        if (f["PP"], f["M"]) == (i["PP"], i["M"])
+    ]
+    out["summary"] = {
+        "bubble_1f1b_max": max(s["bubble_fraction"] for s in flat),
+        "bubble_interleaved_min": min(s["bubble_fraction"] for s in il),
+        "bubble_shrink_max": max(
+            f["bubble_fraction"] / i["bubble_fraction"] for f, i in pair
+        ),
+        "slot_grow_max": max(i["num_slots"] / f["num_slots"] for f, i in pair),
+        "p2p_grow_max": max(
+            i["p2p_events"] / f["p2p_events"] for f, i in pair
+        ),
+    }
+    return out
+
+
+def schema(node):
+    """Recursive key structure (dict keys; list element schema)."""
+    if isinstance(node, dict):
+        return {k: schema(v) for k, v in sorted(node.items())}
+    if isinstance(node, list):
+        return [schema(node[0])] if node else []
+    return "leaf"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid — schema/CI mode")
+    ap.add_argument("--out", type=Path, default=None)
+    ap.add_argument("--check-schema", type=Path, default=None,
+                    help="compare the emitted JSON's key structure against "
+                         "this committed file; exit 1 on drift")
+    args = ap.parse_args()
+
+    rec = run(GRID_SMOKE if args.smoke else GRID)
+
+    if args.check_schema:
+        committed = json.loads(args.check_schema.read_text())
+        if schema(committed) != schema(rec):
+            print(f"SCHEMA DRIFT: {args.check_schema} no longer matches "
+                  f"what this bench emits — regenerate and commit it.",
+                  file=sys.stderr)
+            sys.exit(1)
+        print(f"schema ok: {args.check_schema}")
+        return
+
+    out = args.out or DEFAULT_OUT
+    out.write_text(json.dumps(rec, indent=1) + "\n")
+    s = rec["summary"]
+    print(f"wrote {out}")
+    print(f"bubble: 1f1b max {s['bubble_1f1b_max']:.3f} -> interleaved min "
+          f"{s['bubble_interleaved_min']:.3f} "
+          f"(max shrink {s['bubble_shrink_max']:.2f}x) at up to "
+          f"{s['slot_grow_max']:.2f}x residual slots and "
+          f"{s['p2p_grow_max']:.2f}x p2p hand-offs")
+
+
+if __name__ == "__main__":
+    main()

@@ -48,9 +48,10 @@ def main():
     if ranked:
         best = ranked[0]
         print(f"\nchosen: PP={best.PP} EP={best.EP} DP={best.DP} "
-              f"schedule={best.schedule} dispatch={best.dispatch} "
-              f"(executor binds the schedule via MeshPlan.schedule and the "
-              f"dispatch via MoECfg.dispatch)")
+              f"schedule={best.schedule} vstages={best.vstages} "
+              f"dispatch={best.dispatch} "
+              f"(executor binds the schedule via MeshPlan.schedule/"
+              f"MeshPlan.vstages and the dispatch via MoECfg.dispatch)")
     else:
         print("  NONE — increase chips, enable ZeRO (--zero world), or "
               "reduce batch.")

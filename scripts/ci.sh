@@ -19,9 +19,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest tests/test_kernels.py tests/test_moe_dispatch.py \
     tests/test_moe_properties.py -q
 
-# Bench schema-rot gate: the smoke bench must still emit the exact key
-# structure of the committed BENCH_moe_gemm.json (regenerate + commit it
-# whenever the bench schema intentionally changes).
+# Bench schema-rot gates: the smoke benches must still emit the exact key
+# structure of the committed BENCH_*.json files (regenerate + commit them
+# whenever a bench schema intentionally changes).
 python benchmarks/moe_gemm_bench.py --smoke --check-schema BENCH_moe_gemm.json
+python benchmarks/schedule_bench.py --smoke --check-schema BENCH_schedules.json
 
 exec python -m pytest -x -q "$@"

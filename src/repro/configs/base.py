@@ -15,12 +15,13 @@ from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
 # Pipeline schedules the system understands end-to-end: the planner
-# enumerates over them (schedule-aware Eq 3/4 memory), ``MeshPlan.schedule``
-# binds the winner, and the executor (``repro.core.pipeline``) interprets
+# enumerates over them (schedule-aware Eq 3/4 memory, and the vstage count
+# V for the interleaved family), ``MeshPlan.schedule``/``MeshPlan.vstages``
+# bind the winner, and the executor (``repro.core.pipeline``) interprets
 # the matching ``repro.core.schedules`` IR.  Kept here — next to the other
 # single-source-of-truth config vocabulary — so configs, planner and
 # executor can never disagree on the legal names.
-SCHEDULES: Tuple[str, ...] = ("gpipe", "1f1b")
+SCHEDULES: Tuple[str, ...] = ("gpipe", "1f1b", "interleaved_1f1b")
 DEFAULT_SCHEDULE = "1f1b"
 
 # Expert dispatch modes the system understands end-to-end: the MoE layer

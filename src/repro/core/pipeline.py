@@ -22,9 +22,13 @@ Two executors interpret the schedule IR of ``core.schedules``:
   as the ``schedule="gpipe"`` AD oracle in tests.
 
 * :func:`pipelined_step` — the schedule-*executing* train step: it
-  interprets the full per-tick op table (``F``/``B``/idle) of any built
-  schedule, so 1F1B actually runs with its Eq-4 memory profile instead of
-  relying on AD ordering.  Each stage's forward runs under ``jax.vjp``;
+  interprets the full per-tick op table (``F``/``B``/idle, each op tagged
+  with its virtual stage) of any built schedule, so 1F1B actually runs with
+  its Eq-4 memory profile instead of relying on AD ordering, and
+  interleaved 1F1B runs its PP*V chunk ring (per-vstage parameter chunks
+  selected per tick, ring ppermutes for the wrap-around hand-offs, the
+  loss head owned by chunk (PP-1, V-1)).  Each stage's forward runs under
+  ``jax.vjp``;
   residuals are *stage inputs* parked in a scan-carried buffer with
   ``Schedule.num_slots`` slots (``PP`` for 1F1B, ``M`` for GPipe — the
   paper's Eq 4 vs Eq 3 gap realized in allocation), and the backward op
@@ -80,30 +84,47 @@ def _composition(plan: MeshPlan):
     return set(plan.mesh.axis_names), True
 
 
-def _stage_block_params(block_params, arch: ArchConfig, plan: MeshPlan):
-    """Stage-major parameter layout: (reps, ...) -> (PP, rps, ...), explicitly
-    resharded so dim0 lives on the pipeline axis and the remaining dims keep
-    their ZeRO-3 sharding (leaving this to GSPMD triggers pathological
-    reshards and an XLA SPMD crash at 512-device scale)."""
+def _stage_block_params(
+    block_params, arch: ArchConfig, plan: MeshPlan, vstages: int = 1
+):
+    """Chunk-major parameter layout: (reps, ...) -> (PP, V, rpc, ...) with
+    chunk ``c = v * PP + s`` living on stage ``s`` as virtual stage ``v``
+    (rpc = reps per chunk), explicitly resharded so dim0 lives on the
+    pipeline axis and the remaining dims keep their ZeRO-3 sharding
+    (leaving this to GSPMD triggers pathological reshards and an XLA SPMD
+    crash at 512-device scale)."""
     from repro.models import model as model_lib  # deferred: avoids cycle
 
     PP = plan.pp
+    V = vstages
     period = len(arch.block_pattern)
     reps = arch.num_layers // period
-    assert reps % PP == 0, (
-        f"{arch.name}: {reps} pattern-reps not divisible by PP={PP}"
+    assert reps % (PP * V) == 0, (
+        f"{arch.name}: {reps} pattern-reps not divisible by "
+        f"PP*V={PP}*{V}"
     )
-    rps = reps // PP
+    rpc = reps // (PP * V)
     block_specs = model_lib.param_specs(arch, plan)["blocks"]
 
     def stage_leaf(p, sp):
-        r = p.reshape((PP, rps) + p.shape[1:])
+        # (reps,) = (V, PP, rpc) v-major -> (PP, V, rpc): chunk c = v*PP+s.
+        r = p.reshape((V, PP, rpc) + p.shape[1:]).swapaxes(0, 1)
         return lax.with_sharding_constraint(
             r,
-            NamedSharding(plan.mesh, P(*((plan.pp_axis, None) + tuple(sp)[1:]))),
+            NamedSharding(
+                plan.mesh, P(*((plan.pp_axis, None, None) + tuple(sp)[1:]))
+            ),
         )
 
-    return jax.tree.map(stage_leaf, block_params, block_specs), rps
+    return jax.tree.map(stage_leaf, block_params, block_specs), rpc
+
+
+def _unstage_blocks(tree, reps: int):
+    """(PP, V, rpc, ...) chunk-major leaves back to the caller's (reps, ...)
+    layout (inverse of ``_stage_block_params``)."""
+    return jax.tree.map(
+        lambda g: g.swapaxes(0, 1).reshape((reps,) + g.shape[3:]), tree
+    )
 
 
 def _act_dtype(block_params, fallback):
@@ -113,8 +134,12 @@ def _act_dtype(block_params, fallback):
     return fallback
 
 
-def _send_fwd(h, plan: MeshPlan):
+def _send_fwd(h, plan: MeshPlan, ring: bool = False):
+    """Next-stage activation hand-off; ``ring`` adds the PP-1 -> 0 wrap
+    edge interleaved schedules use to enter the next virtual stage."""
     perm = [(i, i + 1) for i in range(plan.pp - 1)]
+    if ring:
+        perm.append((plan.pp - 1, 0))
     if plan.compress_p2p:
         from repro.core.compression import compressed_ppermute
 
@@ -122,8 +147,10 @@ def _send_fwd(h, plan: MeshPlan):
     return lax.ppermute(h, plan.pp_axis, perm)
 
 
-def _send_bwd(g, plan: MeshPlan):
+def _send_bwd(g, plan: MeshPlan, ring: bool = False):
     perm = [(i + 1, i) for i in range(plan.pp - 1)]
+    if ring:
+        perm.append((0, plan.pp - 1))
     if plan.compress_p2p:
         from repro.core.compression import compressed_ppermute
 
@@ -188,8 +215,9 @@ def pipelined_stack_forward(
     manual_axes, local = _composition(plan)
 
     def stage_program(stage_params, emb_params, xm_local):
-        # in_spec P(pp_axis) leaves a leading length-1 stage dim: drop it.
-        stage_params = jax.tree.map(lambda p: p[0], stage_params)
+        # in_spec P(pp_axis) leaves a leading length-1 stage dim; the next
+        # dim is the (length-1 here: V=1) vstage chunk dim: drop both.
+        stage_params = jax.tree.map(lambda p: p[0][0], stage_params)
         stage = lax.axis_index(pp_axis)
         valid_t = jnp.asarray(fvalid)  # (PP, T) bool
 
@@ -358,6 +386,7 @@ def pipelined_step(
     head_fn: Callable,  # (head_params, embed_params, y (b_mu,s,d), labels) -> ce sum
     head_params,
     schedule: Optional[str] = None,
+    vstages: Optional[int] = None,
     impl: str = "xla",
     num_microbatches: Optional[int] = None,
     embed_fn=None,
@@ -365,9 +394,14 @@ def pipelined_step(
 ) -> Tuple[jax.Array, Any, Dict[str, jax.Array], jax.Array]:
     """Execute one training step's forward AND backward under a schedule IR.
 
-    Interprets ``schedules.build(schedule, PP, M)`` tick by tick (see module
-    docstring).  Gradients are accumulated in fp32 on the stage that owns
-    each parameter and returned in the caller's layout:
+    Interprets ``schedules.build(schedule, PP, M, V)`` tick by tick (see
+    module docstring).  With ``V > 1`` (interleaved schedules) the layer
+    stack is partitioned into PP*V chunks — chunk ``v*PP + s`` runs on
+    stage ``s`` as virtual stage ``v`` — the residual/cotangent buffers
+    carry per-(vstage, mb) slots, and the fwd/bwd ppermutes become rings so
+    the chunk hand-off can wrap from the last stage back to stage 0.
+    Gradients are accumulated in fp32 on the stage that owns each parameter
+    and returned in the caller's layout:
 
     Returns ``(loss, grads, metrics, occupancy)`` where ``grads`` is
     ``{"blocks": <same structure as block_params>, "embed": ...,
@@ -379,6 +413,13 @@ def pipelined_step(
     assert pp_axis is not None
     PP = plan.pp
     sched_name = schedule or plan.schedule
+    # The plan's vstage depth belongs to ITS schedule: a per-call override
+    # to a flat schedule runs at V=1 (an explicit ``vstages`` contradiction
+    # still fails fast in ``build``).
+    if vstages is not None:
+        V = vstages
+    else:
+        V = plan.vstages if sched_name == "interleaved_1f1b" else 1
     period = len(arch.block_pattern)
     reps = arch.num_layers // period
 
@@ -388,12 +429,13 @@ def pipelined_step(
     assert b % M == 0, (b, M)
     b_mu = b // M
 
-    sched = sched_lib.build(sched_name, PP, M)
+    sched = sched_lib.build(sched_name, PP, M, V)
     tt = sched_lib.tick_tables(sched)
     T = sched.num_ticks
     K = sched.num_slots
+    ring = V > 1  # chunk hand-offs wrap around the stage ring
 
-    staged, rps = _stage_block_params(block_params, arch, plan)
+    staged, rpc = _stage_block_params(block_params, arch, plan, vstages=V)
     xm = x.reshape((M, b_mu, s) + ((d,) if embed_fn is None else ()))
     lm_ = labels.reshape(M, b_mu, s)
     pos_mu = positions[:b_mu]
@@ -410,12 +452,15 @@ def pipelined_step(
     emb_in = embed_params if embed_params is not None else jnp.zeros(())
 
     def stage_program(stage_params, emb_p, head_p, xm_local, labels_local):
+        # in_spec P(pp_axis) leaves a leading length-1 stage dim: drop it,
+        # keeping the (V, rpc, ...) chunk-major layout.
         stage_params = jax.tree.map(lambda p: p[0], stage_params)
         stage = lax.axis_index(pp_axis)
         is_last = stage == PP - 1
 
         kind_t = jnp.asarray(tt.kind)
         mb_t = jnp.asarray(tt.mb)
+        vs_t = jnp.asarray(tt.vs)
         slot_t = jnp.asarray(tt.slot)
         afwd_t = jnp.asarray(tt.arrive_fwd)
         abwd_t = jnp.asarray(tt.arrive_bwd)
@@ -429,18 +474,27 @@ def pipelined_step(
 
         sp_floats, sp_merge, sp_rebuild = _partition_floats(stage_params)
 
-        def full_stage(sp_f, emb_, x0, h_in):
-            """(stage float params, embed, raw microbatch, arrived act) ->
-            ((h_out, aux, z), loads).  Stage 0 reads the raw microbatch
-            (embedding inside the pipeline); others the arrived activation."""
+        def full_stage(sp_f, emb_, x0, h_in, vs):
+            """(stage float params (V, rpc, ...), embed, raw microbatch,
+            arrived act, vstage) -> ((h_out, aux, z), loads).  Runs the
+            ``vs``-th chunk; chunk (0, 0) reads the raw microbatch
+            (embedding inside the pipeline), every other chunk the arrived
+            activation.  Differentiating through the dynamic chunk index
+            scatter-adds the chunk grads into the full (V, rpc, ...)
+            layout."""
             sp = sp_merge(sp_f)
+            chunk = jax.tree.map(
+                lambda p: lax.dynamic_index_in_dim(p, vs, 0, keepdims=False),
+                sp,
+            )
             if embed_fn is not None:
                 x_emb = embed_fn(emb_, x0)
             else:
                 x_emb = x0
-            inp = constrain(jnp.where(stage == 0, x_emb, h_in))
+            first_chunk = jnp.logical_and(stage == 0, vs == 0)
+            inp = constrain(jnp.where(first_chunk, x_emb, h_in))
             h_out, aux_d, loads_d = transformer.stack_forward(
-                sp, inp, arch, plan,
+                chunk, inp, arch, plan,
                 positions=pos_mu, impl=impl, token_sharded=True, unroll=True,
                 local=local,
             )
@@ -453,7 +507,8 @@ def pipelined_step(
         zero_h = jnp.zeros((b_mu, s, d), act_dtype)
         zero_loads = (
             jnp.zeros(
-                (rps, sum(1 for _, f in arch.block_pattern if f == "moe"),
+                (V, rpc,
+                 sum(1 for _, f in arch.block_pattern if f == "moe"),
                  arch.moe.num_experts),
                 jnp.float32,
             )
@@ -488,17 +543,22 @@ def pipelined_step(
             # -- 2. the tick's op (one of F / B / idle, from the IR) -------
             kind = kind_t[stage, t]
             mb = mb_t[stage, t]
+            vs = vs_t[stage, t]
             slot = slot_t[stage, t]
             is_f = kind == OP_F
             is_b = kind == OP_B
+            # The op's chunk: only chunk (PP-1, V-1) owns the loss head.
+            last_chunk = jnp.logical_and(is_last, vs == V - 1)
             x0 = lax.dynamic_index_in_dim(xm_local, mb, 0, keepdims=False)
             lbl = lax.dynamic_index_in_dim(labels_local, mb, 0, keepdims=False)
             h_in = lax.dynamic_index_in_dim(in_buf, slot, 0, keepdims=False)
 
             # One vjp serves both op kinds: its primal output is the F
-            # result; its pullback is the B recompute-and-backprop.
+            # result; its pullback is the B recompute-and-backprop.  The
+            # vstage index is closed over (not differentiated).
             (y, aux_d, z_d), vjp_fn, loads_d = jax.vjp(
-                full_stage, sp_floats, emb_p, x0, h_in, has_aux=True
+                lambda sp_, e_, x_, h_: full_stage(sp_, e_, x_, h_, vs),
+                sp_floats, emb_p, x0, h_in, has_aux=True,
             )
 
             # -- 3. forward bookkeeping ------------------------------------
@@ -506,7 +566,10 @@ def pipelined_step(
             aux = aux + aux_d * fmask
             z = z + z_d * fmask
             if loads is not None and loads_d is not None:
-                loads = loads + loads_d * fmask
+                cur_l = lax.dynamic_index_in_dim(loads, vs, 0, keepdims=False)
+                loads = lax.dynamic_update_index_in_dim(
+                    loads, cur_l + loads_d * fmask, vs, 0
+                )
 
             # -- 4. loss head + cotangent seed (last stage only) -----------
             ce_mb, head_vjp = jax.vjp(
@@ -514,7 +577,7 @@ def pipelined_step(
             )
             g_hp, g_emb_h, g_y = head_vjp(jnp.float32(1.0 / (b * s)))
             y_cot = jnp.where(
-                is_last,
+                last_chunk,
                 g_y.astype(act_dtype),
                 lax.dynamic_index_in_dim(cot_buf, slot, 0, keepdims=False),
             )
@@ -523,7 +586,7 @@ def pipelined_step(
             inv_m = jnp.float32(1.0 / M)
             g_sp, g_emb_s, _g_x0, g_h = vjp_fn((y_cot, inv_m, inv_m))
             bmask = is_b.astype(jnp.float32)
-            lmask = bmask * is_last.astype(jnp.float32)
+            lmask = bmask * last_chunk.astype(jnp.float32)
             gacc = [
                 a + g.astype(jnp.float32) * bmask for a, g in zip(gacc, g_sp)
             ]
@@ -540,8 +603,8 @@ def pipelined_step(
 
             # -- 6. occupancy + wire sends ---------------------------------
             live = live + is_f.astype(jnp.int32) - is_b.astype(jnp.int32)
-            sent_h = _send_fwd(y, plan)
-            sent_g = _send_bwd(g_h.astype(act_dtype), plan)
+            sent_h = _send_fwd(y, plan, ring=ring)
+            sent_g = _send_bwd(g_h.astype(act_dtype), plan, ring=ring)
             carry = (in_buf, cot_buf, sent_h, sent_g, gacc, gemb, ghead,
                      ce, aux, z, loads, live)
             return carry, live
@@ -600,10 +663,8 @@ def pipelined_step(
         axis_names=manual_axes,
     )(staged, emb_in, head_params, xm, lm_)
 
-    # Stage-stacked (PP, rps, ...) grads -> the caller's (reps, ...) layout.
-    g_blocks = jax.tree.map(
-        lambda g: g.reshape((reps,) + g.shape[2:]), g_blocks
-    )
+    # Chunk-major (PP, V, rpc, ...) grads -> the caller's (reps, ...) layout.
+    g_blocks = _unstage_blocks(g_blocks, reps)
     # Embedding grads: stage 0 (lookup scatter) + last stage (tied head).
     gemb = jax.tree.map(lambda g: jnp.sum(g, axis=0), gemb)
     ghead = jax.tree.map(lambda g: jnp.sum(g, axis=0), ghead)
@@ -613,7 +674,7 @@ def pipelined_step(
     z_mean = jnp.sum(z) / M
     loss = ce_mean + aux_mean + z_mean
     if has_moe:
-        loads = loads.reshape((reps,) + loads.shape[2:])
+        loads = _unstage_blocks(loads, reps)
     else:
         loads = None
     metrics = {

@@ -37,6 +37,9 @@ class Strategy:
     # Expert dispatch mode (capacity padding tax vs ragged sort overhead) —
     # ranked per config like the pipeline schedule.
     dispatch: str = DEFAULT_DISPATCH
+    # Virtual stages per pipeline stage (interleaved_1f1b only): buys a
+    # 1/V bubble for ~2× Eq-4 residual memory and V× p2p volume.
+    vstages: int = 1
 
     @property
     def world(self) -> int:
@@ -44,9 +47,14 @@ class Strategy:
 
     def describe(self) -> str:
         e = self.estimate
+        sched = (
+            f"{self.schedule}@V{self.vstages}"
+            if self.vstages > 1
+            else self.schedule
+        )
         return (
             f"PP={self.PP:<3d} EP={self.EP:<3d} DP={self.DP:<3d} "
-            f"alpha={self.alpha} sched={self.schedule:<5s} "
+            f"alpha={self.alpha} sched={sched:<5s} "
             f"disp={self.dispatch:<8s} "
             f"ckpt={int(self.checkpoint_activations)} "
             f"Bp={self.bytes_per_param:<2d} "
@@ -61,6 +69,34 @@ class Strategy:
 
 def _divisors(n: int) -> List[int]:
     return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def _schedule_candidates(
+    arch: ArchConfig, PP: int
+) -> List[Tuple[str, int]]:
+    """(schedule, vstages) pairs to enumerate for a PP-way pipeline.
+
+    The flat schedules run at V=1; ``interleaved_1f1b`` is tried at the
+    paper-relevant depths V ∈ {2, reps-per-stage}.  V must divide the
+    BLOCK-PATTERN reps per stage — the executor's chunk unit
+    (``pipeline._stage_block_params`` asserts ``reps % (PP*V) == 0``), not
+    raw layers, which overcounts by the pattern period on hybrid archs.
+    V=1 is skipped — it is bit-for-bit the plain 1f1b table."""
+    if PP <= 1:
+        return [(DEFAULT_SCHEDULE, 1)]
+    out: List[Tuple[str, int]] = []
+    reps = arch.num_layers // max(len(arch.block_pattern), 1)
+    rps = reps // PP if reps % PP == 0 else 0  # pattern-reps per stage
+    for schedule in SCHEDULES:
+        if schedule == "interleaved_1f1b":
+            out += [
+                (schedule, V)
+                for V in sorted({2, rps})
+                if V > 1 and rps and rps % V == 0
+            ]
+        else:
+            out.append((schedule, 1))
+    return out
 
 
 def valid_strategies(
@@ -96,9 +132,10 @@ def valid_strategies(
             if EP > platform.fast_domain:  # Eq 10
                 continue
             DP = rest // EP
-            # Schedules only differ in executed memory profile (Eq 3 vs 4);
-            # a PP=1 "pipeline" is degenerate, keep the single default entry.
-            schedules = SCHEDULES if PP > 1 else (DEFAULT_SCHEDULE,)
+            # Schedules differ in executed memory profile (Eq 3 vs 4 vs the
+            # interleaved analogue) and, for interleaving, in bubble; a PP=1
+            # "pipeline" is degenerate, keep the single default entry.
+            schedules = _schedule_candidates(arch, PP)
             # MoE archs rank both dispatch modes (capacity padding tax +
             # drops vs ragged sort overhead); dense archs have no dispatch.
             dispatches = DISPATCH_MODES if shape.E else (DEFAULT_DISPATCH,)
@@ -106,7 +143,7 @@ def valid_strategies(
                 M = alpha * PP
                 if batch % (DP * M) or batch // (DP * M) == 0:
                     continue
-                for schedule in schedules:
+                for schedule, vstages in schedules:
                     for dispatch in dispatches:
                         for ckpt in (False, True):
                             # 16 B/param = paper's fp16+fp32-master policy;
@@ -122,6 +159,7 @@ def valid_strategies(
                                     DP=DP,
                                     alpha=alpha,
                                     schedule=schedule,
+                                    vstages=vstages,
                                     checkpoint_activations=ckpt,
                                     bytes_per_param=bpp,
                                     zero=zero,
@@ -137,7 +175,8 @@ def valid_strategies(
                                 out.append(
                                     Strategy(PP, EP, DP, alpha, schedule,
                                              ckpt, bpp, est,
-                                             dispatch=dispatch)
+                                             dispatch=dispatch,
+                                             vstages=vstages)
                                 )
                                 break  # cheapest fitting policy wins
                             else:

@@ -113,9 +113,13 @@ class TrainSetup:
     DP: int = 1  # external data parallelism (replica groups)
     alpha: int = 4  # microbatch multiplier: M = alpha * PP
     # Pipeline schedule: picks the peak-memory formula (Eq 3 for GPipe's
-    # all-M-in-flight profile, Eq 4 for 1F1B's PP-i) and is bound into the
-    # executor by the planner.
+    # all-M-in-flight profile, Eq 4 for 1F1B's PP-i, the interleaved
+    # Eq-4-analogue for vstages > 1) and is bound into the executor by the
+    # planner.
     schedule: str = DEFAULT_SCHEDULE
+    # Virtual stages per pipeline stage (interleaved_1f1b only): V× more
+    # residual slots and V× more p2p hand-offs buy a 1/V bubble.
+    vstages: int = 1
     bytes_per_param: int = 16  # paper §III-A1 (fp16 + fp32 master + Adam)
     bytes_act: int = 2  # activation dtype
     flash_attention: bool = True  # 4bHs^2 -> 2bHs (paper)
@@ -133,6 +137,16 @@ class TrainSetup:
     # sort + tile-metadata overhead but multiplies no zeros and drops
     # nothing.
     dispatch: str = DEFAULT_DISPATCH
+
+    def __post_init__(self):
+        # Mirror MeshPlan: a V>1 depth belongs to the interleaved schedule
+        # only — rejecting the combo here keeps every consumer (memory,
+        # bubble, p2p) consistent without per-site guards.
+        assert self.vstages >= 1, self.vstages
+        assert self.vstages == 1 or self.schedule == "interleaved_1f1b", (
+            f"vstages={self.vstages} needs schedule='interleaved_1f1b', "
+            f"got {self.schedule!r}"
+        )
 
     @property
     def M(self) -> int:
@@ -303,20 +317,54 @@ def memory_pp_gpipe(m: ModelShape, t: TrainSetup) -> float:
     return static + act + t.framework_overhead
 
 
-def memory_pp_1f1b(m: ModelShape, t: TrainSetup, stage: int = 0) -> float:
-    """Eq 4: 1F1B peak for stage i — (PP - i) in-flight microbatches."""
+def _act_per_microbatch(m: ModelShape, t: TrainSetup) -> float:
+    """One microbatch's activation bytes across a full stage (L/PP layers)
+    — the unit of Eq 4's per-stage residency accounting."""
     l = m.L / t.PP
-    static = static_state_bytes(m, t, l)
-    in_flight = t.PP - stage
     b_mu_tok = t.b / t.DP / t.M
-    act_mu = l * (
+    if t.checkpoint_activations:
+        # only layer inputs retained: bytes_act * tokens * d per layer
+        return l * t.bytes_act * (b_mu_tok / t.EP) * t.s * m.d_model
+    return l * (
         _attn_act_per_layer(m, t, b_mu_tok / t.EP)
         + _expert_act_per_layer(m, t, b_mu_tok, t.EP)
     )
-    if t.checkpoint_activations:
-        # only layer inputs retained: 2 bytes * tokens * d per layer
-        act_mu = l * t.bytes_act * (b_mu_tok / t.EP) * t.s * m.d_model
-    return static + in_flight * act_mu + t.framework_overhead
+
+
+def memory_pp_1f1b(m: ModelShape, t: TrainSetup, stage: int = 0) -> float:
+    """Eq 4: 1F1B peak for stage i — min(PP - i, M) in-flight
+    microbatches (same closed form the IR is pinned to)."""
+    static = static_state_bytes(m, t, m.L / t.PP)
+    in_flight = peak_in_flight("1f1b", t.PP, t.M, stage=stage)
+    return static + in_flight * _act_per_microbatch(m, t) + t.framework_overhead
+
+
+def peak_in_flight(
+    schedule: str, PP: int, M: int, V: int = 1, stage: int = 0
+) -> int:
+    """Closed-form per-stage peak residency of each schedule family, in
+    units of one microbatch through one CHUNK (a chunk is 1/V of a stage's
+    layers).  Delegates to the IR module's closed forms (single source,
+    pinned against the real builders by tests/test_schedule_invariants.py)."""
+    from repro.core.schedules import peak_activations_interleaved
+
+    assert schedule in SCHEDULES, schedule
+    if schedule == "gpipe":
+        return M
+    # 1f1b == interleaved at V=1 (Eq 4); interleaved: the Eq-4 analogue.
+    V_eff = V if schedule == "interleaved_1f1b" else 1
+    return peak_activations_interleaved(PP, M, V_eff)[stage]
+
+
+def memory_pp_interleaved(m: ModelShape, t: TrainSetup, stage: int = 0) -> float:
+    """Eq-4 analogue for interleaved 1F1B: stage i holds
+    ``2(PP-i-1) + (V-1)PP + 1`` in-flight chunk activations, each 1/V of a
+    stage's layers — net ~2× Eq 4 at large V, the memory the planner weighs
+    against the 1/V bubble."""
+    static = static_state_bytes(m, t, m.L / t.PP)
+    in_flight = peak_in_flight("interleaved_1f1b", t.PP, t.M, t.vstages, stage)
+    act_chunk = _act_per_microbatch(m, t) / t.vstages
+    return static + in_flight * act_chunk + t.framework_overhead
 
 
 def memory_1f1b_skew(m: ModelShape, t: TrainSetup) -> float:
@@ -325,12 +373,29 @@ def memory_1f1b_skew(m: ModelShape, t: TrainSetup) -> float:
 
 
 def memory_pp(m: ModelShape, t: TrainSetup, stage: int = 0) -> float:
-    """Schedule-aware per-stage pipeline peak (Eq 3 or Eq 4 per
-    ``t.schedule``) — what the planner's Eq-11 feasibility check uses."""
+    """Schedule-aware per-stage pipeline peak (Eq 3, Eq 4 or the
+    interleaved Eq-4 analogue per ``t.schedule``/``t.vstages``) — what the
+    planner's Eq-11 feasibility check uses."""
     assert t.schedule in SCHEDULES, t.schedule
     if t.schedule == "gpipe":
         return memory_pp_gpipe(m, t)  # all M in flight on every stage
+    if t.schedule == "interleaved_1f1b" and t.vstages > 1:
+        return memory_pp_interleaved(m, t, stage)
     return memory_pp_1f1b(m, t, stage)
+
+
+def schedule_bubble_fraction(
+    schedule: str, PP: int, M: int, V: int = 1
+) -> float:
+    """Eq-3-style idle fraction of the schedule at equal fwd/bwd op cost:
+    (PP-1)/(M+PP-1) for the flush schedules, (PP-1)/(V·M+PP-1) interleaved
+    — exactly the unit-op tick fraction of the IR (pinned by the
+    simulator/model cross-check test)."""
+    assert schedule in SCHEDULES, schedule
+    if PP <= 1:
+        return 0.0
+    units = V * M if schedule == "interleaved_1f1b" else M
+    return (PP - 1) / (units + PP - 1)
 
 
 # ---------------------------------------------------------------------------
@@ -465,9 +530,14 @@ def estimate(
         else platform.inter_node_bw
     )
     # Every interior stage sends+receives M microbatch activations fwd and
-    # their gradients bwd; boundaries operate concurrently.
+    # their gradients bwd; boundaries operate concurrently.  Interleaving
+    # multiplies the hand-offs by V: each microbatch crosses every boundary
+    # once per virtual stage (the chunk ring's wrap edges ride the same
+    # ppermute).
     tp2p = (
-        2 * t.M * p2p_bytes_per_boundary(m, t) / p2p_bw if t.PP > 1 else 0.0
+        2 * t.M * t.vstages * p2p_bytes_per_boundary(m, t) / p2p_bw
+        if t.PP > 1
+        else 0.0
     )
 
     # DP gradient all-reduce (external replicas): 2 x params/DP-shard.
@@ -486,7 +556,13 @@ def estimate(
         else 0.0
     )
 
-    bubble = (t.PP - 1) / t.M if t.PP > 1 else 0.0
+    # Fill/drain overhead over useful time: f/(1-f) of the Eq-3 tick
+    # fraction — (PP-1)/M for the flush schedules, (PP-1)/(V·M) interleaved.
+    if t.PP > 1:
+        frac = schedule_bubble_fraction(t.schedule, t.PP, t.M, t.vstages)
+        bubble = frac / (1.0 - frac)
+    else:
+        bubble = 0.0
     exposed = (ta2a + tp2p + tdp) * (1.0 - overlap_fraction)
     t_step = (
         (tc * t.imbalance + t_disp + exposed) * (1 + bubble)

@@ -1,16 +1,21 @@
-"""Discrete-event simulator over the schedule IR (GPipe / 1F1B).
+"""Discrete-event simulator over the schedule IR (GPipe / 1F1B /
+interleaved 1F1B).
 
-Validates the paper's 1F1B analysis (Eq 4/5): peak in-flight microbatch
-activations per stage, bubble fraction, and step makespan.  Used by tests
-(cross-check against ``core.resource_model`` and the SPMD executor) and by
-the schedule benchmark.
+Validates the paper's pipeline analysis (Eq 3–5): peak in-flight microbatch
+(chunk) activations per stage, bubble fraction, and step makespan.  Used by
+tests (cross-check against ``core.resource_model`` and the SPMD executor)
+and by the schedule benchmark.
 
-The op *order* comes from ``core.schedules`` — the same tick-table IR the
-executor interprets — so simulator and executor can never drift apart.  The
-simulator replays each stage's IR op sequence with real durations: forward
-and backward work units take ``t_fwd`` / ``t_bwd`` (backward ~2x forward by
-default), and stage-to-stage hand-off is immediate (P2P cost is modeled
-separately in the resource model).  It is schedule-accurate, not
+The op *order* comes from ``core.schedules`` — the same vstage-aware
+tick-table IR the executor interprets — so simulator and executor can never
+drift apart.  The simulator replays each stage's IR op sequence with real
+durations: ``t_fwd`` / ``t_bwd`` are PER OP, i.e. per virtual-stage chunk
+(backward ~2x forward by default).  For interleaved schedules a chunk holds
+1/V of a stage's layers, so callers model equal total work by passing
+``t_fwd / V`` — the named entry points below do this — which is exactly how
+interleaving shrinks the fill/drain bubble from ``(PP-1)/(M+PP-1)`` to
+``(PP-1)/(V*M+PP-1)``.  Stage-to-stage hand-off is immediate (P2P cost is
+modeled separately in the resource model).  It is schedule-accurate, not
 time-accurate.
 """
 
@@ -20,13 +25,18 @@ from dataclasses import dataclass
 from typing import List
 
 from repro.core import schedules as sched_lib
-from repro.core.schedules import Schedule, peak_activations_1f1b  # noqa: F401
+from repro.core.schedules import (  # noqa: F401
+    Schedule,
+    peak_activations_1f1b,
+    peak_activations_interleaved,
+)
 
 
 @dataclass(frozen=True)
 class Op:
     stage: int
     mb: int
+    vs: int  # virtual stage (model chunk) on the stage
     kind: str  # "F" | "B"
     start: float
     end: float
@@ -38,21 +48,24 @@ class ScheduleResult:
     ops: List[Op]
     makespan: float
     bubble_fraction: float  # idle time / (stages * makespan)
-    peak_in_flight: List[int]  # per stage: max live fwd activations
+    peak_in_flight: List[int]  # per stage: max live fwd chunk activations
 
 
 def simulate(
     sched: Schedule, t_fwd: float = 1.0, t_bwd: float = 2.0
 ) -> ScheduleResult:
-    """Replay the IR's per-stage op order with real fwd/bwd durations —
-    through the same ``schedules.list_schedule`` dependency resolver that
-    built the IR, so the two cannot drift."""
+    """Replay the IR's per-stage op order with real per-chunk fwd/bwd
+    durations — through the same ``schedules.list_schedule`` dependency
+    resolver that built the IR, so the two cannot drift."""
     PP = sched.PP
     placed = sched_lib.list_schedule(
-        [sched.stage_order(s) for s in range(PP)], t_fwd=t_fwd, t_bwd=t_bwd
+        [sched.stage_order(s) for s in range(PP)],
+        t_fwd=t_fwd,
+        t_bwd=t_bwd,
+        V=sched.V,
     )
-    ops = [Op(s, mb, kind, start, end)
-           for s, (kind, mb), start, end in placed]
+    ops = [Op(s, mb, vs, kind, start, end)
+           for s, (kind, mb, vs), start, end in placed]
     # Peak in-flight residency: +1 per F, -1 per B, in start order per stage.
     in_flight = [0] * PP
     peak = [0] * PP
@@ -78,4 +91,22 @@ def one_f_one_b(PP: int, M: int, t_fwd: float = 1.0, t_bwd: float = 2.0) -> Sche
     return simulate(sched_lib.build("1f1b", PP, M), t_fwd, t_bwd)
 
 
-BY_NAME = {"gpipe": gpipe, "1f1b": one_f_one_b}
+def interleaved_1f1b(
+    PP: int, M: int, V: int = 2, t_fwd: float = 1.0, t_bwd: float = 2.0
+) -> ScheduleResult:
+    """Interleaved 1F1B over V virtual stages.  ``t_fwd``/``t_bwd`` are the
+    FULL-stage durations; each of the V chunks takes 1/V of them, so
+    makespans are directly comparable with :func:`one_f_one_b` at equal
+    total work."""
+    return simulate(
+        sched_lib.build("interleaved_1f1b", PP, M, V),
+        t_fwd / V,
+        t_bwd / V,
+    )
+
+
+BY_NAME = {
+    "gpipe": gpipe,
+    "1f1b": one_f_one_b,
+    "interleaved_1f1b": interleaved_1f1b,
+}

@@ -3,34 +3,61 @@
 A :class:`Schedule` is a per-stage, per-tick op table: at global clock tick
 ``t``, stage ``s`` executes exactly one of
 
-* ``("F", mb)`` — forward of microbatch ``mb`` through the stage;
-* ``("B", mb)`` — backward of microbatch ``mb`` (consumes the residual saved
-  by the matching F and the cotangent handed back by stage ``s+1``);
-* ``None``      — idle (a bubble tick).
+* ``("F", mb, vs)`` — forward of microbatch ``mb`` through the stage's
+  virtual stage (model chunk) ``vs``;
+* ``("B", mb, vs)`` — backward of microbatch ``mb`` through chunk ``vs``
+  (consumes the residual saved by the matching F and the cotangent handed
+  back by the next chunk);
+* ``None``          — idle (a bubble tick).
 
 The IR is the **single source of truth** for pipeline schedules: the
 discrete-event simulator (``core.schedule_sim``) replays it with real
-fwd/bwd durations to get makespan / bubble / peak-memory numbers, and the
-SPMD executor (``core.pipeline``) interprets the very same table tick by
-tick on the device mesh.  New schedules (interleaved / virtual stages) are
-added as pure builders here and both consumers pick them up unchanged.
+per-vstage fwd/bwd durations to get makespan / bubble / peak-memory
+numbers, and the SPMD executor (``core.pipeline``) interprets the very same
+table tick by tick on the device mesh.  New schedules are added as pure
+builders here and both consumers pick them up unchanged.
+
+Virtual stages (Megatron-style interleaving): the layer stack is split into
+``PP * V`` chunks; chunk ``c = vs * PP + stage`` lives on physical stage
+``stage`` as its virtual stage ``vs``.  A microbatch's forward visits the
+chunks in ``c`` order, so the chunk graph is a ring walk over the stages:
+after stage ``PP-1`` finishes chunk ``(PP-1, vs)`` the activation wraps
+around to stage 0's chunk ``(0, vs+1)``; cotangents walk the ring backwards.
+``V = 1`` reproduces the flat tables bit-for-bit (one chunk per stage,
+``vs == 0`` everywhere).  Interleaving trades bubble for memory and wire:
+the bubble fraction drops from ``(PP-1)/(M+PP-1)`` to
+``(PP-1)/(V*M+PP-1)`` (each fill/drain hop now costs one *chunk*, 1/V of a
+stage), at the price of ~V× residual-slot depth per stage and V× p2p
+hand-offs — exactly the trade ``core.resource_model`` prices and
+``core.planner`` ranks.
 
 Tick semantics match the executor's communication model: an op's outputs
 are ``lax.ppermute``-d at the END of its tick and become visible to the
-neighbor at the START of tick ``t+1``.  The builders therefore place ops by
+neighbor at the START of tick ``t+1``.  The wrap-around hand-offs
+(``PP-1 -> 0`` forward, ``0 -> PP-1`` backward) are ring edges of the same
+ppermute and cost the same one tick.  The builders therefore place ops by
 list-scheduling the canonical per-stage op orders with unit-time ops, which
 yields integral start ticks that respect
 
-    F(s, mb)  at tick  >  F(s-1, mb)        (activation hand-off)
-    B(s, mb)  at tick  >  B(s+1, mb)        (cotangent hand-off)
-    B(s, mb)  at tick  >  F(s, mb)          (residual exists)
+    F(chunk, mb)  at tick  >  F(prev_chunk, mb)     (activation hand-off)
+    B(chunk, mb)  at tick  >  B(next_chunk, mb)     (cotangent hand-off)
+    B(chunk, mb)  at tick  >  F(chunk, mb)          (residual exists)
 
-Residual slots: each (stage, mb) is assigned a fixed buffer slot for its
-whole residency — from the tick its input activation *arrives* (F tick of
-stage ``s-1`` plus one; F tick itself on stage 0) until its B op frees it.
-``Schedule.num_slots`` is the buffer depth the executor must allocate; for
-1F1B it is ``PP`` independent of M (the paper's Eq 4 point), for GPipe it
-is ``M``.
+where prev/next walk the ``c = vs * PP + stage`` chunk order.
+
+Residual slots: each (stage, vs, mb) is assigned a fixed buffer slot for
+its whole residency — from the tick its input activation *arrives*
+(prev-chunk F tick plus one; own F tick for the first chunk (0, 0)) until
+its B op frees it.  ``Schedule.num_slots`` is the buffer depth the executor
+must allocate; for 1F1B it is ``PP`` independent of M (the paper's Eq 4
+point), for GPipe it is ``M``, and for interleaved 1F1B it grows to
+``~2(PP-1) + (V-1)PP + 1`` on stage 0 — the Eq-4-style depth per stage.
+
+Every built schedule passes :func:`check_invariants` — the universal,
+builder-agnostic validity harness (one op per (stage, tick), hand-off
+ordering across stages *and* vstages, every (mb, vs) F'd and B'd exactly
+once, slot-lifetime disjointness, and ``num_slots`` equal to the peak of
+the residency trace) — so new builders are validated by construction.
 """
 
 from __future__ import annotations
@@ -43,10 +70,38 @@ import numpy as np
 
 from repro.configs.base import SCHEDULES
 
-Op = Tuple[str, int]  # ("F"|"B", mb)
+Op = Tuple[str, int, int]  # ("F"|"B", mb, vstage)
 
 # Integer op encoding for the executor's tick tables.
 OP_IDLE, OP_F, OP_B = 0, 1, 2
+
+
+class InvariantViolation(AssertionError):
+    """A schedule table breaks one of the IR invariants (see
+    :func:`check_invariants`)."""
+
+
+# ---------------------------------------------------------------------------
+# Chunk topology (the ring walk of virtual stages)
+# ---------------------------------------------------------------------------
+
+
+def prev_chunk(stage: int, vs: int, PP: int, V: int) -> Optional[Tuple[int, int]]:
+    """The chunk a forward activation arrives FROM (None: raw input)."""
+    if stage > 0:
+        return (stage - 1, vs)
+    if vs > 0:
+        return (PP - 1, vs - 1)  # wrap-around ring edge
+    return None
+
+
+def next_chunk(stage: int, vs: int, PP: int, V: int) -> Optional[Tuple[int, int]]:
+    """The chunk a forward activation is handed TO (None: loss head)."""
+    if stage < PP - 1:
+        return (stage + 1, vs)
+    if vs < V - 1:
+        return (0, vs + 1)  # wrap-around ring edge
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -55,27 +110,72 @@ OP_IDLE, OP_F, OP_B = 0, 1, 2
 
 
 def gpipe_order(PP: int, M: int, stage: int) -> List[Op]:
-    """GPipe: all forwards, then all backwards."""
-    return [("F", m) for m in range(M)] + [("B", m) for m in range(M)]
+    """GPipe: all forwards, then all backwards (V = 1)."""
+    return [("F", m, 0) for m in range(M)] + [("B", m, 0) for m in range(M)]
 
 
 def one_f_one_b_order(PP: int, M: int, stage: int) -> List[Op]:
     """1F1B (PipeDream-flush): stage ``s`` warms up with ``PP - s``
-    forwards, then alternates 1B/1F, then drains the remaining backwards."""
+    forwards, then alternates 1B/1F, then drains the remaining backwards
+    (V = 1)."""
     warmup = min(PP - stage, M)
-    seq: List[Op] = [("F", m) for m in range(warmup)]
+    seq: List[Op] = [("F", m, 0) for m in range(warmup)]
     f_next, b_next = warmup, 0
     while b_next < M:
-        seq.append(("B", b_next))
+        seq.append(("B", b_next, 0))
         b_next += 1
         if f_next < M:
-            seq.append(("F", f_next))
+            seq.append(("F", f_next, 0))
             f_next += 1
     return seq
 
 
-_ORDERS = {"gpipe": gpipe_order, "1f1b": one_f_one_b_order}
+def interleaved_1f1b_order(PP: int, M: int, V: int, stage: int) -> List[Op]:
+    """Megatron-style interleaved 1F1B over ``V`` virtual stages.
+
+    Work units are (mb, chunk) pairs processed in groups of PP
+    microbatches: forwards walk group 0 through chunks 0..V-1, then group 1,
+    ...; backwards walk the chunks in reverse.  Stage ``s`` warms up with
+    ``2(PP-s-1) + (V-1)PP`` forward units (the 2x depth is what keeps the
+    steady state bubble-free across the chunk ring), then alternates
+    1F/1B, then drains.  Requires ``M % PP == 0`` (Megatron's constraint);
+    ``V = 1`` reduces exactly to :func:`one_f_one_b_order`.
+    """
+    if V == 1:
+        return one_f_one_b_order(PP, M, stage)
+    assert M % PP == 0, (M, PP)
+    total = M * V
+    group = PP * V
+
+    def f_unit(i: int) -> Op:
+        g, pos = divmod(i, group)
+        return ("F", g * PP + pos % PP, pos // PP)
+
+    def b_unit(j: int) -> Op:
+        g, pos = divmod(j, group)
+        return ("B", g * PP + pos % PP, V - 1 - pos // PP)
+
+    warmup = min(2 * (PP - stage - 1) + (V - 1) * PP, total)
+    seq = [f_unit(i) for i in range(warmup)]
+    for i in range(warmup, total):  # steady state: 1F then 1B
+        seq.append(f_unit(i))
+        seq.append(b_unit(i - warmup))
+    seq += [b_unit(j) for j in range(total - warmup, total)]
+    return seq
+
+
+_ORDERS = {
+    "gpipe": gpipe_order,
+    "1f1b": one_f_one_b_order,
+    "interleaved_1f1b": interleaved_1f1b_order,
+}
 assert set(_ORDERS) == set(SCHEDULES), "configs.base.SCHEDULES drifted"
+
+
+def _stage_orders(name: str, PP: int, M: int, V: int) -> List[List[Op]]:
+    if name == "interleaved_1f1b":
+        return [interleaved_1f1b_order(PP, M, V, s) for s in range(PP)]
+    return [_ORDERS[name](PP, M, s) for s in range(PP)]
 
 
 # ---------------------------------------------------------------------------
@@ -90,13 +190,15 @@ class Schedule:
     name: str
     PP: int
     M: int
+    V: int  # virtual stages (model chunks) per physical stage
     num_ticks: int
-    # ops[stage][tick] -> ("F"|"B", mb) or None (idle)
+    # ops[stage][tick] -> ("F"|"B", mb, vs) or None (idle)
     ops: Tuple[Tuple[Optional[Op], ...], ...]
-    # max simultaneously-live (F-done, B-pending) microbatches per stage
+    # max simultaneously-live (F-done, B-pending) chunk activations per stage
     peak_in_flight: Tuple[int, ...]
-    # residual-buffer geometry: fixed slot per (stage, mb), depth num_slots
-    slots: Tuple[Tuple[int, ...], ...]  # slots[stage][mb]
+    # residual-buffer geometry: fixed slot per (stage, vs, mb), depth
+    # num_slots
+    slots: Tuple[Tuple[Tuple[int, ...], ...], ...]  # slots[stage][vs][mb]
     num_slots: int
 
     # -- views --------------------------------------------------------------
@@ -105,18 +207,19 @@ class Schedule:
         """Execution order of a stage's ops (idle ticks dropped)."""
         return [op for op in self.ops[stage] if op is not None]
 
-    def op_ticks(self, kind: str) -> Dict[Tuple[int, int], int]:
-        """{(stage, mb): tick} for every op of ``kind``."""
+    def op_ticks(self, kind: str) -> Dict[Tuple[int, int, int], int]:
+        """{(stage, vs, mb): tick} for every op of ``kind``."""
         return {
-            (s, op[1]): t
+            (s, op[2], op[1]): t
             for s, row in enumerate(self.ops)
             for t, op in enumerate(row)
             if op is not None and op[0] == kind
         }
 
     def occupancy_trace(self) -> np.ndarray:
-        """(PP, num_ticks) int32: live (F-done, B-pending) microbatches per
-        stage AFTER each tick — the executor must reproduce this exactly."""
+        """(PP, num_ticks) int32: live (F-done, B-pending) chunk activations
+        per stage AFTER each tick — the executor must reproduce this
+        exactly."""
         out = np.zeros((self.PP, self.num_ticks), np.int32)
         for s, row in enumerate(self.ops):
             live = 0
@@ -126,12 +229,33 @@ class Schedule:
                 out[s, t] = live
         return out
 
+    def p2p_events(self) -> int:
+        """Wire hand-offs the executor performs: one per F with a next
+        chunk plus one per B with a prev chunk (interleaving multiplies
+        these ~V×)."""
+        n = 0
+        for s, row in enumerate(self.ops):
+            for op in row:
+                if op is None:
+                    continue
+                k, _m, vs = op
+                if k == "F" and next_chunk(s, vs, self.PP, self.V):
+                    n += 1
+                if k == "B" and prev_chunk(s, vs, self.PP, self.V):
+                    n += 1
+        return n
+
     def describe(self) -> str:
         rows = []
         for s, row in enumerate(self.ops):
-            cells = [
-                "   . " if op is None else f"{op[0]}{op[1]:<3d} " for op in row
-            ]
+            cells = []
+            for op in row:
+                if op is None:
+                    cells.append("    .  " if self.V > 1 else "   . ")
+                elif self.V > 1:
+                    cells.append(f"{op[0]}{op[2]}.{op[1]:<3d} ")
+                else:
+                    cells.append(f"{op[0]}{op[1]:<3d} ")
             rows.append(f"stage {s}: " + "".join(cells))
         return "\n".join(rows)
 
@@ -142,7 +266,10 @@ class Schedule:
 
 
 def list_schedule(
-    stage_orders: List[List[Op]], t_fwd: float = 1.0, t_bwd: float = 2.0
+    stage_orders: List[List[Op]],
+    t_fwd: float = 1.0,
+    t_bwd: float = 2.0,
+    V: int = 1,
 ) -> List[Tuple[int, Op, float, float]]:
     """Greedy dependency-resolving list scheduler over per-stage op orders.
 
@@ -150,15 +277,17 @@ def list_schedule(
     with unit durations, so starts become integral ticks — and the
     discrete-event simulator call this):
 
-        F(s, mb) waits on F(s-1, mb);  B(s, mb) waits on F(s, mb) and,
-        below the last stage, on B(s+1, mb);  each stage is sequential.
+        F(chunk, mb) waits on F(prev_chunk, mb);  B(chunk, mb) waits on
+        F(chunk, mb) and, below the last chunk, on B(next_chunk, mb);
+        each stage is sequential.  Durations are PER OP, i.e. per chunk
+        (callers model interleaving by passing per-vstage durations).
 
     Returns [(stage, op, start, end)] or raises on a deadlocked order.
     """
     PP = len(stage_orders)
     pending = {s: list(stage_orders[s]) for s in range(PP)}
-    done_f: Dict[Tuple[int, int], float] = {}
-    done_b: Dict[Tuple[int, int], float] = {}
+    done_f: Dict[Tuple[int, int, int], float] = {}
+    done_b: Dict[Tuple[int, int, int], float] = {}
     t_stage = [0.0] * PP
     placed: List[Tuple[int, Op, float, float]] = []
 
@@ -167,16 +296,18 @@ def list_schedule(
         progressed = False
         for s in range(PP):
             while pending[s]:
-                kind, mb = pending[s][0]
+                kind, mb, vs = pending[s][0]
                 if kind == "F":
-                    dep = 0.0 if s == 0 else done_f.get((s - 1, mb))
+                    prv = prev_chunk(s, vs, PP, V)
+                    dep = 0.0 if prv is None else done_f.get(prv + (mb,))
                 else:
+                    nxt = next_chunk(s, vs, PP, V)
                     dep = (
-                        done_f.get((s, mb))
-                        if s == PP - 1
-                        else done_b.get((s + 1, mb))
+                        done_f.get((s, vs, mb))
+                        if nxt is None
+                        else done_b.get(nxt + (mb,))
                     )
-                    if dep is not None and done_f.get((s, mb)) is None:
+                    if dep is not None and done_f.get((s, vs, mb)) is None:
                         dep = None
                 if dep is None:
                     break
@@ -184,19 +315,20 @@ def list_schedule(
                 start = max(t_stage[s], dep)
                 end = start + dur
                 t_stage[s] = end
-                (done_f if kind == "F" else done_b)[(s, mb)] = end
-                placed.append((s, (kind, mb), start, end))
+                (done_f if kind == "F" else done_b)[(s, vs, mb)] = end
+                placed.append((s, (kind, mb, vs), start, end))
                 pending[s].pop(0)
                 progressed = True
     assert not any(pending.values()), "deadlocked op order"
     return placed
 
 
-def _place_ops(name: str, PP: int, M: int) -> List[List[Optional[Op]]]:
+def _place_ops(
+    name: str, PP: int, M: int, V: int
+) -> List[List[Optional[Op]]]:
     """Unit-time list scheduling of the canonical per-stage orders."""
-    order = _ORDERS[name]
     placed = list_schedule(
-        [order(PP, M, s) for s in range(PP)], t_fwd=1.0, t_bwd=1.0
+        _stage_orders(name, PP, M, V), t_fwd=1.0, t_bwd=1.0, V=V
     )
     T = int(max(end for _, _, _, end in placed))
     table: List[List[Optional[Op]]] = [[None] * T for _ in range(PP)]
@@ -207,69 +339,222 @@ def _place_ops(name: str, PP: int, M: int) -> List[List[Optional[Op]]]:
     return table
 
 
+def _residency(
+    f: Dict[Tuple[int, int, int], int],
+    b: Dict[Tuple[int, int, int], int],
+    stage: int,
+    PP: int,
+    V: int,
+    M: int,
+) -> List[Tuple[int, int, Tuple[int, int]]]:
+    """[(alloc_tick, free_tick, (vs, mb))] residual residencies of a stage:
+    a chunk input lives from the tick it ARRIVES (prev-chunk F + 1; own F
+    tick for the raw-input chunk (0, 0)) until its B op frees it."""
+    out = []
+    for vs in range(V):
+        for mb in range(M):
+            prv = prev_chunk(stage, vs, PP, V)
+            alloc = (
+                f[(stage, vs, mb)] if prv is None else f[prv + (mb,)] + 1
+            )
+            out.append((alloc, b[(stage, vs, mb)], (vs, mb)))
+    return out
+
+
 def _assign_slots(
-    table: List[List[Optional[Op]]], PP: int, M: int
-) -> Tuple[Tuple[Tuple[int, ...], ...], int]:
-    """Fixed residual slot per (stage, mb): smallest free slot over the
-    arrival→backward lifetime."""
-    f_tick = {
-        (s, op[1]): t
+    table: List[List[Optional[Op]]], PP: int, M: int, V: int
+) -> Tuple[Tuple[Tuple[Tuple[int, ...], ...], ...], int]:
+    """Fixed residual slot per (stage, vs, mb): smallest free slot over the
+    arrival→backward lifetime (greedy over sorted arrivals — optimal depth
+    for interval graphs, so ``num_slots`` equals the peak residency)."""
+    f = {
+        (s, op[2], op[1]): t
         for s, row in enumerate(table)
         for t, op in enumerate(row)
         if op and op[0] == "F"
     }
-    b_tick = {
-        (s, op[1]): t
+    b = {
+        (s, op[2], op[1]): t
         for s, row in enumerate(table)
         for t, op in enumerate(row)
         if op and op[0] == "B"
     }
-    slots: List[Tuple[int, ...]] = []
+    slots: List[Tuple[Tuple[int, ...], ...]] = []
     depth = 0
     for s in range(PP):
-        lifetimes = []
-        for mb in range(M):
-            alloc = f_tick[(s, mb)] if s == 0 else f_tick[(s - 1, mb)] + 1
-            lifetimes.append((alloc, b_tick[(s, mb)], mb))
         free_at: List[int] = []  # free_at[slot] = first tick slot is free
-        stage_slots = [0] * M
-        for alloc, free, mb in sorted(lifetimes):
+        stage_slots = [[0] * M for _ in range(V)]
+        for alloc, free, (vs, mb) in sorted(_residency(f, b, s, PP, V, M)):
             for i, fa in enumerate(free_at):
                 if fa <= alloc:
-                    stage_slots[mb] = i
+                    stage_slots[vs][mb] = i
                     free_at[i] = free + 1
                     break
             else:
-                stage_slots[mb] = len(free_at)
+                stage_slots[vs][mb] = len(free_at)
                 free_at.append(free + 1)
-        slots.append(tuple(stage_slots))
+        slots.append(tuple(tuple(row) for row in stage_slots))
         depth = max(depth, len(free_at))
     return tuple(slots), depth
 
 
-def _validate(sched: Schedule) -> None:
+# ---------------------------------------------------------------------------
+# The universal schedule-invariant harness
+# ---------------------------------------------------------------------------
+
+
+def _require(cond: bool, sched: "Schedule", what: str, *ctx) -> None:
+    if not cond:
+        raise InvariantViolation(
+            f"{sched.name}(PP={sched.PP}, M={sched.M}, V={sched.V}): {what}"
+            + (f" {ctx}" if ctx else "")
+        )
+
+
+def check_invariants(sched: Schedule) -> None:
+    """Validate a schedule table against the IR contract — builder-agnostic,
+    so ANY new schedule is checked by construction.  Raises
+    :class:`InvariantViolation` on the first failure.  Covered:
+
+    1. table shape: PP rows of num_ticks cells, at most one well-formed op
+       per (stage, tick);
+    2. completeness: every (stage, vs, mb) is F'd and B'd exactly once;
+    3. residual exists: B(chunk, mb) after F(chunk, mb);
+    4. hand-off ordering across stages AND vstages: F(chunk) strictly after
+       F(prev_chunk), B(chunk) strictly after B(next_chunk) — one ppermute
+       tick per (possibly wrap-around) edge;
+    5. slot geometry: slots shaped (PP, V, M), ids < num_slots, and no two
+       residencies overlap in the same (stage, slot);
+    6. num_slots == the max of the residency occupancy trace (the depth is
+       minimal, not just sufficient);
+    7. peak_in_flight == per-stage max of the F-minus-B occupancy trace,
+       which drains to zero.
+    """
+    PP, M, V, T = sched.PP, sched.M, sched.V, sched.num_ticks
+
+    # 1. shape + well-formed ops
+    _require(len(sched.ops) == PP, sched, "ops must have PP rows")
+    for s, row in enumerate(sched.ops):
+        _require(len(row) == T, sched, "row length != num_ticks", s)
+        for t, op in enumerate(row):
+            if op is None:
+                continue
+            _require(
+                len(op) == 3
+                and op[0] in ("F", "B")
+                and 0 <= op[1] < M
+                and 0 <= op[2] < V,
+                sched, "malformed op", s, t, op,
+            )
+
+    # 2. completeness
     f = sched.op_ticks("F")
     b = sched.op_ticks("B")
-    PP, M = sched.PP, sched.M
+    want = {(s, vs, mb) for s in range(PP) for vs in range(V) for mb in range(M)}
+    _require(set(f) == want, sched, "every (stage, vs, mb) F'd exactly once")
+    _require(set(b) == want, sched, "every (stage, vs, mb) B'd exactly once")
+    n_ops = sum(1 for row in sched.ops for op in row if op is not None)
+    _require(n_ops == 2 * PP * V * M, sched, "duplicate ops in the table")
+
+    # 3 + 4. residual + hand-off ordering over the chunk ring
     for s in range(PP):
-        for mb in range(M):
-            assert (s, mb) in f and (s, mb) in b, (sched.name, s, mb)
-            assert b[(s, mb)] > f[(s, mb)]
-            if s > 0:
-                assert f[(s, mb)] > f[(s - 1, mb)]
-            if s < PP - 1:
-                assert b[(s, mb)] > b[(s + 1, mb)]
+        for vs in range(V):
+            for mb in range(M):
+                c = (s, vs, mb)
+                _require(b[c] > f[c], sched, "B before its F", c)
+                prv = prev_chunk(s, vs, PP, V)
+                if prv is not None:
+                    _require(
+                        f[c] > f[prv + (mb,)], sched,
+                        "F hand-off not strictly later", c,
+                    )
+                nxt = next_chunk(s, vs, PP, V)
+                if nxt is not None:
+                    _require(
+                        b[c] > b[nxt + (mb,)], sched,
+                        "B hand-off not strictly later", c,
+                    )
+
+    # 5 + 6. slot geometry and minimal depth
+    _require(
+        len(sched.slots) == PP
+        and all(len(sv) == V and all(len(row) == M for row in sv)
+                for sv in sched.slots),
+        sched, "slots must be shaped (PP, V, M)",
+    )
+    max_resident = 0
+    for s in range(PP):
+        res = _residency(f, b, s, PP, V, M)
+        by_slot: Dict[int, List[Tuple[int, int]]] = {}
+        events = []
+        for alloc, free, (vs, mb) in res:
+            slot = sched.slots[s][vs][mb]
+            _require(
+                0 <= slot < sched.num_slots, sched, "slot id out of range",
+                s, vs, mb, slot,
+            )
+            by_slot.setdefault(slot, []).append((alloc, free))
+            events.append((alloc, free))
+        for slot, intervals in by_slot.items():
+            intervals.sort()
+            for (a0, f0), (a1, _) in zip(intervals, intervals[1:]):
+                _require(
+                    f0 < a1, sched, "overlapping residencies in one slot",
+                    s, slot, (a0, f0), a1,
+                )
+        # peak simultaneous residencies of the stage (sweep line)
+        for t in {a for a, _ in events}:
+            live = sum(1 for a, fr in events if a <= t <= fr)
+            max_resident = max(max_resident, live)
+    _require(
+        sched.num_slots == max_resident, sched,
+        "num_slots != max of the residency occupancy trace",
+        sched.num_slots, max_resident,
+    )
+
+    # 7. occupancy trace: peaks match, drains to zero, never negative
+    occ = sched.occupancy_trace()
+    _require(
+        tuple(int(x) for x in occ.max(axis=1)) == tuple(sched.peak_in_flight),
+        sched, "peak_in_flight != occupancy-trace maxima",
+    )
+    _require(bool((occ[:, -1] == 0).all()), sched, "schedule does not drain")
+    _require(bool((occ >= 0).all()), sched, "negative occupancy (B before F)")
+
+
+# ---------------------------------------------------------------------------
+# build
+# ---------------------------------------------------------------------------
 
 
 @lru_cache(maxsize=None)
-def build(name: str, PP: int, M: int) -> Schedule:
-    """Build (and cache) the tick-table IR for a named schedule."""
+def build(name: str, PP: int, M: int, V: int = 1) -> Schedule:
+    """Build (and cache) the tick-table IR for a named schedule.
+
+    ``V`` is part of the cache key: interleaved tables for different
+    virtual-stage counts are distinct schedules (a V-less key would alias
+    them).  ``V > 1`` is only meaningful for ``interleaved_1f1b`` and
+    requires ``M % PP == 0``; callers binding a model must additionally
+    ensure ``V`` divides the layers-per-stage count (the executor asserts
+    it)."""
     if name not in _ORDERS:
         raise ValueError(
             f"unknown schedule {name!r}; available: {sorted(_ORDERS)}"
         )
     assert PP >= 1 and M >= 1, (PP, M)
-    table = _place_ops(name, PP, M)
+    if V < 1:
+        raise ValueError(f"vstages must be >= 1, got {V}")
+    if V > 1 and name != "interleaved_1f1b":
+        raise ValueError(
+            f"schedule {name!r} has no virtual-stage form; use "
+            f"'interleaved_1f1b' for V={V} > 1"
+        )
+    if V > 1 and M % PP:
+        raise ValueError(
+            f"interleaved_1f1b requires M % PP == 0 (Megatron's "
+            f"constraint), got M={M}, PP={PP}"
+        )
+    table = _place_ops(name, PP, M, V)
     occupancy = []
     for s in range(PP):
         live = peak = 0
@@ -278,18 +563,19 @@ def build(name: str, PP: int, M: int) -> Schedule:
                 live += 1 if op[0] == "F" else -1
                 peak = max(peak, live)
         occupancy.append(peak)
-    slots, depth = _assign_slots(table, PP, M)
+    slots, depth = _assign_slots(table, PP, M, V)
     sched = Schedule(
         name=name,
         PP=PP,
         M=M,
+        V=V,
         num_ticks=len(table[0]),
         ops=tuple(tuple(row) for row in table),
         peak_in_flight=tuple(occupancy),
         slots=slots,
         num_slots=depth,
     )
-    _validate(sched)
+    check_invariants(sched)
     return sched
 
 
@@ -305,22 +591,28 @@ class TickTables:
 
     ``arrive_fwd``/``arrive_bwd`` give the residual-buffer slot into which a
     wire payload arriving at the START of a tick must be stored (-1: no
-    arrival): the activation ppermuted by stage ``s-1``'s F at ``t-1``, and
-    the cotangent ppermuted by stage ``s+1``'s B at ``t-1``, respectively.
+    arrival): the activation ppermuted by the prev chunk's F at ``t-1``, and
+    the cotangent ppermuted by the next chunk's B at ``t-1``, respectively.
+    With virtual stages the chunk ring's wrap-around edges make stage 0 a
+    forward receiver (from stage PP-1) and stage PP-1 a backward receiver
+    (from stage 0); each stage still receives at most one payload per
+    direction per tick, because each sender ppermutes one payload per tick.
     """
 
     kind: np.ndarray  # (PP, T) in {OP_IDLE, OP_F, OP_B}
     mb: np.ndarray  # (PP, T) microbatch of the op (0 when idle)
-    slot: np.ndarray  # (PP, T) residual slot of the op's mb (0 when idle)
+    vs: np.ndarray  # (PP, T) virtual stage (chunk) of the op (0 when idle)
+    slot: np.ndarray  # (PP, T) residual slot of the op's (vs, mb) (0 idle)
     arrive_fwd: np.ndarray  # (PP, T) slot to store arriving activation, -1
     arrive_fwd_mb: np.ndarray  # (PP, T) arriving microbatch id, -1
     arrive_bwd: np.ndarray  # (PP, T) slot to store arriving cotangent, -1
 
 
 def tick_tables(sched: Schedule) -> TickTables:
-    PP, T = sched.PP, sched.num_ticks
+    PP, T, V = sched.PP, sched.num_ticks, sched.V
     kind = np.zeros((PP, T), np.int32)
     mb = np.zeros((PP, T), np.int32)
+    vs = np.zeros((PP, T), np.int32)
     slot = np.zeros((PP, T), np.int32)
     arrive_fwd = np.full((PP, T), -1, np.int32)
     arrive_fwd_mb = np.full((PP, T), -1, np.int32)
@@ -329,22 +621,33 @@ def tick_tables(sched: Schedule) -> TickTables:
         for t, op in enumerate(sched.ops[s]):
             if op is None:
                 continue
-            k, m = op
+            k, m, v = op
             kind[s, t] = OP_F if k == "F" else OP_B
             mb[s, t] = m
-            slot[s, t] = sched.slots[s][m]
-            if k == "F" and s + 1 < PP and t + 1 < T:
-                arrive_fwd[s + 1, t + 1] = sched.slots[s + 1][m]
-                arrive_fwd_mb[s + 1, t + 1] = m
-            if k == "B" and s > 0 and t + 1 < T:
-                arrive_bwd[s - 1, t + 1] = sched.slots[s - 1][m]
-    return TickTables(kind, mb, slot, arrive_fwd, arrive_fwd_mb, arrive_bwd)
+            vs[s, t] = v
+            slot[s, t] = sched.slots[s][v][m]
+            if k == "F":
+                nxt = next_chunk(s, v, PP, V)
+                if nxt is not None and t + 1 < T:
+                    ns, nv = nxt
+                    assert arrive_fwd[ns, t + 1] == -1, "fwd arrival clash"
+                    arrive_fwd[ns, t + 1] = sched.slots[ns][nv][m]
+                    arrive_fwd_mb[ns, t + 1] = m
+            if k == "B":
+                prv = prev_chunk(s, v, PP, V)
+                if prv is not None and t + 1 < T:
+                    ps, pv = prv
+                    assert arrive_bwd[ps, t + 1] == -1, "bwd arrival clash"
+                    arrive_bwd[ps, t + 1] = sched.slots[ps][pv][m]
+    return TickTables(
+        kind, mb, vs, slot, arrive_fwd, arrive_fwd_mb, arrive_bwd
+    )
 
 
 def forward_tick_tables(PP: int, M: int) -> Tuple[np.ndarray, np.ndarray, int]:
     """F-projection of the IR for the forward-only executor: masks/microbatch
-    ids over the first ``M + PP - 1`` ticks (every schedule's F ops occupy
-    the same warmup-free prefix; the IR is validated to agree).
+    ids over the first ``M + PP - 1`` ticks (every flat schedule's F ops
+    occupy the same warmup-free prefix; the IR is validated to agree).
 
     Returns (valid (PP, Tf) bool, mb (PP, Tf) int32, Tf).
     """
@@ -352,7 +655,7 @@ def forward_tick_tables(PP: int, M: int) -> Tuple[np.ndarray, np.ndarray, int]:
     Tf = M + PP - 1
     valid = np.zeros((PP, Tf), bool)
     mb = np.zeros((PP, Tf), np.int32)
-    for (s, m), t in sched.op_ticks("F").items():
+    for (s, _vs, m), t in sched.op_ticks("F").items():
         assert t < Tf and t == s + m, (
             "gpipe F-projection must be the canonical staircase"
         )
@@ -364,3 +667,14 @@ def forward_tick_tables(PP: int, M: int) -> Tuple[np.ndarray, np.ndarray, int]:
 def peak_activations_1f1b(PP: int) -> List[int]:
     """Paper Eq 4: stage i holds (PP - i) in-flight microbatches at peak."""
     return [PP - i for i in range(PP)]
+
+
+def peak_activations_interleaved(PP: int, M: int, V: int) -> List[int]:
+    """Eq-4 analogue for interleaved 1F1B: stage ``s`` peaks at
+    ``2(PP-s-1) + (V-1)PP + 1`` in-flight CHUNK activations (each 1/V of a
+    stage's layers), capped by the V*M total.  V=1 reduces to Eq 4."""
+    if V == 1:
+        return [min(PP - s, M) for s in range(PP)]
+    return [
+        min(2 * (PP - s - 1) + (V - 1) * PP + 1, V * M) for s in range(PP)
+    ]

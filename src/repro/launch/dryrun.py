@@ -98,6 +98,7 @@ def run_cell(
     multi_pod: bool,
     pipeline: bool = False,
     schedule: str = None,
+    vstages: int = None,
     hierarchical_a2a: bool = False,
     compress_p2p: bool = False,
     remat: str = None,
@@ -133,6 +134,7 @@ def run_cell(
         "multi_pod": multi_pod,
         "pipeline": pipeline,
         "schedule": schedule,
+        "vstages": vstages,
         "hierarchical_a2a": hierarchical_a2a,
         "compress_p2p": compress_p2p,
         "dispatch": arch.moe.dispatch if arch.moe else None,
@@ -157,6 +159,7 @@ def run_cell(
             arch,
             pipeline_on_pod=pipeline,
             schedule=schedule or DEFAULT_SCHEDULE,
+            vstages=vstages or 1,
             remat=remat or auto_remat,
             optimizer_dtype=opt_dtype,
             hierarchical_a2a=hierarchical_a2a,
@@ -178,6 +181,7 @@ def run_cell(
             tp=plan.tp,
             pp=plan.pp,
             schedule=plan.schedule if plan.pp > 1 else None,
+            vstages=plan.vstages if plan.pp > 1 else None,
             optimizer_dtype=opt_dtype,
             remat=plan.remat,
         )
@@ -371,7 +375,9 @@ def main():
     ap.add_argument("--pipeline", action="store_true",
                     help="Piper: pipeline stages over the pod axis")
     ap.add_argument("--schedule", default=None,
-                    help="pipeline schedule (gpipe|1f1b)")
+                    help="pipeline schedule (gpipe|1f1b|interleaved_1f1b)")
+    ap.add_argument("--vstages", type=int, default=None,
+                    help="virtual stages per stage (interleaved_1f1b)")
     ap.add_argument("--hierarchical-a2a", action="store_true")
     ap.add_argument("--compress-p2p", action="store_true")
     ap.add_argument("--remat", default=None)
@@ -393,6 +399,7 @@ def main():
         args.multi_pod,
         pipeline=args.pipeline,
         schedule=args.schedule,
+        vstages=args.vstages,
         hierarchical_a2a=args.hierarchical_a2a,
         compress_p2p=args.compress_p2p,
         remat=args.remat,

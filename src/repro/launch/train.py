@@ -31,8 +31,11 @@ def main():
                     help="comma mesh shape, e.g. 2,2,2 -> (pod,data,model)")
     ap.add_argument("--pipeline", action="store_true")
     ap.add_argument("--schedule", default=None,
-                    help="pipeline schedule (gpipe|1f1b); default: the "
-                         "planner's choice, else 1f1b")
+                    help="pipeline schedule (gpipe|1f1b|interleaved_1f1b); "
+                         "default: the planner's choice, else 1f1b")
+    ap.add_argument("--vstages", type=int, default=None,
+                    help="virtual stages per pipeline stage (interleaved "
+                         "schedules); default: the planner's choice, else 1")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--corpus", default=None, help="memmap token corpus path")
@@ -69,13 +72,34 @@ def main():
         print(f"[planner] production-strategy for {args.arch} @256xv5e:")
         print("          " + best.describe())
 
-    # The schedule binds planner -> plan -> executor: an explicit flag wins,
-    # else inherit the planner's ranked choice.
+    # The schedule (and its vstage depth) binds planner -> plan -> executor:
+    # an explicit flag wins, else inherit the planner's ranked choice.  An
+    # explicit --schedule drops the planner's vstages (they belong to ITS
+    # schedule), unless --vstages is also given.
     from repro.configs.base import DEFAULT_SCHEDULE
 
-    schedule = args.schedule or (
-        best.schedule if best is not None else DEFAULT_SCHEDULE
-    )
+    if args.schedule:
+        schedule = args.schedule
+        vstages = args.vstages or 1
+    else:
+        schedule = best.schedule if best is not None else DEFAULT_SCHEDULE
+        vstages = args.vstages or (best.vstages if best is not None else 1)
+        if args.vstages is None and args.pipeline and args.mesh and vstages > 1:
+            # The planner's V is sized for the production config; this run's
+            # (possibly --reduced) layer stack over THIS mesh may not split
+            # that deep.  Clamp to the largest feasible divisor — an explicit
+            # --vstages is respected (and asserted) as given.
+            pp = int(args.mesh.split(",")[0])
+            reps = arch.num_layers // len(arch.block_pattern)
+            rps = max(reps // pp, 1)
+            want = vstages
+            vstages = max(v for v in range(1, min(vstages, rps) + 1)
+                          if rps % v == 0)
+            if vstages != want:
+                print(f"[planner] vstages {want} -> {vstages} (layer reps "
+                      f"per stage: {rps})")
+            if vstages == 1 and schedule == "interleaved_1f1b":
+                schedule = DEFAULT_SCHEDULE
 
     # Same for the expert dispatch: flag wins, else the planner's choice
     # binds into MoECfg.dispatch (the MoE layer executes whatever the
@@ -98,7 +122,8 @@ def main():
         names = ("pod", "data", "model")[-len(shape):]
         mesh = host_mesh(shape, names)
         plan = make_plan(
-            mesh, arch, pipeline_on_pod=args.pipeline, schedule=schedule
+            mesh, arch, pipeline_on_pod=args.pipeline, schedule=schedule,
+            vstages=vstages if args.pipeline else 1,
         )
     elif n_dev > 1:
         mesh = host_mesh((1, n_dev), ("data", "model"))
@@ -107,7 +132,9 @@ def main():
         plan = single_device_plan(arch)
     print(f"[mesh] devices={plan.num_devices} ep={plan.ep} tp={plan.tp} "
           f"pp={plan.pp} dp_axes={plan.dp_axes}"
-          + (f" schedule={plan.schedule}" if plan.pp > 1 else ""))
+          + (f" schedule={plan.schedule}" if plan.pp > 1 else "")
+          + (f" vstages={plan.vstages}"
+             if plan.pp > 1 and plan.vstages > 1 else ""))
 
     lm = LanguageModel(arch, plan, impl=args.impl)
     opt = OptimizerConfig(lr=args.lr, total_steps=args.steps)

@@ -397,11 +397,21 @@ class LanguageModel:
 
         return head_fn
 
-    def loss_and_grads(self, params, batch, *, schedule: Optional[str] = None):
-        """Pipelined loss AND gradients under a schedule IR (``plan.schedule``
-        unless overridden) — the training path for pipelined plans, replacing
+    def loss_and_grads(
+        self,
+        params,
+        batch,
+        *,
+        schedule: Optional[str] = None,
+        vstages: Optional[int] = None,
+    ):
+        """Pipelined loss AND gradients under a schedule IR
+        (``plan.schedule``/``plan.vstages`` unless overridden) — the
+        training path for pipelined plans, replacing
         ``jax.grad``-through-the-forward so the executed op order is the
-        schedule's, not reverse-mode AD's.
+        schedule's, not reverse-mode AD's.  An overriding flat ``schedule``
+        runs at V=1; pass ``vstages`` with an interleaved override to pick
+        the chunk depth.
 
         Returns (loss, grads, metrics) with ``grads`` matching the ``params``
         tree; ``metrics["pipeline_occupancy"]`` carries the executed (PP,
@@ -433,6 +443,7 @@ class LanguageModel:
             head_fn=self._make_head_fn(),
             head_params=head_params,
             schedule=schedule,
+            vstages=vstages,
             impl=self.impl,
             embed_fn=embed_fn,
             embed_params=embed_params,

@@ -193,7 +193,8 @@ class Trainer:
             # order, not jax.grad's.
             self.log(
                 f"[trainer] pipelined: PP={plan.pp} schedule={plan.schedule} "
-                f"(M={plan.microbatches or 2 * plan.pp})"
+                + (f"V={plan.vstages} " if plan.vstages > 1 else "")
+                + f"(M={plan.microbatches or 2 * plan.pp})"
             )
         start_step = int(jax.device_get(state["step"]))
         if self.ckpt is not None:

@@ -88,8 +88,12 @@ class MeshPlan:
     pp: int = 1
     # Pipeline schedule (a core.schedules builder name).  1F1B is the
     # paper's schedule (Eq 4 memory profile); "gpipe" keeps the all-F-then-
-    # all-B order.  Only consulted when pp > 1.
+    # all-B order; "interleaved_1f1b" splits each stage into ``vstages``
+    # virtual stages (model chunks).  Only consulted when pp > 1.
     schedule: str = DEFAULT_SCHEDULE
+    # Virtual stages per pipeline stage; > 1 only with interleaved_1f1b
+    # (must divide the layer-reps per stage — the executor asserts it).
+    vstages: int = 1
     # memory-policy knobs the planner searches over
     remat: str = "full"  # none | dots | full
     optimizer_dtype: str = "float32"  # adam m/v dtype
@@ -114,6 +118,11 @@ class MeshPlan:
     def __post_init__(self):
         assert self.schedule in SCHEDULES, (
             f"unknown schedule {self.schedule!r}; choose from {SCHEDULES}"
+        )
+        assert self.vstages >= 1, self.vstages
+        assert self.vstages == 1 or self.schedule == "interleaved_1f1b", (
+            f"vstages={self.vstages} needs schedule='interleaved_1f1b', "
+            f"got {self.schedule!r}"
         )
         if not self.rules:
             self.rules = default_rules(self)
@@ -193,6 +202,7 @@ def make_plan(
     *,
     pipeline_on_pod: bool = False,
     schedule: str = DEFAULT_SCHEDULE,
+    vstages: int = 1,
     remat: str = "full",
     optimizer_dtype: str = "float32",
     hierarchical_a2a: bool = False,
@@ -231,6 +241,7 @@ def make_plan(
         pp_axis=pp_axis,
         pp=pp,
         schedule=schedule,
+        vstages=vstages,
         remat=remat,
         optimizer_dtype=optimizer_dtype,
         hierarchical_a2a=hierarchical_a2a,

@@ -1,12 +1,16 @@
-"""Child process for test_pipeline_schedules.py (8 host devices, PP=4).
+"""Child process for test_pipeline_schedules.py (8 host devices, PP=4;
+plus a PP=2 x V=2 interleaved section on a 4-device sub-mesh).
 
 Checks the schedule-EXECUTING pipeline (core.pipeline.pipelined_step):
 
 * executed per-tick residual occupancy == the schedule IR's trace (so the
   executor provably ran the IR's op order, not AD's);
 * executed 1F1B peaks == paper Eq 4 == schedule_sim on the same IR;
-* loss + grads under BOTH schedules allclose to the non-pipelined
-  sequential stack (value_and_grad oracle), and to each other;
+* loss + grads under ALL schedules (gpipe, 1f1b, interleaved_1f1b@V=2)
+  allclose to the non-pipelined sequential stack (value_and_grad oracle),
+  and — same forward, same token layout — to reverse-mode AD at 1e-5;
+* interleaved executed occupancy == the vstage IR trace (the chunk ring
+  with its wrap-around ppermutes provably runs the interleaved order);
 * the Trainer's pipelined train step runs and matches the oracle loss.
 """
 
@@ -126,6 +130,60 @@ def main():
             abs(float(out["gpipe"][0]) - float(out["1f1b"][0])) < 1e-5
         ) and grad_close(out["gpipe"][1], out["1f1b"][1], atol=1e-4,
                          emb_rel_tol=1e-3)
+
+        # Interleaved 1F1B: PP=2 stages x V=2 virtual stages on a 4-device
+        # sub-mesh (reps = PP*V = 4, one pattern-rep per chunk).  Same
+        # checks as the flat schedules: the executor must run the vstage
+        # IR's op order (occupancy trace), match reverse-mode AD through
+        # its own forward to float noise, and match the sequential oracle.
+        PP_i, V_i = 2, 2
+        mesh_i = host_mesh((PP_i, 1, 2), ("pod", "data", "model"))
+        with mesh_i:
+            plan_dpi = make_plan(mesh_i, arch)
+            lm_dpi = LanguageModel(arch, plan_dpi)
+            l_refi, g_refi = jax.jit(
+                jax.value_and_grad(
+                    lambda p: lm_dpi.loss(p, batch)[0], allow_int=True
+                )
+            )(params)
+            plan_il = make_plan(
+                mesh_i, arch, pipeline_on_pod=True,
+                schedule="interleaved_1f1b", vstages=V_i,
+            )
+            lm_il = LanguageModel(arch, plan_il)
+            loss_il, grads_il, metrics_il = jax.jit(lm_il.loss_and_grads)(
+                params, batch
+            )
+            occ_il = np.asarray(metrics_il["pipeline_occupancy"])
+            M_i = 2 * PP_i
+            sched_il = S.build("interleaved_1f1b", PP_i, M_i, V_i)
+
+            l_adi, g_adi = jax.jit(
+                jax.value_and_grad(
+                    lambda p: lm_il.loss(p, batch)[0], allow_int=True
+                )
+            )(params)
+            RESULTS["interleaved_matches_ad_oracle"] = bool(
+                abs(float(loss_il) - float(l_adi)) < 1e-5
+            ) and grad_close(g_adi, grads_il, atol=1e-5, emb_rel_tol=1e-3)
+            RESULTS["interleaved_loss_close"] = bool(
+                abs(float(loss_il) - float(l_refi)) < 1e-3
+            )
+            RESULTS["interleaved_grads_close"] = grad_close(
+                g_refi, grads_il, atol=3e-3, emb_rel_tol=0.15
+            )
+            RESULTS["interleaved_occupancy_trace"] = bool(
+                np.array_equal(occ_il, sched_il.occupancy_trace())
+            )
+            sim_il = ss.simulate(sched_il)
+            RESULTS["interleaved_peak_matches_sim"] = bool(
+                list(occ_il.max(axis=1)) == sim_il.peak_in_flight
+            )
+            # Eq-4 analogue, executed: the deeper interleaved warmup.
+            RESULTS["interleaved_peak_formula"] = bool(
+                list(occ_il.max(axis=1))
+                == S.peak_activations_interleaved(PP_i, M_i, V_i)
+            )
 
         # Trainer path: make_train_step routes PP plans through the
         # schedule-executing backward.

@@ -4,11 +4,13 @@ Needs 8 host devices (PP=4 over "pod"), so the heavy lifting runs in a child
 process with XLA_FLAGS set (same pattern as test_multidevice.py) and this
 module asserts on the child's verdicts.  Covered:
 
-* executor occupancy trace == Schedule.occupancy_trace() for gpipe AND 1f1b
-  (the executor provably interprets the IR tick by tick);
-* executed 1F1B peaks == paper Eq 4 == schedule_sim on the same IR;
-* pipelined loss/grads == sequential stack oracle under both schedules,
-  and gpipe == 1f1b;
+* executor occupancy trace == Schedule.occupancy_trace() for gpipe, 1f1b
+  AND interleaved_1f1b@V=2 (the executor provably interprets the vstage IR
+  tick by tick, chunk-ring wrap hand-offs included);
+* executed 1F1B peaks == paper Eq 4 == schedule_sim on the same IR, and
+  executed interleaved peaks == the Eq-4 analogue;
+* pipelined loss/grads == sequential stack oracle under all schedules,
+  == reverse-mode AD at 1e-5, and gpipe == 1f1b;
 * training.make_train_step's pipelined branch trains.
 """
 
@@ -66,6 +68,25 @@ def test_pipelined_matches_sequential(child_results, sched):
 
 def test_schedules_agree_with_each_other(child_results):
     assert child_results["schedules_agree"]
+
+
+def test_interleaved_executor_runs_the_vstage_ir(child_results):
+    """The chunk ring (PP=2, V=2) executes the interleaved IR's op order:
+    occupancy == IR trace == schedule_sim, peaks == the Eq-4 analogue."""
+    assert child_results["interleaved_occupancy_trace"]
+    assert child_results["interleaved_peak_matches_sim"]
+    assert child_results["interleaved_peak_formula"]
+
+
+def test_interleaved_matches_ad_oracle(child_results):
+    """Interleaved grads match the sequential AD oracle to 1e-5 (same
+    forward, same token layout, only the op order differs)."""
+    assert child_results["interleaved_matches_ad_oracle"]
+
+
+def test_interleaved_matches_sequential(child_results):
+    assert child_results["interleaved_loss_close"]
+    assert child_results["interleaved_grads_close"]
 
 
 def test_pipelined_train_step(child_results):

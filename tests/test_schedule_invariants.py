@@ -1,0 +1,273 @@
+"""Universal schedule-invariant harness (schedules.check_invariants).
+
+Every pipeline schedule — current and future — must satisfy one contract:
+one op per (stage, tick), F/B hand-off ordering across stages AND virtual
+stages, every (mb, vstage) F'd and B'd exactly once, residual-slot
+non-overlap, and a minimal ``num_slots`` (== the peak of the residency
+trace).  This module
+
+* sweeps every registered builder over a deterministic (PP, M, V) grid
+  (``build`` runs the harness internally; we call it explicitly so a future
+  builder that forgets to cannot pass),
+* proves the harness *detects* violations by perturbing valid tables in
+  every covered dimension (a validator that never fires is no validator),
+* pins the closed-form peak/bubble formulas of ``core.resource_model``
+  against the real IR (builder–formula drift), and
+* adds randomized hypothesis sweeps when the library is installed.
+"""
+
+import dataclasses
+import itertools
+
+import pytest
+
+from repro.configs.base import SCHEDULES
+from repro.core import resource_model as rm
+from repro.core import schedules as S
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container may not ship hypothesis
+    HAVE_HYPOTHESIS = False
+
+PPS = (1, 2, 3, 4, 8)
+MS = (1, 2, 4, 5, 8, 16)
+VS = (1, 2, 3, 4)
+
+
+def _valid_combo(name: str, PP: int, M: int, V: int) -> bool:
+    if V > 1 and name != "interleaved_1f1b":
+        return False
+    if name == "interleaved_1f1b" and V > 1 and M % PP:
+        return False
+    return True
+
+
+def sweep():
+    for name in SCHEDULES:
+        vs = VS if name == "interleaved_1f1b" else (1,)
+        for PP, M, V in itertools.product(PPS, MS, vs):
+            if _valid_combo(name, PP, M, V):
+                yield name, PP, M, V
+
+
+@pytest.mark.parametrize("name,PP,M,V", list(sweep()))
+def test_every_registered_builder_passes_invariants(name, PP, M, V):
+    sched = S.build(name, PP, M, V)
+    S.check_invariants(sched)  # explicit: builders can't opt out
+    assert (sched.name, sched.PP, sched.M, sched.V) == (name, PP, M, V)
+
+
+@pytest.mark.parametrize("name,PP,M,V", list(sweep()))
+def test_builder_matches_resource_model_peaks(name, PP, M, V):
+    """The planner prices schedules with closed-form per-stage residencies
+    (``resource_model.peak_in_flight``); they must equal the real IR's."""
+    sched = S.build(name, PP, M, V)
+    for stage in range(PP):
+        assert sched.peak_in_flight[stage] == rm.peak_in_flight(
+            name, PP, M, V, stage
+        ), (name, PP, M, V, stage)
+
+
+@pytest.mark.parametrize(
+    "name,V", [(n, 2 if n == "interleaved_1f1b" else 1) for n in SCHEDULES]
+)
+def test_num_slots_is_minimal(name, V):
+    """num_slots equals the peak of the residency occupancy trace — the
+    depth is minimal, not merely sufficient (harness check 6)."""
+    sched = S.build(name, 4, 8, V)
+    f, b = sched.op_ticks("F"), sched.op_ticks("B")
+    peak = 0
+    for s in range(sched.PP):
+        res = S._residency(f, b, s, sched.PP, sched.V, sched.M)
+        for t in range(sched.num_ticks):
+            peak = max(peak, sum(1 for a, fr, _ in res if a <= t <= fr))
+    assert sched.num_slots == peak
+
+
+# ---------------------------------------------------------------------------
+# The harness detects violations (perturbation tests): corrupt a valid table
+# along each checked dimension and require an InvariantViolation.
+# ---------------------------------------------------------------------------
+
+
+def _with_ops(sched, ops):
+    return dataclasses.replace(sched, ops=tuple(tuple(r) for r in ops))
+
+
+def _mut_ops(sched):
+    return [list(r) for r in sched.ops]
+
+
+def base_sched():
+    return S.build("interleaved_1f1b", 2, 4, 2)
+
+
+def flat_sched():
+    return S.build("1f1b", 4, 8)
+
+
+def test_harness_accepts_the_originals():
+    S.check_invariants(base_sched())
+    S.check_invariants(flat_sched())
+
+
+def test_detects_dropped_op():
+    sched = base_sched()
+    ops = _mut_ops(sched)
+    t = next(i for i, op in enumerate(ops[1]) if op and op[0] == "B")
+    ops[1][t] = None  # a backward never runs
+    with pytest.raises(S.InvariantViolation, match="B'd exactly once"):
+        S.check_invariants(_with_ops(sched, ops))
+
+
+def test_detects_duplicate_op():
+    sched = base_sched()
+    ops = _mut_ops(sched)
+    src = next(op for op in ops[0] if op and op[0] == "F")
+    t_idle = next(i for i, op in enumerate(ops[0]) if op is None)
+    ops[0][t_idle] = src  # the same (F, mb, vs) twice on one stage
+    with pytest.raises(S.InvariantViolation, match="exactly once|duplicate"):
+        S.check_invariants(_with_ops(sched, ops))
+
+
+def test_detects_malformed_op():
+    sched = base_sched()
+    ops = _mut_ops(sched)
+    ops[0][0] = ("F", 0, sched.V)  # vstage out of range
+    with pytest.raises(S.InvariantViolation, match="malformed"):
+        S.check_invariants(_with_ops(sched, ops))
+
+
+def test_detects_fwd_handoff_violation():
+    """F(s, mb) at or before F(s-1, mb) — the activation could not have
+    arrived over the one-tick ppermute."""
+    sched = flat_sched()
+    ops = _mut_ops(sched)
+    f = sched.op_ticks("F")
+    t0, t1 = f[(0, 0, 7)], f[(1, 0, 7)]
+    assert ops[1][0] is None and t0 > 0  # warmup idle tick on stage 1
+    # hoist stage 1's F(7) to tick 0, before stage 0 even produced it
+    ops[1][0], ops[1][t1] = ops[1][t1], None
+    with pytest.raises(S.InvariantViolation, match="F hand-off"):
+        S.check_invariants(_with_ops(sched, ops))
+
+
+def test_detects_vstage_handoff_violation():
+    """The wrap-around edge counts as a hand-off too: F(0, vs=1, mb) must
+    run strictly after F(PP-1, vs=0, mb)."""
+    sched = base_sched()
+    f = sched.op_ticks("F")
+    mb = 0
+    t_wrap_src = f[(sched.PP - 1, 0, mb)]  # F on the last stage, chunk 0
+    t_wrap_dst = f[(0, 1, mb)]  # its successor on stage 0, chunk 1
+    assert t_wrap_dst > t_wrap_src  # sanity: valid today
+    ops = _mut_ops(sched)
+    # move the successor onto (or before) the producer's tick
+    ops[0][t_wrap_dst] = None
+    if ops[0][t_wrap_src] is None:
+        ops[0][t_wrap_src] = ("F", mb, 1)
+    else:
+        ops[0][t_wrap_src], prev = ("F", mb, 1), ops[0][t_wrap_src]
+        t_free = next(
+            i for i, op in enumerate(ops[0])
+            if op is None and i > t_wrap_dst
+        )
+        ops[0][t_free] = prev
+    with pytest.raises(S.InvariantViolation):
+        S.check_invariants(_with_ops(sched, ops))
+
+
+def test_detects_b_before_f():
+    sched = flat_sched()
+    ops = _mut_ops(sched)
+    f = sched.op_ticks("F")
+    b = sched.op_ticks("B")
+    tf, tb = f[(3, 0, 7)], b[(3, 0, 7)]
+    ops[3][tf], ops[3][tb] = ops[3][tb], ops[3][tf]
+    with pytest.raises(S.InvariantViolation):
+        S.check_invariants(_with_ops(sched, ops))
+
+
+def test_detects_slot_collision():
+    sched = flat_sched()
+    slots = [list(list(r) for r in sv) for sv in sched.slots]
+    # stage 0 runs M > num_slots microbatches: forcing everything into slot
+    # 0 must overlap two residencies
+    slots[0] = [[0] * sched.M for _ in range(sched.V)]
+    bad = dataclasses.replace(
+        sched, slots=tuple(tuple(tuple(r) for r in sv) for sv in slots)
+    )
+    with pytest.raises(S.InvariantViolation, match="overlap"):
+        S.check_invariants(bad)
+
+
+def test_detects_oversized_num_slots():
+    """A num_slots larger than the peak residency is memory the executor
+    would allocate for nothing — the harness requires minimality."""
+    bad = dataclasses.replace(flat_sched(), num_slots=flat_sched().num_slots + 1)
+    with pytest.raises(S.InvariantViolation, match="num_slots"):
+        S.check_invariants(bad)
+
+
+def test_detects_slot_id_out_of_range():
+    sched = flat_sched()
+    slots = [list(list(r) for r in sv) for sv in sched.slots]
+    slots[2][0][0] = sched.num_slots  # beyond the allocated depth
+    bad = dataclasses.replace(
+        sched, slots=tuple(tuple(tuple(r) for r in sv) for sv in slots)
+    )
+    with pytest.raises(S.InvariantViolation, match="slot"):
+        S.check_invariants(bad)
+
+
+def test_detects_wrong_peak_in_flight():
+    sched = flat_sched()
+    peaks = list(sched.peak_in_flight)
+    peaks[0] += 1
+    bad = dataclasses.replace(sched, peak_in_flight=tuple(peaks))
+    with pytest.raises(S.InvariantViolation, match="peak_in_flight"):
+        S.check_invariants(bad)
+
+
+def test_detects_wrong_shape():
+    sched = flat_sched()
+    bad = dataclasses.replace(sched, ops=sched.ops[:-1])
+    with pytest.raises(S.InvariantViolation, match="PP rows"):
+        S.check_invariants(bad)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps (when available): random (PP, M, V) within executor-
+# realistic bounds — the deterministic grid can't enumerate everything.
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        name=st.sampled_from(SCHEDULES),
+        PP=st.integers(1, 12),
+        mult=st.integers(1, 6),
+        V=st.integers(1, 6),
+    )
+    def test_hypothesis_invariants(name, PP, mult, V):
+        M = mult * PP  # keep M % PP == 0 so interleaved is constructible
+        if not _valid_combo(name, PP, M, V):
+            V = 1
+        sched = S.build(name, PP, M, V)
+        S.check_invariants(sched)
+        for stage in range(PP):
+            assert sched.peak_in_flight[stage] == rm.peak_in_flight(
+                name, PP, M, V, stage
+            )
+
+    @settings(max_examples=30, deadline=None)
+    @given(PP=st.integers(2, 8), mult=st.integers(1, 4), V=st.integers(2, 4))
+    def test_hypothesis_interleaved_ticks(PP, mult, V):
+        M = mult * PP
+        sched = S.build("interleaved_1f1b", PP, M, V)
+        assert sched.num_ticks == 2 * (V * M + PP - 1)
+        assert sched.p2p_events() == 2 * M * (PP * V - 1)

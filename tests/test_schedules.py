@@ -2,34 +2,44 @@
 
 The IR is the single source of truth for pipeline schedules: these tests pin
 its invariants (dependency-correct tick placement, Eq-4 peaks, buffer
-geometry) and that the simulator consumes the same IR.  The SPMD executor's
-agreement with the IR is covered in tests/test_pipeline_schedules.py.
+geometry), the V=1 golden tables (the vstage extension must reproduce the
+pre-vstage builders bit-for-bit), the build-cache keying on V, and that the
+simulator consumes the same IR.  The builder-agnostic invariant harness
+itself is exercised in tests/test_schedule_invariants.py; the SPMD
+executor's agreement with the IR is covered in
+tests/test_pipeline_schedules.py.
 """
 
 import numpy as np
 import pytest
 
 from repro.configs.base import SCHEDULES
+from repro.core import resource_model as rm
 from repro.core import schedule_sim as ss
 from repro.core import schedules as S
 
 GRID = [(2, 2), (2, 4), (3, 6), (4, 4), (4, 8), (4, 5), (8, 16)]
+# Interleaved needs M % PP == 0 (Megatron's constraint).
+GRID_V = [(2, 2, 2), (2, 4, 2), (2, 4, 4), (3, 6, 2), (4, 4, 2), (4, 8, 2),
+          (4, 8, 4), (8, 16, 2)]
 
 
 @pytest.mark.parametrize("name", SCHEDULES)
 @pytest.mark.parametrize("PP,M", GRID)
 def test_ir_wellformed(name, PP, M):
+    if name == "interleaved_1f1b" and M % PP:
+        pytest.skip("interleaved needs M % PP == 0")
     sched = S.build(name, PP, M)
     f = sched.op_ticks("F")
     b = sched.op_ticks("B")
-    assert len(f) == len(b) == PP * M  # every op exactly once
+    assert len(f) == len(b) == PP * M  # every op exactly once (V=1)
     for s in range(PP):
         for mb in range(M):
-            assert b[(s, mb)] > f[(s, mb)]  # residual exists
+            assert b[(s, 0, mb)] > f[(s, 0, mb)]  # residual exists
             if s > 0:  # activation hand-off is one ppermute tick
-                assert f[(s, mb)] > f[(s - 1, mb)]
+                assert f[(s, 0, mb)] > f[(s - 1, 0, mb)]
             if s < PP - 1:  # cotangent hand-off
-                assert b[(s, mb)] > b[(s + 1, mb)]
+                assert b[(s, 0, mb)] > b[(s + 1, 0, mb)]
     # at most one op per (stage, tick) is structural in the table; the tick
     # count matches the unit-time makespan of the flush schedules
     assert sched.num_ticks == 2 * (M + PP - 1)
@@ -39,8 +49,15 @@ def test_ir_wellformed(name, PP, M):
 @pytest.mark.parametrize("PP,M", GRID)
 def test_ir_matches_canonical_stage_orders(name, PP, M):
     """The tick table is a faithful placement of the canonical op orders."""
+    if name == "interleaved_1f1b" and M % PP:
+        pytest.skip("interleaved needs M % PP == 0")
     sched = S.build(name, PP, M)
-    order = S.gpipe_order if name == "gpipe" else S.one_f_one_b_order
+    order = {
+        "gpipe": S.gpipe_order,
+        "1f1b": S.one_f_one_b_order,
+        # V defaults to 1, where interleaved reduces to plain 1f1b
+        "interleaved_1f1b": S.one_f_one_b_order,
+    }[name]
     for s in range(PP):
         assert sched.stage_order(s) == order(PP, M, s)
 
@@ -58,6 +75,17 @@ def test_peaks_eq3_eq4(PP, M):
         assert list(f.peak_in_flight) == S.peak_activations_1f1b(PP)
 
 
+@pytest.mark.parametrize("PP,M,V", GRID_V)
+def test_interleaved_peaks_and_ticks(PP, M, V):
+    """Interleaved 1F1B: 2(VM + PP - 1) unit ticks (the fill/drain is PP-1
+    CHUNK hops) and the Eq-4-analogue per-stage chunk residency."""
+    sched = S.build("interleaved_1f1b", PP, M, V)
+    assert sched.num_ticks == 2 * (V * M + PP - 1)
+    assert list(sched.peak_in_flight) == S.peak_activations_interleaved(
+        PP, M, V
+    )
+
+
 @pytest.mark.parametrize("PP,M", GRID)
 def test_residual_buffer_depth(PP, M):
     """Executor buffer depth: M slots for GPipe, PP for 1F1B — Eq 3 vs Eq 4
@@ -69,22 +97,131 @@ def test_residual_buffer_depth(PP, M):
 @pytest.mark.parametrize("name", SCHEDULES)
 @pytest.mark.parametrize("PP,M", GRID)
 def test_slot_lifetimes_disjoint(name, PP, M):
-    """No two microbatches may occupy a stage's slot at the same tick
-    (lifetime: activation arrival -> backward)."""
-    sched = S.build(name, PP, M)
+    """No two (vs, mb) chunk inputs may occupy a stage's slot at the same
+    tick (lifetime: activation arrival -> backward)."""
+    if name == "interleaved_1f1b" and M % PP:
+        pytest.skip("interleaved needs M % PP == 0")
+    V = 2 if name == "interleaved_1f1b" else 1
+    sched = S.build(name, PP, M, V)
     f = sched.op_ticks("F")
     b = sched.op_ticks("B")
     for s in range(PP):
         by_slot = {}
-        for mb in range(M):
-            alloc = f[(s, mb)] if s == 0 else f[(s - 1, mb)] + 1
-            by_slot.setdefault(sched.slots[s][mb], []).append(
-                (alloc, b[(s, mb)])
-            )
+        for vs in range(V):
+            for mb in range(M):
+                prv = S.prev_chunk(s, vs, PP, V)
+                alloc = (
+                    f[(s, vs, mb)] if prv is None else f[prv + (mb,)] + 1
+                )
+                by_slot.setdefault(sched.slots[s][vs][mb], []).append(
+                    (alloc, b[(s, vs, mb)])
+                )
         for intervals in by_slot.values():
             intervals.sort()
             for (a0, b0), (a1, _) in zip(intervals, intervals[1:]):
                 assert b0 < a1, (name, PP, M, s, intervals)
+
+
+# ---------------------------------------------------------------------------
+# Golden V=1 regression: the vstage extension must reproduce the pre-vstage
+# tables bit-for-bit (captured from the flat builder before V existed).
+# ---------------------------------------------------------------------------
+
+GOLDEN_V1 = {
+    # (name, PP, M): (ops-(kind, mb) projection, slots, num_slots)
+    ("gpipe", 2, 3): (
+        ((("F", 0), ("F", 1), ("F", 2), None, None,
+          ("B", 0), ("B", 1), ("B", 2)),
+         (None, ("F", 0), ("F", 1), ("F", 2),
+          ("B", 0), ("B", 1), ("B", 2), None)),
+        ((0, 1, 2), (0, 1, 2)),
+        3,
+    ),
+    ("1f1b", 2, 3): (
+        ((("F", 0), ("F", 1), None, ("B", 0),
+          ("F", 2), ("B", 1), None, ("B", 2)),
+         (None, ("F", 0), ("B", 0), ("F", 1),
+          ("B", 1), ("F", 2), ("B", 2), None)),
+        ((0, 1, 0), (0, 1, 0)),
+        2,
+    ),
+    ("1f1b", 3, 4): (
+        ((("F", 0), ("F", 1), ("F", 2), None, None, ("B", 0),
+          ("F", 3), ("B", 1), None, ("B", 2), None, ("B", 3)),
+         (None, ("F", 0), ("F", 1), None, ("B", 0), ("F", 2),
+          ("B", 1), ("F", 3), ("B", 2), None, ("B", 3), None),
+         (None, None, ("F", 0), ("B", 0), ("F", 1), ("B", 1),
+          ("F", 2), ("B", 2), ("F", 3), ("B", 3), None, None)),
+        ((0, 1, 2, 0), (0, 1, 2, 0), (0, 1, 0, 0)),
+        3,
+    ),
+}
+
+
+@pytest.mark.parametrize("key", sorted(GOLDEN_V1))
+def test_v1_tables_bit_for_bit(key):
+    """V=1 must reproduce the pre-vstage builder output exactly: same op
+    placement (every op with vs == 0), same slot assignment, same depth."""
+    name, PP, M = key
+    want_ops, want_slots, want_depth = GOLDEN_V1[key]
+    sched = S.build(name, PP, M)
+    assert sched.V == 1
+    proj = tuple(
+        tuple(None if op is None else op[:2] for op in row)
+        for row in sched.ops
+    )
+    assert proj == want_ops, sched.describe()
+    assert all(
+        op is None or op[2] == 0 for row in sched.ops for op in row
+    )
+    assert sched.slots == tuple((s,) for s in want_slots)
+    assert sched.num_slots == want_depth
+
+
+def test_interleaved_v1_is_plain_1f1b():
+    """V=1 interleaving is the identity: the interleaved builder emits the
+    plain 1F1B table bit-for-bit (Megatron's V=1 fallback)."""
+    for PP, M in GRID:
+        a = S.build("interleaved_1f1b", PP, M, 1)
+        b = S.build("1f1b", PP, M)
+        assert a.ops == b.ops and a.slots == b.slots
+        assert a.num_slots == b.num_slots
+
+
+# ---------------------------------------------------------------------------
+# build() cache + parameter validation (regression: the lru_cache key must
+# include V — a V-less key would alias interleaved tables of different
+# depths onto whichever was built first)
+# ---------------------------------------------------------------------------
+
+
+def test_build_cache_keys_on_vstages():
+    s2 = S.build("interleaved_1f1b", 4, 8, 2)
+    s4 = S.build("interleaved_1f1b", 4, 8, 4)
+    assert s2 is not s4 and (s2.V, s4.V) == (2, 4)
+    assert s2.num_ticks != s4.num_ticks  # genuinely different tables
+    # same args -> the cached instance, with V round-tripped
+    assert S.build("interleaved_1f1b", 4, 8, 2) is s2
+    assert S.build("interleaved_1f1b", 4, 8, 2).V == 2
+    # the V-defaulted call is the V=1 table, never an aliased V>1 one
+    assert S.build("interleaved_1f1b", 4, 8).V == 1
+    assert S.build("interleaved_1f1b", 4, 8).ops == S.build("1f1b", 4, 8).ops
+
+
+def test_build_rejects_bad_vstages():
+    with pytest.raises(ValueError, match="vstages"):
+        S.build("1f1b", 4, 8, 0)
+    with pytest.raises(ValueError, match="virtual-stage"):
+        S.build("1f1b", 4, 8, 2)  # flat schedules have no V > 1 form
+    with pytest.raises(ValueError, match="virtual-stage"):
+        S.build("gpipe", 4, 8, 2)
+    with pytest.raises(ValueError, match="M % PP"):
+        S.build("interleaved_1f1b", 4, 6, 2)
+
+
+# ---------------------------------------------------------------------------
+# Simulator consumes the IR; unit-op makespan == tick count == Eq-3 formula
+# ---------------------------------------------------------------------------
 
 
 @pytest.mark.parametrize("name", SCHEDULES)
@@ -92,17 +229,34 @@ def test_sim_consumes_ir(name):
     """The simulator replays the IR: its per-stage op sequence and peaks are
     the IR's, with real durations only stretching time."""
     for PP, M in ((2, 4), (4, 8)):
-        sched = S.build(name, PP, M)
+        V = 2 if name == "interleaved_1f1b" else 1
+        sched = S.build(name, PP, M, V)
         r = ss.simulate(sched, t_fwd=1.0, t_bwd=2.0)
         assert r.schedule is sched
         assert r.peak_in_flight == list(sched.peak_in_flight)
         for s in range(PP):
             sim_order = [
-                (o.kind, o.mb)
+                (o.kind, o.mb, o.vs)
                 for o in sorted(r.ops, key=lambda o: o.start)
                 if o.stage == s
             ]
             assert sim_order == sched.stage_order(s)
+
+
+@pytest.mark.parametrize("name", SCHEDULES)
+@pytest.mark.parametrize("PP,M", [(2, 4), (4, 8), (8, 16)])
+@pytest.mark.parametrize("V", [1, 2, 4])
+def test_sim_makespan_and_bubble_match_model(name, PP, M, V):
+    """Builder–formula drift catch: on unit-time ops the simulated makespan
+    must equal the IR's tick count, and the simulated idle fraction must
+    equal the resource model's Eq-3 bubble formula, for every schedule."""
+    if V > 1 and name != "interleaved_1f1b":
+        return  # no vstage form
+    sched = S.build(name, PP, M, V)
+    r = ss.simulate(sched, t_fwd=1.0, t_bwd=1.0)
+    assert r.makespan == sched.num_ticks
+    want = rm.schedule_bubble_fraction(name, PP, M, V)
+    assert abs(r.bubble_fraction - want) < 1e-12, (name, PP, M, V)
 
 
 def test_sim_named_entrypoints():
@@ -110,15 +264,21 @@ def test_sim_named_entrypoints():
     assert g.peak_in_flight == [8, 8, 8, 8]
     f = ss.one_f_one_b(4, 8)
     assert f.peak_in_flight == [4, 3, 2, 1]
+    il = ss.interleaved_1f1b(4, 8, V=2)
+    assert il.peak_in_flight == S.peak_activations_interleaved(4, 8, 2)
+    # per-chunk ops take t/V: equal total work, strictly smaller makespan
+    assert il.makespan < f.makespan
     assert set(ss.BY_NAME) == set(SCHEDULES)
 
 
 @pytest.mark.parametrize("name", SCHEDULES)
 def test_tick_tables_arrivals(name):
     """Lowered executor tables: an arrival at (s, t) is exactly the op its
-    neighbor ppermuted at t-1, parked in the receiver's slot for that mb."""
+    chunk-ring neighbor ppermuted at t-1, parked in the receiver's slot for
+    that (vs, mb) — including the wrap-around edges when V > 1."""
     PP, M = 4, 8
-    sched = S.build(name, PP, M)
+    V = 2 if name == "interleaved_1f1b" else 1
+    sched = S.build(name, PP, M, V)
     tt = S.tick_tables(sched)
     T = sched.num_ticks
     for s in range(PP):
@@ -130,12 +290,19 @@ def test_tick_tables_arrivals(name):
                 continue
             assert k == (S.OP_F if op[0] == "F" else S.OP_B)
             assert tt.mb[s, t] == op[1]
-            assert tt.slot[s, t] == sched.slots[s][op[1]]
-            if op[0] == "F" and s + 1 < PP:
-                assert tt.arrive_fwd[s + 1, t + 1] == sched.slots[s + 1][op[1]]
-                assert tt.arrive_fwd_mb[s + 1, t + 1] == op[1]
-            if op[0] == "B" and s > 0:
-                assert tt.arrive_bwd[s - 1, t + 1] == sched.slots[s - 1][op[1]]
+            assert tt.vs[s, t] == op[2]
+            assert tt.slot[s, t] == sched.slots[s][op[2]][op[1]]
+            if op[0] == "F":
+                nxt = S.next_chunk(s, op[2], PP, V)
+                if nxt is not None:
+                    ns, nv = nxt
+                    assert tt.arrive_fwd[ns, t + 1] == sched.slots[ns][nv][op[1]]
+                    assert tt.arrive_fwd_mb[ns, t + 1] == op[1]
+            if op[0] == "B":
+                prv = S.prev_chunk(s, op[2], PP, V)
+                if prv is not None:
+                    ps, pv = prv
+                    assert tt.arrive_bwd[ps, t + 1] == sched.slots[ps][pv][op[1]]
 
 
 def test_forward_projection_staircase():
@@ -149,11 +316,23 @@ def test_forward_projection_staircase():
 
 def test_occupancy_trace_matches_sim_peaks():
     for name in SCHEDULES:
-        sched = S.build(name, 4, 8)
+        V = 2 if name == "interleaved_1f1b" else 1
+        sched = S.build(name, 4, 8, V)
         occ = sched.occupancy_trace()
         assert occ.shape == (4, sched.num_ticks)
         assert list(occ.max(axis=1)) == list(sched.peak_in_flight)
         assert (occ[:, -1] == 0).all()  # fully drained
+
+
+def test_p2p_events_scale_with_v():
+    """Interleaving multiplies wire hand-offs ~V×: the chunk walk has
+    PP*V - 1 fwd edges per microbatch (and as many bwd)."""
+    for PP, M in ((2, 4), (4, 8)):
+        flat = S.build("1f1b", PP, M).p2p_events()
+        assert flat == 2 * M * (PP - 1)
+        for V in (2, 4):
+            il = S.build("interleaved_1f1b", PP, M, V).p2p_events()
+            assert il == 2 * M * (PP * V - 1)
 
 
 def test_unknown_schedule_rejected():
