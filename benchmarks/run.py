@@ -26,6 +26,11 @@ def main() -> None:
     sched_bench = functools.partial(pf.schedules, only=args.schedule)
     functools.update_wrapper(sched_bench, pf.schedules)
 
+    from benchmarks import serving_bench as sb
+
+    def serving():
+        return sb.rows(smoke=True)
+
     benches = [
         pf.table1_model_configs,
         pf.table3_memory_model,
@@ -40,6 +45,7 @@ def main() -> None:
         pf.fig14_trillion_scaling,
         sched_bench,
         pf.kernels,
+        serving,
     ]
     print("name,us_per_call,derived")
     failures = 0

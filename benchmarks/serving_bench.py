@@ -1,0 +1,245 @@
+"""Serving decode microbench: capacity vs ragged dispatch tokens/s.
+
+Wall-clocks the jitted continuous-batching decode step
+(``LanguageModel.decode_step_paged`` — paged KV gather + per-seq attention
++ MoE decode dispatch) for both expert-dispatch modes across batch sizes,
+on this host (reduced arch; CPU containers run the Pallas kernels in
+interpret mode, so treat absolute numbers as structural, not TPU truth).
+Each cell also records the serving resource model's analytical estimate
+for the same shape, so model-vs-measurement drift is visible in one file.
+
+Emits ``BENCH_serving.json``:
+
+    PYTHONPATH=src python benchmarks/serving_bench.py [--out F]
+    PYTHONPATH=src python benchmarks/serving_bench.py --smoke \
+        --check-schema BENCH_serving.json    # CI schema-rot gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_OUT = ROOT / "BENCH_serving.json"
+
+
+def _build(arch_name: str, dispatch: str):
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_arch
+    from repro.models.model import LanguageModel, init_params
+    from repro.sharding import single_device_plan
+
+    arch = get_arch(arch_name).reduced()
+    arch = arch.replace(
+        moe=dataclasses.replace(arch.moe, dispatch=dispatch)
+    )
+    plan = single_device_plan(arch)
+    lm = LanguageModel(arch, plan)
+    params = init_params(arch, jax.random.PRNGKey(0))
+    return arch, plan, lm, params
+
+
+def measure_decode(
+    arch_name: str, dispatch: str, batch: int, context: int,
+    block_size: int, steps: int, seed: int,
+) -> dict:
+    """Steady-state decode: ``batch`` sequences at ``context`` live tokens,
+    timed over ``steps`` jitted decode iterations."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serving.kv_cache import BlockPool, PagedLayout
+
+    arch, plan, lm, params = _build(arch_name, dispatch)
+    nb = -(-(context + steps + 1) // block_size)
+    layout = PagedLayout(
+        num_blocks=batch * nb + 1,
+        block_size=block_size,
+        max_seqs=batch,
+        max_blocks_per_seq=nb,
+    )
+    pool = BlockPool(layout)
+    rng = np.random.default_rng(seed)
+    with plan.mesh:
+        cache = lm.init_paged_cache(layout, dtype=jnp.float32)
+        # Fill each sequence's prefix via one bulk prefill.
+        toks = rng.integers(0, arch.vocab_size, size=(batch, context))
+        for i in range(batch):
+            pool.admit(context)
+        bt = jnp.asarray(pool.block_table[:batch])
+        lens = jnp.asarray(pool.lengths[:batch])
+        _, cache = jax.jit(lm.prefill_paged)(
+            params, {"tokens": jnp.asarray(toks, jnp.int32)}, cache, bt, lens
+        )
+        decode = jax.jit(lm.decode_step_paged)
+        cur = jnp.asarray(rng.integers(0, arch.vocab_size, size=(batch, 1)),
+                          jnp.int32)
+        # warmup (compile)
+        for i in range(batch):
+            assert pool.extend(i, 1)
+        logits, cache = decode(
+            params, cache, jnp.asarray(pool.block_table[:batch]),
+            jnp.asarray(pool.lengths[:batch] - 1), {"tokens": cur},
+        )
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            for i in range(batch):
+                assert pool.extend(i, 1)
+            logits, cache = decode(
+                params, cache, jnp.asarray(pool.block_table[:batch]),
+                jnp.asarray(pool.lengths[:batch] - 1),
+                {"tokens": jnp.argmax(logits, axis=-1)[:, None]},
+            )
+        jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+    ms_per_step = dt / steps * 1e3
+    return {
+        "ms_per_step": ms_per_step,
+        "tokens_per_s": batch / (dt / steps),
+    }
+
+
+def model_estimate(arch_name: str, dispatch: str, batch: int,
+                   context: int, block_size: int) -> dict:
+    from repro.configs import get_arch
+    from repro.core import resource_model as rm
+    from repro.core.platform import TPU_V5E
+
+    m = rm.ModelShape.from_arch(get_arch(arch_name))
+    s = rm.ServeSetup(
+        batch=batch, context=context, prefill_len=context,
+        EP=1, TP=1, DP=1, dispatch=dispatch, block_size=block_size,
+    )
+    e = rm.serve_estimate(m, s, TPU_V5E)
+    return {
+        "t_decode_ms": e.t_decode * 1e3,
+        "tokens_per_s": e.decode_tokens_per_s,
+        "flops_factor": e.decode_flops_factor,
+        "kv_bytes_per_seq": e.kv_bytes_seq,
+    }
+
+
+def run(arch_name: str, batches, context: int, block_size: int,
+        steps: int, seed: int) -> dict:
+    out = {
+        "meta": {
+            "arch": arch_name,
+            "reduced": True,
+            "context": context,
+            "block_size": block_size,
+            "timed_steps": steps,
+            "seed": seed,
+            "note": "wall-clock on this host (CPU: Pallas interpret mode); "
+                    "model = TPU-v5e analytical estimate at FULL arch size",
+        },
+        "batches": [],
+    }
+    for b in batches:
+        cell = {"batch": b}
+        for dispatch in ("capacity", "ragged"):
+            cell[dispatch] = measure_decode(
+                arch_name, dispatch, b, context, block_size, steps, seed
+            )
+            cell[dispatch]["model"] = model_estimate(
+                arch_name, dispatch, b, context, block_size
+            )
+        cell["ragged_speedup"] = (
+            cell["capacity"]["ms_per_step"] / cell["ragged"]["ms_per_step"]
+        )
+        out["batches"].append(cell)
+    sp = [c["ragged_speedup"] for c in out["batches"]]
+    out["summary"] = {
+        "batches": list(batches),
+        "ragged_speedup_min": min(sp),
+        "ragged_speedup_max": max(sp),
+        "decode_tokens_per_s_best": max(
+            c[d]["tokens_per_s"]
+            for c in out["batches"]
+            for d in ("capacity", "ragged")
+        ),
+    }
+    return out
+
+
+def schema(node):
+    if isinstance(node, dict):
+        return {k: schema(v) for k, v in sorted(node.items())}
+    if isinstance(node, list):
+        return [schema(node[0])] if node else []
+    return "leaf"
+
+
+def rows(smoke: bool = True):
+    """(name, us_per_call, derived) tuples for benchmarks.run."""
+    rec = run("granite-moe-3b-a800m", (1, 2) if smoke else (1, 4, 16),
+              context=32 if smoke else 256, block_size=8,
+              steps=2 if smoke else 8, seed=0)
+    out = []
+    for c in rec["batches"]:
+        for d in ("capacity", "ragged"):
+            out.append(
+                (
+                    f"serving_decode_b{c['batch']}_{d}",
+                    c[d]["ms_per_step"] * 1e3,
+                    f"tok/s={c[d]['tokens_per_s']:.2f}",
+                )
+            )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-moe-3b-a800m")
+    ap.add_argument("--batches", default="1,4,16")
+    ap.add_argument("--context", type=int, default=256)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes — schema/CI mode")
+    ap.add_argument("--out", type=Path, default=None)
+    ap.add_argument("--check-schema", type=Path, default=None,
+                    help="compare the emitted JSON's key structure against "
+                         "this committed file; exit 1 on drift")
+    args = ap.parse_args()
+
+    if args.smoke:
+        rec = run(args.arch, (1, 2), context=32, block_size=8, steps=2,
+                  seed=args.seed)
+    else:
+        batches = tuple(int(x) for x in args.batches.split(","))
+        rec = run(args.arch, batches, context=args.context,
+                  block_size=args.block_size, steps=args.steps,
+                  seed=args.seed)
+
+    if args.check_schema:
+        committed = json.loads(args.check_schema.read_text())
+        if schema(committed) != schema(rec):
+            print(f"SCHEMA DRIFT: {args.check_schema} no longer matches "
+                  f"what this bench emits — regenerate and commit it.",
+                  file=sys.stderr)
+            sys.exit(1)
+        print(f"schema ok: {args.check_schema}")
+        return
+
+    out = args.out or DEFAULT_OUT
+    out.write_text(json.dumps(rec, indent=1) + "\n")
+    s = rec["summary"]
+    print(f"wrote {out}")
+    print(f"ragged speedup {s['ragged_speedup_min']:.2f}x – "
+          f"{s['ragged_speedup_max']:.2f}x over batches {s['batches']}; "
+          f"best decode {s['decode_tokens_per_s_best']:.2f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

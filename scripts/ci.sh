@@ -19,10 +19,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest tests/test_kernels.py tests/test_moe_dispatch.py \
     tests/test_moe_properties.py -q
 
+# Serving smoke stage: the continuous-batching engine + paged KV-cache +
+# ragged decode parity suite (fast, single-device).
+python -m pytest tests/test_serving.py -q
+
 # Bench schema-rot gates: the smoke benches must still emit the exact key
 # structure of the committed BENCH_*.json files (regenerate + commit them
 # whenever a bench schema intentionally changes).
 python benchmarks/moe_gemm_bench.py --smoke --check-schema BENCH_moe_gemm.json
 python benchmarks/schedule_bench.py --smoke --check-schema BENCH_schedules.json
+python benchmarks/serving_bench.py --smoke --check-schema BENCH_serving.json
 
 exec python -m pytest -x -q "$@"

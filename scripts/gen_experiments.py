@@ -27,7 +27,11 @@ def dryrun_section(records):
         "(\"data\",\"ep\",\"tp\"); multi-pod 2×16×16 adds the \"pod\" axis). "
         "ShapeDtypeStruct stand-ins — no device allocation. "
         "`compiled.memory_analysis()` / loop-aware HLO analysis per cell in "
-        "`results/dryrun/*.json`.",
+        "`results/dryrun/*.json`. "
+        "Records generated in the CPU container are HOST-lowered: XLA:CPU "
+        "ignores the TPU memory model, so per-device byte/time columns are "
+        "structural only (expect absurd absolute values) — regenerate on "
+        "the target platform for real numbers.",
         "",
     ]
     ok = [r for r in records.values() if r["status"] == "ok"]
@@ -99,9 +103,11 @@ def main():
     records = RL.load_records()
     frame = (ROOT / "docs" / "experiments_frame.md").read_text()
     perf = (ROOT / "docs" / "experiments_perf.md").read_text()
+    serving = (ROOT / "docs" / "experiments_serving.md").read_text()
     out = frame.format(
         dryrun=dryrun_section(records),
         roofline=roofline_section(records),
+        serving=serving,
         perf=perf,
     )
     (ROOT / "EXPERIMENTS.md").write_text(out)

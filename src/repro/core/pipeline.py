@@ -172,6 +172,7 @@ def pipelined_stack_forward(
     positions: jax.Array,
     impl: str = "xla",
     num_microbatches: Optional[int] = None,
+    vstages: Optional[int] = None,
     embed_fn=None,  # (embed_params, tokens (b_mu, s)) -> (b_mu, s, d)
     embed_params=None,
 ):
@@ -184,14 +185,30 @@ def pipelined_stack_forward(
     letting it cross the shard_map boundary trips an XLA SPMD crash at
     512-device scale.)
 
-    Tick validity masks come from the schedule IR's forward projection (the
-    warmup staircase common to every flush schedule); differentiating this
-    scan with ``jax.grad`` realizes the GPipe backward order.
+    Tick validity masks come from the schedule IR's forward projection.
+    With ``vstages > 1`` (default: the plan's depth when its schedule is
+    interleaved) the *vstage* F-projection runs instead of the flat
+    staircase: PP·V chunks walk the ring, cutting the fill bubble from
+    ``(PP-1)/(M+PP-1)`` to ``(PP-1)/(V·M+PP-1)`` — forward-only loss eval
+    inherits the interleaved schedule's smaller fill bubble.
+    Differentiating this scan with ``jax.grad`` realizes the GPipe
+    backward order (per chunk when interleaved).
 
     Returns (x, {"moe_aux_loss","moe_z_loss"}, expert_load or None).
     """
     pp_axis = plan.pp_axis
     assert pp_axis is not None
+    if vstages is not None:
+        V = vstages
+    else:
+        V = plan.vstages if plan.schedule == "interleaved_1f1b" else 1
+    if V > 1:
+        return _pipelined_stack_forward_v(
+            block_params, x, arch, plan, V,
+            positions=positions, impl=impl,
+            num_microbatches=num_microbatches,
+            embed_fn=embed_fn, embed_params=embed_params,
+        )
     PP = plan.pp
     period = len(arch.block_pattern)
     reps = arch.num_layers // period
@@ -340,6 +357,165 @@ def pipelined_stack_forward(
     }
     if has_moe:
         loads = loads.reshape((reps,) + loads.shape[2:])
+    else:
+        loads = None
+    return y, metrics, loads
+
+
+def _pipelined_stack_forward_v(
+    block_params, x, arch: ArchConfig, plan: MeshPlan, V: int, *,
+    positions, impl, num_microbatches, embed_fn, embed_params,
+):
+    """Vstage F-projection executor (see ``pipelined_stack_forward``):
+    interprets ``schedules.forward_tick_tables_v`` — per tick, each stage
+    selects the scheduled chunk's parameters dynamically, runs it, and
+    ppermutes the result around the PP ring (the wrap edge feeds stage 0's
+    next virtual stage).  Arrivals park in ``num_slots`` input slots, as in
+    the schedule-executing train step.  The executed occupancy is the IR
+    F-projection by construction: the tick tables ARE the trace
+    (``forward_tick_tables_v`` asserts them against the full schedule)."""
+    pp_axis = plan.pp_axis
+    PP = plan.pp
+    period = len(arch.block_pattern)
+    reps = arch.num_layers // period
+
+    M = num_microbatches or plan.microbatches or 2 * PP
+    b, s = x.shape[:2]
+    d = arch.d_model
+    assert b % M == 0, (b, M)
+    b_mu = b // M
+
+    staged, rpc = _stage_block_params(block_params, arch, plan, vstages=V)
+    xm = x.reshape((M, b_mu, s) + ((d,) if embed_fn is None else ()))
+    pos_mu = positions[:b_mu]
+
+    ft = sched_lib.forward_tick_tables_v(PP, M, V)
+    K = ft.num_slots
+
+    has_moe = arch.num_moe_layers > 0
+    mesh = plan.mesh
+    manual_axes, local = _composition(plan)
+    act_dtype = (
+        _act_dtype(block_params, x.dtype) if embed_fn is not None else x.dtype
+    )
+    n_moe_pos = sum(1 for _, f in arch.block_pattern if f == "moe")
+
+    def stage_program(stage_params, emb_params, xm_local):
+        # in_spec P(pp_axis) leaves a leading length-1 stage dim: drop it,
+        # keeping the (V, rpc, ...) chunk-major layout.
+        stage_params = jax.tree.map(lambda p: p[0], stage_params)
+        stage = lax.axis_index(pp_axis)
+        valid_t = jnp.asarray(ft.valid)
+        mb_t = jnp.asarray(ft.mb)
+        vs_t = jnp.asarray(ft.vs)
+        slot_t = jnp.asarray(ft.slot)
+        arrive_t = jnp.asarray(ft.arrive)
+
+        act_spec = P(tuple(plan.dp_axes), tuple(plan.sp_axes), None)
+
+        def constrain(h):
+            if local:
+                return h
+            return lax.with_sharding_constraint(h, act_spec)
+
+        def tick(carry, t):
+            in_buf, recv_h, aux, z, loads = carry
+            # 1. park the wire arrival in its input slot
+            a_f = arrive_t[stage, t]
+            cur = lax.dynamic_index_in_dim(in_buf, a_f, 0, keepdims=False)
+            in_buf = lax.dynamic_update_index_in_dim(
+                in_buf, jnp.where(a_f >= 0, recv_h, cur), a_f, 0
+            )
+            # 2. the tick's F op (idle ticks run masked, like the train
+            # executor: a bubble costs one masked fwd)
+            mb_i = mb_t[stage, t]
+            vs_i = vs_t[stage, t]
+            chunk = jax.tree.map(
+                lambda p: lax.dynamic_index_in_dim(p, vs_i, 0, keepdims=False),
+                stage_params,
+            )
+            x0 = lax.dynamic_index_in_dim(xm_local, mb_i, 0, keepdims=False)
+            if embed_fn is not None:
+                x0 = embed_fn(emb_params, x0)
+            h_in = lax.dynamic_index_in_dim(
+                in_buf, slot_t[stage, t], 0, keepdims=False
+            )
+            first_chunk = jnp.logical_and(stage == 0, vs_i == 0)
+            inp = constrain(jnp.where(first_chunk, x0, h_in))
+            h_out, aux_d, loads_d = transformer.stack_forward(
+                chunk, inp, arch, plan,
+                positions=pos_mu, impl=impl, token_sharded=True,
+                unroll=True, local=local,
+            )
+            h_out = constrain(h_out)
+            vmask = valid_t[stage, t].astype(jnp.float32)
+            aux = aux + aux_d["moe_aux_loss"][None] * vmask
+            z = z + aux_d["moe_z_loss"][None] * vmask
+            if loads is not None and loads_d is not None:
+                cur_l = lax.dynamic_index_in_dim(loads, vs_i, 0, keepdims=False)
+                loads = lax.dynamic_update_index_in_dim(
+                    loads, cur_l + loads_d * vmask, vs_i, 0
+                )
+            sent = _send_fwd(h_out, plan, ring=True)
+            return (in_buf, sent, aux, z, loads), h_out
+
+        zero_h = jnp.zeros((b_mu, s, d), act_dtype)
+        zero_loads = (
+            jnp.zeros((V, rpc, n_moe_pos, arch.moe.num_experts), jnp.float32)
+            if has_moe
+            else None
+        )
+        carry0 = (
+            jnp.zeros((K, b_mu, s, d), act_dtype), zero_h,
+            jnp.zeros((1,), jnp.float32), jnp.zeros((1,), jnp.float32),
+            zero_loads,
+        )
+        (_, _, aux, z, loads), ys = lax.scan(
+            tick, carry0, jnp.arange(ft.Tf)
+        )
+        # The model outputs are chunk (PP-1, V-1)'s F results — their ticks
+        # are static in the projection.
+        out = ys[jnp.asarray(ft.out_ticks)]
+        return out, aux, z, loads
+
+    out_specs = (
+        P(pp_axis),  # (PP, M, b_mu, s, d): stage-stacked; take the last
+        P(pp_axis),
+        P(pp_axis),
+        P(pp_axis) if has_moe else P(),
+    )
+    in_specs = (
+        jax.tree.map(lambda v: P(pp_axis), staged),
+        jax.tree.map(lambda v: P(), embed_params)
+        if embed_params is not None
+        else P(),
+        P(None),
+    )
+
+    def wrapped(stage_params, emb_params, xm_in):
+        out, aux, z, loads = stage_program(stage_params, emb_params, xm_in)
+        out = out[None]
+        if loads is None:
+            return out, aux, z, jnp.zeros((), jnp.float32)
+        return out, aux, z, loads[None]
+
+    out, aux, z, loads = compat.shard_map(
+        wrapped,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_vma=False,
+        axis_names=manual_axes,
+    )(staged, embed_params if embed_params is not None else jnp.zeros(()), xm)
+
+    y = out[-1].reshape(b, s, d)
+    metrics = {
+        "moe_aux_loss": jnp.sum(aux) / M,
+        "moe_z_loss": jnp.sum(z) / M,
+    }
+    if has_moe:
+        # (PP, V, rpc, n_moe_pos, E) chunk-major -> caller's (reps, ...).
+        loads = _unstage_blocks(loads, reps)
     else:
         loads = None
     return y, metrics, loads

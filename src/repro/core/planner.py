@@ -216,6 +216,144 @@ def best_strategy(
     return cands[0] if cands else None
 
 
+# ---------------------------------------------------------------------------
+# Serving strategies (SLO-aware)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ServingStrategy:
+    """One serving configuration: replica geometry (EP x TP), replica
+    count, continuous-batching width and dispatch mode, with its
+    :class:`resource_model.ServeEstimate`."""
+
+    EP: int
+    TP: int
+    DP: int  # independent replicas splitting the traffic
+    batch: int  # decode width per replica
+    dispatch: str
+    estimate: rm.ServeEstimate
+
+    @property
+    def world(self) -> int:
+        return self.EP * self.TP * self.DP
+
+    def describe(self) -> str:
+        e = self.estimate
+        return (
+            f"EP={self.EP:<3d} TP={self.TP:<2d} DP={self.DP:<3d} "
+            f"batch={self.batch:<4d} disp={self.dispatch:<8s} "
+            f"tok/s/chip={e.tokens_per_s_per_chip:8.1f} "
+            f"t_decode={e.t_decode*1e3:7.2f}ms "
+            f"ttft={e.ttft*1e3:6.1f}ms "
+            f"mem={e.mem_per_chip/1e9:5.1f}GB "
+            f"(w={e.t_weights*1e3:.2f} kv={e.t_kv*1e3:.2f} "
+            f"comp={e.t_compute*1e3:.2f} comm={e.t_comm*1e3:.2f} "
+            f"drop={e.drop_rate:.2f})"
+        )
+
+
+def valid_serving_strategies(
+    arch: ArchConfig,
+    platform: Platform,
+    total_chips: int,
+    *,
+    context: int,
+    prefill_len: int,
+    batches: Iterable[int] = (1, 4, 16, 64, 256),
+    slo_ms: Optional[float] = None,
+    ttft_slo_ms: Optional[float] = None,
+    imbalance: float = 1.0,
+) -> List[ServingStrategy]:
+    """Enumerate (EP, TP, DP, batch, dispatch) serving configurations.
+
+    Constraints (the training planner's Eq 7–11 recast for decode):
+
+    * EP * TP * DP == total chips (replicas tile the fleet);
+    * EP | E and EP <= fast-domain (Eq 8 / Eq 10 — the decode combine is a
+      psum over "ep");
+    * weights + KV pool fit per chip (Eq-11 analogue);
+    * ``slo_ms``: per-token decode latency SLO — strategies whose
+      estimated t_decode exceeds it are infeasible, which is how latency
+      budget turns into a max usable batch;
+    * ``ttft_slo_ms``: optional prefill (time-to-first-token) SLO.
+    """
+    shape = rm.ModelShape.from_arch(arch)
+    E = shape.E if shape.E else 1
+    dispatches = DISPATCH_MODES if shape.E else (DEFAULT_DISPATCH,)
+    out: List[ServingStrategy] = []
+    # Dense archs coerce E to 1 above, so E % EP already rejects EP > 1
+    # (no expert axis to shard).
+    for EP in _divisors(total_chips):
+        if E % EP or EP > platform.fast_domain:
+            continue
+        rest = total_chips // EP
+        for TP in _divisors(rest):
+            DP = rest // TP
+            for batch in batches:
+                for dispatch in dispatches:
+                    s = rm.ServeSetup(
+                        batch=batch,
+                        context=context,
+                        prefill_len=prefill_len,
+                        EP=EP,
+                        TP=TP,
+                        DP=DP,
+                        dispatch=dispatch,
+                        imbalance=imbalance,
+                    )
+                    est = rm.serve_estimate(shape, s, platform)
+                    if not est.mem_ok:
+                        continue
+                    if slo_ms is not None and est.t_decode * 1e3 > slo_ms:
+                        continue
+                    if (
+                        ttft_slo_ms is not None
+                        and est.ttft * 1e3 > ttft_slo_ms
+                    ):
+                        continue
+                    out.append(
+                        ServingStrategy(EP, TP, DP, batch, dispatch, est)
+                    )
+    return out
+
+
+def rank_serving_strategies(
+    strategies: List[ServingStrategy],
+) -> List[ServingStrategy]:
+    """Goodput-first ranking under the SLO: maximize decode tokens/s per
+    chip; among throughput ties prefer the lower drop rate (capacity
+    drops are silent quality loss), then the lower per-token latency,
+    then dropless dispatch (exact estimate ties at imbalance=1)."""
+    return sorted(
+        strategies,
+        key=lambda s: (
+            -s.estimate.tokens_per_s_per_chip,
+            s.estimate.drop_rate,
+            s.estimate.t_decode,
+            s.dispatch != "ragged",
+        ),
+    )
+
+
+def best_serving_strategy(
+    arch: ArchConfig,
+    platform: Platform,
+    total_chips: int,
+    *,
+    context: int,
+    prefill_len: int,
+    **kw,
+) -> Optional[ServingStrategy]:
+    cands = rank_serving_strategies(
+        valid_serving_strategies(
+            arch, platform, total_chips,
+            context=context, prefill_len=prefill_len, **kw,
+        )
+    )
+    return cands[0] if cands else None
+
+
 def min_chips(
     arch: ArchConfig,
     platform: Platform,

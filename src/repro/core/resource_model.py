@@ -47,10 +47,13 @@ class ModelShape:
     vocab: int
     n_attn: int = -1  # attention mixers (SSM archs have fewer); -1 -> L
     cf: float = 1.25  # capacity factor (prices the padding-FLOPs tax)
+    H_kv: int = -1  # KV heads (GQA) — sizes the serving KV-cache; -1 -> H
 
     def __post_init__(self):
         if self.n_attn < 0:
             object.__setattr__(self, "n_attn", self.L)
+        if self.H_kv < 0:
+            object.__setattr__(self, "H_kv", self.H)
 
     @classmethod
     def from_arch(cls, a: ArchConfig) -> "ModelShape":
@@ -69,6 +72,7 @@ class ModelShape:
             vocab=a.vocab_size,
             n_attn=a.num_attn_layers,
             cf=a.moe.capacity_factor if a.moe else 1.25,
+            H_kv=a.num_kv_heads,
         )
 
     # -- parameter counts (paper Table III) ---------------------------------
@@ -178,12 +182,18 @@ class DispatchCosts:
     the exact sorted rows).
     bytes_per_layer — per-rank dispatch bookkeeping HBM traffic per MoE
     layer per step (one-hot-cumsum position matrix vs argsort + permute).
+    counts_bytes_per_layer — wire bytes of the ragged path's
+    counts-exchange pre-pass: one (EP, E/EP) int32 all_to_all before the
+    payload a2a (fwd + the same pair on the backward), which carries the
+    receiver-side segment structure so the per-row id sideband is never
+    shipped.  Zero for capacity mode (slot layout is static).
     """
 
     flops_factor: float
     drop_rate: float
     act_factor: float
     bytes_per_layer: float
+    counts_bytes_per_layer: float = 0.0
 
 
 def dispatch_costs(m: ModelShape, t: TrainSetup) -> DispatchCosts:
@@ -221,6 +231,12 @@ def dispatch_costs(m: ModelShape, t: TrainSetup) -> DispatchCosts:
         bytes_per_layer=(
             rows * 8.0 * max(math.log2(max(rows, 2.0)), 1.0)
             + 2.0 * rows * m.d_model * t.bytes_act
+        ),
+        # Counts-exchange pre-pass (EP only): (EP, E/EP) int32 per
+        # direction, send+recv, fwd+bwd — four tiny messages that replace
+        # a per-row int32 id sideband of the payload a2a.
+        counts_bytes_per_layer=(
+            4.0 * t.EP * experts_local * 4.0 if t.EP > 1 else 0.0
         ),
     )
 
@@ -548,13 +564,22 @@ def estimate(
         tdp = 0.0
 
     # Dispatch bookkeeping (slot assignment / sort + permute) is per-rank
-    # HBM-bound work, fwd+bwd, for each hosted MoE layer.
+    # HBM-bound work, fwd+bwd, for each hosted MoE layer — plus, for the
+    # ragged EP path, the counts-exchange pre-pass: a second (tiny)
+    # collective per a2a, priced at the same link class as the payload.
     disp = dispatch_costs(m, t)
     t_disp = (
         2 * disp.bytes_per_layer * (m.L_moe / t.PP) / platform.hbm_bw
         if m.E
         else 0.0
     )
+    if m.E and disp.counts_bytes_per_layer:
+        counts_bw = (
+            platform.intra_node_bw
+            if t.EP <= platform.fast_domain
+            else platform.inter_node_bw
+        )
+        t_disp += disp.counts_bytes_per_layer * (m.L_moe / t.PP) / counts_bw
 
     # Fill/drain overhead over useful time: f/(1-f) of the Eq-3 tick
     # fraction — (PP-1)/M for the flush schedules, (PP-1)/(V·M) interleaved.
@@ -586,4 +611,238 @@ def estimate(
         t_dispatch=t_disp,
         drop_rate=disp.drop_rate,
         moe_flops_factor=disp.flops_factor,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving mode (decode latency / prefill throughput / KV bytes)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ServeSetup:
+    """Serving-mode run parameters — the decode-centric analogue of
+    :class:`TrainSetup`.
+
+    One serving *replica* spans ``EP * TP`` chips (weight-parallel decode:
+    tokens replicated over the replica, experts sharded over EP, everything
+    else over TP) and ``DP`` independent replicas split the traffic.
+    ``batch`` is the continuous-batching decode width per replica;
+    ``context`` the mean live context per sequence (prompt + generated so
+    far) — what the KV pool actually holds.
+    """
+
+    batch: int  # concurrent decode sequences per replica
+    context: int  # mean live tokens per sequence (KV resident)
+    prefill_len: int  # mean prompt length (TTFT)
+    EP: int = 1
+    TP: int = 1
+    DP: int = 1  # independent serving replicas
+    dispatch: str = DEFAULT_DISPATCH
+    weight_bytes: int = 2  # bf16 serving weights
+    kv_bytes: int = 2  # bf16 KV-cache entries
+    block_size: int = 16  # paged-KV page granularity (rounding unit)
+    imbalance: float = 1.0  # routing skew (max/mean expert load)
+
+    def __post_init__(self):
+        assert self.dispatch in DISPATCH_MODES, self.dispatch
+        assert self.batch >= 1 and self.context >= 1
+
+    @property
+    def chips_per_replica(self) -> int:
+        return self.EP * self.TP
+
+    @property
+    def P(self) -> int:
+        return self.EP * self.TP * self.DP
+
+
+def kv_bytes_per_token(m: ModelShape, s: ServeSetup) -> float:
+    """KV-cache bytes ONE token adds across all attention layers (K + V,
+    GQA heads)."""
+    return 2.0 * m.n_attn * m.H_kv * m.d_h * s.kv_bytes
+
+
+def kv_bytes_per_seq(m: ModelShape, s: ServeSetup) -> float:
+    """Resident KV bytes of one sequence at mean context, page-rounded —
+    the paged pool's allocation unit (a dense preallocation would pay
+    max_len instead of context)."""
+    pages = -(-s.context // s.block_size)
+    return pages * s.block_size * kv_bytes_per_token(m, s)
+
+
+def serve_memory_per_chip(m: ModelShape, s: ServeSetup) -> float:
+    """Per-chip serving HBM: weights (experts sharded over EP, the rest
+    over TP) + the replica's KV pool.  Our weight-parallel decode
+    replicates tokens — and therefore the KV pool — across the replica's
+    chips; a TP-sharded-KV attention would divide the second term by TP."""
+    expert_params = m.L_moe * (m.E / s.EP + m.E_s) * m.expert_params
+    other = (
+        (m.L - m.L_moe) * m.dense_ffn_params
+        + m.n_attn * m.attn_params_per_layer
+        + 2 * m.vocab * m.d_model
+    ) / s.TP
+    weights = s.weight_bytes * (expert_params + other)
+    kv_pool = s.batch * kv_bytes_per_seq(m, s)
+    return weights + kv_pool
+
+
+def serving_dispatch_costs(m: ModelShape, s: ServeSetup) -> DispatchCosts:
+    """Decode-step dispatch economics.  The decode GEMM is the paper's
+    skinny-GEMM regime at its worst: only ``batch * k`` routed rows per
+    step, so capacity mode's (E, C, d) buffer issues at least one row per
+    expert — a ``max(E/(batch*k), cf)``-fold padding tax — while ragged
+    issues only the occupied row tiles.  Capacity drops under skew exactly
+    as in training."""
+    if m.E == 0:
+        return DispatchCosts(1.0, 0.0, 1.0, 0.0)
+    rows = s.batch * m.k / s.EP  # routed rows per rank per decode step
+    E_l = max(m.E / s.EP, 1.0)
+    if s.dispatch == "capacity":
+        C = max(math.ceil(s.batch * m.k / m.E * m.cf), 1)
+        issued = E_l * C
+        return DispatchCosts(
+            flops_factor=max(issued / max(rows, 1e-9), 1.0),
+            drop_rate=max(0.0, 1.0 - m.cf / max(s.imbalance, 1e-9)),
+            act_factor=max(issued / max(rows, 1e-9), 1.0),
+            bytes_per_layer=3.0 * rows * m.E * 4.0,
+        )
+    # Ragged issues one bm-row tile per occupied (expert, tile) work item;
+    # bm adapts down to the replicated row count (kernels.moe_gemm._row_block)
+    bm = min(RAGGED_TILE_ROWS, max(-(-s.batch * m.k // 16) * 16, 16))
+    occupied = min(E_l, rows) if rows >= 1.0 else 1.0
+    c_e = rows / max(occupied, 1.0)
+    issued = occupied * (-(-c_e // bm)) * bm
+    return DispatchCosts(
+        flops_factor=max(issued / max(rows, 1e-9), 1.0),
+        drop_rate=0.0,
+        act_factor=1.0,
+        bytes_per_layer=rows * 8.0 * max(math.log2(max(rows, 2.0)), 1.0)
+        + 2.0 * rows * m.d_model * s.kv_bytes,
+    )
+
+
+@dataclass(frozen=True)
+class ServeEstimate:
+    """What one serving strategy costs — the planner ranks these."""
+
+    t_decode: float  # seconds per decode step (one token per running seq)
+    decode_tokens_per_s: float  # per replica: batch / t_decode
+    tokens_per_s_per_chip: float  # fleet goodput density
+    ttft: float  # prefill latency at mean prompt length (SLO input #2)
+    prefill_tokens_per_s: float
+    kv_bytes_seq: float
+    mem_per_chip: float
+    mem_ok: bool
+    drop_rate: float
+    decode_flops_factor: float
+    # decode step breakdown (seconds)
+    t_weights: float
+    t_kv: float
+    t_compute: float
+    t_comm: float
+
+
+def serve_estimate(
+    m: ModelShape, s: ServeSetup, platform: Platform
+) -> ServeEstimate:
+    """Analytical decode/prefill model for one strategy.
+
+    Decode is memory-bound at small batch (stream the touched weights +
+    the batch's KV each step) and compute-bound at large batch; the two
+    streams overlap on real hardware, so the step time is
+    ``max(t_hbm, t_compute) + t_comm`` — communication (the EP combine
+    psum + router replication) stays exposed, matching the executor (no
+    a2a/compute overlap in the decode path).
+    """
+    disp = serving_dispatch_costs(m, s)
+
+    # -- weights streamed per step (per chip) -------------------------------
+    # Experts actually touched per rank: batch*k assignments spread over E
+    # experts; expected distinct experts is E(1 - (1 - 1/E)^{batch k}).
+    if m.E:
+        hit = m.E * (1.0 - (1.0 - 1.0 / m.E) ** (s.batch * m.k))
+        touched_l = min(hit / s.EP, m.E / s.EP)
+        if s.dispatch == "capacity":
+            # capacity mode streams every local expert's weights through
+            # the grouped GEMM regardless of occupancy
+            touched_l = m.E / s.EP
+        expert_bytes = (
+            m.L_moe * (touched_l + m.E_s) * m.expert_params * s.weight_bytes
+        )
+    else:
+        expert_bytes = 0.0
+    other_bytes = (
+        (m.L - m.L_moe) * m.dense_ffn_params
+        + m.n_attn * m.attn_params_per_layer
+        + 2 * m.vocab * m.d_model
+    ) / s.TP * s.weight_bytes
+    t_weights = (expert_bytes + other_bytes) / platform.hbm_bw
+
+    # -- KV read (replicated tokens: every chip reads the batch's KV) -------
+    t_kv = s.batch * s.context * kv_bytes_per_token(m, s) / platform.hbm_bw
+
+    # -- compute ------------------------------------------------------------
+    # 2 FLOPs/param/token; routed experts pay the dispatch padding tax.
+    tokens = s.batch
+    moe_flops = (
+        2.0 * m.L_moe * (m.k * disp.flops_factor + m.E_s)
+        * m.expert_params * tokens
+    )
+    other_flops = 2.0 * (
+        (m.L - m.L_moe) * m.dense_ffn_params
+        + m.n_attn * m.attn_params_per_layer
+        + 2 * m.vocab * m.d_model
+    ) * tokens
+    attn_flops = 4.0 * m.n_attn * tokens * s.context * m.H * m.d_h
+    # Decode GEMMs have `batch` rows — deep in the skinny-GEMM regime.
+    eff = platform.gemm_efficiency(int(min(tokens, m.d_model)))
+    peak = platform.peak_flops * s.chips_per_replica
+    t_comp = (moe_flops + other_flops) / (peak * eff) + attn_flops / (
+        platform.peak_flops * platform.attn_eff
+    )
+
+    # -- communication (per replica, exposed) -------------------------------
+    if m.E and s.EP > 1:
+        bw = (
+            platform.intra_node_bw
+            if s.EP <= platform.fast_domain
+            else platform.inter_node_bw
+        )
+        # psum("ep") combine of (batch*k, d) partial outputs per MoE layer
+        comb = 2.0 * s.batch * m.k * m.d_model * s.kv_bytes
+        t_comm = m.L_moe * comb * (s.EP - 1) / s.EP / bw
+    else:
+        t_comm = 0.0
+
+    t_decode = max(t_weights + t_kv, t_comp * s.imbalance) + t_comm
+
+    # -- prefill (compute-bound; chunked into the decode stream) ------------
+    pf_tokens = s.prefill_len
+    pf_flops = 2.0 * (
+        m.L_moe * (m.k + m.E_s) * m.expert_params
+        + (m.L - m.L_moe) * m.dense_ffn_params
+        + m.n_attn * m.attn_params_per_layer
+        + 2 * m.vocab * m.d_model
+    ) * pf_tokens + 2.0 * m.n_attn * pf_tokens * pf_tokens * m.H * m.d_h
+    pf_eff = platform.gemm_efficiency(int(min(pf_tokens, m.d_model)))
+    ttft = pf_flops / (peak * pf_eff)
+    prefill_tps = pf_tokens / ttft if ttft > 0 else float("inf")
+
+    mem = serve_memory_per_chip(m, s)
+    return ServeEstimate(
+        t_decode=t_decode,
+        decode_tokens_per_s=s.batch / t_decode,
+        tokens_per_s_per_chip=s.batch * s.DP / t_decode / max(s.P, 1),
+        ttft=ttft,
+        prefill_tokens_per_s=prefill_tps,
+        kv_bytes_seq=kv_bytes_per_seq(m, s),
+        mem_per_chip=mem,
+        mem_ok=mem <= platform.hbm_bytes,
+        drop_rate=disp.drop_rate,
+        decode_flops_factor=disp.flops_factor,
+        t_weights=t_weights,
+        t_kv=t_kv,
+        t_compute=t_comp,
+        t_comm=t_comm,
     )

@@ -664,6 +664,119 @@ def forward_tick_tables(PP: int, M: int) -> Tuple[np.ndarray, np.ndarray, int]:
     return valid, mb, Tf
 
 
+@dataclass(frozen=True)
+class ForwardTables:
+    """F-projection of a schedule for the forward-only executor: per-tick
+    validity/microbatch/vstage tables over the compacted forward makespan
+    (backward ticks removed, F ops re-list-scheduled under the same
+    chunk-ring dependencies).  ``slot``/``arrive``/``num_slots`` give the
+    input-parking geometry: the chunk ring's wrap edges mean an interior
+    stage can receive several activations before consuming them (arrivals
+    park in ``arrive[s, t]``; the op at (s, t) reads ``slot[s, t]``).
+    V=1 compacts to the classic staircase with ``num_slots == 1``
+    (every arrival is consumed the tick it lands)."""
+
+    valid: np.ndarray  # (PP, Tf) bool
+    mb: np.ndarray  # (PP, Tf) int32
+    vs: np.ndarray  # (PP, Tf) int32
+    slot: np.ndarray  # (PP, Tf) int32: input slot of the tick's op
+    arrive: np.ndarray  # (PP, Tf) int32: slot of the arriving payload, -1
+    num_slots: int
+    Tf: int
+    out_ticks: Tuple[int, ...]  # tick of F(PP-1, V-1, mb) for each mb
+
+
+def forward_tick_tables_v(PP: int, M: int, V: int) -> ForwardTables:
+    """Vstage F-projection of the interleaved IR (V=1: the flat staircase).
+
+    Projects the F ops of ``build("interleaved_1f1b", PP, M, V)`` out of
+    the full table and re-list-schedules them under the same chunk-ring
+    dependencies — dropping the B-induced stalls, which is exactly what a
+    forward-only (loss-eval) pipeline can do.  The compacted makespan is
+    ``V*M + PP - 1`` chunk ticks: the same ``V*M`` work ticks as the flat
+    table's ``M`` stage-fulls, but a fill staircase of ``PP - 1`` *chunk*
+    ticks (each 1/V of a stage) instead of stage-fulls — the fill-bubble
+    fraction drops from ``(PP-1)/(M+PP-1)`` to ``(PP-1)/(V·M+PP-1)``, the
+    ROADMAP follow-up.
+
+    Asserted against the IR trace: the per-stage F op order equals the
+    full schedule's F order (the projection is faithful), every chunk-ring
+    hand-off stays strictly later than its producer, and the compacted
+    makespan never exceeds the full schedule's.
+    """
+    name = "interleaved_1f1b" if V > 1 else "gpipe"
+    sched = build(name, PP, M, V)
+    f_orders = [
+        [op for op in sched.stage_order(s) if op[0] == "F"]
+        for s in range(PP)
+    ]
+    placed = list_schedule(f_orders, t_fwd=1.0, t_bwd=1.0, V=V)
+    Tf = int(max(end for _, _, _, end in placed))
+    assert Tf <= sched.num_ticks, (Tf, sched.num_ticks)
+    valid = np.zeros((PP, Tf), bool)
+    mb = np.zeros((PP, Tf), np.int32)
+    vs = np.zeros((PP, Tf), np.int32)
+    f_tick: Dict[Tuple[int, int, int], int] = {}
+    for s, op, start, _end in placed:
+        t = int(start)
+        assert t == start and not valid[s, t], (s, t)
+        valid[s, t] = True
+        mb[s, t] = op[1]
+        vs[s, t] = op[2]
+        f_tick[(s, op[2], op[1])] = t
+    # Occupancy assertion against the IR trace: per-stage projected F order
+    # == the schedule's F order, and hand-offs respect the chunk ring.
+    for s in range(PP):
+        proj = [
+            (int(mb[s, t]), int(vs[s, t])) for t in range(Tf) if valid[s, t]
+        ]
+        want = [(op[1], op[2]) for op in f_orders[s]]
+        assert proj == want, (s, proj, want)
+        for vs_i in range(V):
+            for m_i in range(M):
+                prv = prev_chunk(s, vs_i, PP, V)
+                if prv is not None:
+                    assert (
+                        f_tick[(s, vs_i, m_i)] > f_tick[prv + (m_i,)]
+                    ), (s, vs_i, m_i)
+    out_ticks = tuple(f_tick[(PP - 1, V - 1, m_i)] for m_i in range(M))
+
+    # Input-parking geometry (greedy interval coloring, same scheme as
+    # _assign_slots): a chunk input lives from its arrival (producer's F
+    # tick + 1; own tick for the raw-input chunk) to its consumption.
+    slot = np.zeros((PP, Tf), np.int32)
+    arrive = np.full((PP, Tf), -1, np.int32)
+    num_slots = 1
+    for s in range(PP):
+        res = []
+        for vs_i in range(V):
+            for m_i in range(M):
+                prv = prev_chunk(s, vs_i, PP, V)
+                use = f_tick[(s, vs_i, m_i)]
+                alloc = use if prv is None else f_tick[prv + (m_i,)] + 1
+                assert alloc <= use, (s, vs_i, m_i)
+                res.append((alloc, use, (vs_i, m_i), prv is not None))
+        free_at: List[int] = []
+        for alloc, use, (vs_i, m_i), parked in sorted(res):
+            for i, fa in enumerate(free_at):
+                if fa <= alloc:
+                    sl = i
+                    free_at[i] = use + 1
+                    break
+            else:
+                sl = len(free_at)
+                free_at.append(use + 1)
+            slot[s, f_tick[(s, vs_i, m_i)]] = sl
+            if parked:
+                assert arrive[s, alloc] == -1, "arrival clash"
+                arrive[s, alloc] = sl
+        num_slots = max(num_slots, len(free_at))
+    return ForwardTables(
+        valid=valid, mb=mb, vs=vs, slot=slot, arrive=arrive,
+        num_slots=num_slots, Tf=Tf, out_ticks=out_ticks,
+    )
+
+
 def peak_activations_1f1b(PP: int) -> List[int]:
     """Paper Eq 4: stage i holds (PP - i) in-flight microbatches at peak."""
     return [PP - i for i in range(PP)]

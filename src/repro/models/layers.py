@@ -115,6 +115,24 @@ def _causal_mask(s_q: int, s_k: int, *, q_offset, window: Optional[int]):
     return m
 
 
+def _causal_mask_batched(
+    b: int, s_q: int, s_k: int, *, q_offset, window: Optional[int], kv_len
+):
+    """(b, s_q, s_k) mask for per-sequence offsets/lengths — the continuous-
+    batching decode case, where each batch slot sits at its own cache fill.
+    ``q_offset``/``kv_len`` may be scalars or (b,) arrays."""
+    q_off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+    q_pos = jnp.arange(s_q, dtype=jnp.int32)[None, :, None] + q_off[:, None, None]
+    k_pos = jnp.arange(s_k, dtype=jnp.int32)[None, None, :]
+    m = k_pos <= q_pos
+    if window is not None:
+        m &= k_pos > q_pos - window
+    if kv_len is not None:
+        kl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+        m &= k_pos < kl[:, None, None]
+    return m
+
+
 def attention(
     q: jax.Array,  # (b, s_q, hq, d)
     k: jax.Array,  # (b, s_k, hkv, d)
@@ -189,10 +207,21 @@ def attention(
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qh, k, preferred_element_type=jnp.float32)
     scores = scores / math.sqrt(d)
     scores = softcap(scores, logit_softcap)
-    mask = _causal_mask(s_q, k.shape[1], q_offset=q_offset, window=window)
-    if kv_len is not None:
-        mask &= (jnp.arange(k.shape[1]) < kv_len)[None, :]
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    per_seq = jnp.ndim(q_offset) > 0 or (
+        kv_len is not None and jnp.ndim(kv_len) > 0
+    )
+    if per_seq:
+        # Continuous-batching decode: each slot at its own cache fill.
+        mask_b = _causal_mask_batched(
+            b, s_q, k.shape[1], q_offset=q_offset, window=window,
+            kv_len=kv_len,
+        )
+        scores = jnp.where(mask_b[:, None, None], scores, -1e30)
+    else:
+        mask = _causal_mask(s_q, k.shape[1], q_offset=q_offset, window=window)
+        if kv_len is not None:
+            mask &= (jnp.arange(k.shape[1]) < kv_len)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
     return out.reshape(b, s_q, hq, d)
@@ -220,7 +249,28 @@ def attention_proj(params, x, cfg, positions, *, impl="xla", window=None,
     k = positional_embed(k, positions, cfg.rope_type, cfg.rope_theta)
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and "block_table" in cache:
+        # Paged decode (continuous batching): append the new K/V rows to
+        # their (page, slot) cells, materialize the prefix via the block
+        # table, attend with per-sequence offsets/lengths.  Inactive batch
+        # slots carry sentinel block-table rows: their writes drop and
+        # their reads are masked by kv_len.
+        from repro.serving import kv_cache as kv_lib
+
+        bt, lens = cache["block_table"], cache["lengths"]
+        pk = kv_lib.append_tokens(cache["k_pages"], bt, lens, k)
+        pv = kv_lib.append_tokens(cache["v_pages"], bt, lens, v)
+        new_cache = dict(cache, k_pages=pk, v_pages=pv)
+        ck = kv_lib.gather_pages(pk, bt).astype(q.dtype)
+        cv = kv_lib.gather_pages(pv, bt).astype(q.dtype)
+        out = attention(
+            q, ck, cv,
+            q_offset=lens,
+            window=window,
+            logit_softcap=cfg.attn_logit_softcap,
+            kv_len=lens + s,
+        )
+    elif cache is not None:
         # Decode: write the new K/V at cache_index, attend over the cache.
         ck = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
         cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)

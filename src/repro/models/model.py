@@ -585,6 +585,138 @@ class LanguageModel:
         logits = self._head(params, x)[:, 0]
         return logits, new_cache
 
+    # -- paged serving (continuous batching) --------------------------------
+
+    def init_paged_cache(self, layout, dtype=jnp.bfloat16):
+        """Per-pattern-position page pools for the serving engine.
+
+        ``layout``: a :class:`repro.serving.kv_cache.PagedLayout`.  Returns
+        a tuple (one entry per pattern position) of {"k","v"} pools shaped
+        (reps, num_blocks, block_size, kv_heads, head_dim).  SSM mixers
+        have no paged form yet (their per-sequence state is O(1) in context
+        — paging buys nothing); the engine rejects those archs.
+        """
+        from repro.serving import kv_cache as kv_lib
+
+        a = self.arch
+        reps = a.num_layers // len(a.block_pattern)
+        pools = []
+        for mixer, _ in a.block_pattern:
+            if not mixer.startswith("attn"):
+                raise NotImplementedError(
+                    f"paged serving supports attention mixers only, got "
+                    f"{mixer!r} in {a.name}"
+                )
+            pools.append(
+                kv_lib.init_pages(
+                    layout, reps, a.num_kv_heads, a.head_dim, dtype
+                )
+            )
+        return tuple(pools)
+
+    def prefill_paged(self, params, batch, cache, block_table, lengths):
+        """Prompt forward that writes K/V into the paged cache.
+
+        batch: {"tokens": (b, s_pad)} — prompts right-padded to a common
+        bucket length; lengths: (b,) true prompt lengths; block_table:
+        (b, nb) page ids (sentinel rows for unused slots).  Causality keeps
+        real rows exact under right-padding (pads only ever attend
+        backwards), and the page scatter drops pad rows via ``count=``.
+        Returns (last-valid-position logits (b, vp), new_cache).
+        """
+        from repro.serving import kv_cache as kv_lib
+
+        a = self.arch
+        x = self._embed(params, batch)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None], (b, s)
+        )
+
+        def body(carry, xs):
+            rep_params, rep_pages = xs
+            h = carry
+            new_pages = []
+            for pos, blk in enumerate(a.block_pattern):
+                h, _, nc = transformer.apply_block(
+                    blk,
+                    rep_params[pos],
+                    h,
+                    a,
+                    self.plan,
+                    positions=positions,
+                    impl=self.impl,
+                    return_cache=True,
+                    token_sharded=True,
+                )
+                new_pages.append(
+                    {
+                        "k": kv_lib.append_tokens(
+                            rep_pages[pos]["k"], block_table,
+                            jnp.zeros((b,), jnp.int32), nc["k"],
+                            count=lengths,
+                        ),
+                        "v": kv_lib.append_tokens(
+                            rep_pages[pos]["v"], block_table,
+                            jnp.zeros((b,), jnp.int32), nc["v"],
+                            count=lengths,
+                        ),
+                    }
+                )
+            return h, tuple(new_pages)
+
+        x, new_cache = lax.scan(body, x, (params["blocks"], cache))
+        x = rms_norm(x, params["final_norm"], a.norm_eps)
+        # Last VALID position per sequence (prompts are right-padded).
+        idx = jnp.clip(lengths - 1, 0, s - 1)
+        xt = jnp.take_along_axis(x, idx[:, None, None], axis=1)  # (b, 1, d)
+        logits = self._head(params, xt)[:, 0]
+        return logits, new_cache
+
+    def decode_step_paged(self, params, cache, block_table, lengths, batch):
+        """One continuous-batching decode step over all sequence slots.
+
+        batch: {"tokens": (b, 1)}; lengths: (b,) per-sequence cache fills
+        (positions of the new tokens); block_table: (b, nb).  Inactive
+        slots (sentinel table rows) write nothing and produce garbage
+        logits the engine ignores.  Returns (logits (b, vp), new_cache).
+        """
+        a = self.arch
+        x = self._embed(params, batch)
+        positions = lengths[:, None]  # per-sequence RoPE positions
+
+        def body(carry, xs):
+            rep_params, rep_pages = xs
+            h = carry
+            new_pages = []
+            for pos, blk in enumerate(a.block_pattern):
+                pc = {
+                    "k_pages": rep_pages[pos]["k"],
+                    "v_pages": rep_pages[pos]["v"],
+                    "block_table": block_table,
+                    "lengths": lengths,
+                }
+                h, _, nc = transformer.apply_block(
+                    blk,
+                    rep_params[pos],
+                    h,
+                    a,
+                    self.plan,
+                    positions=positions,
+                    impl=self.impl,
+                    cache=pc,
+                    token_sharded=False,
+                )
+                new_pages.append(
+                    {"k": nc["k_pages"], "v": nc["v_pages"]}
+                )
+            return h, tuple(new_pages)
+
+        x, new_cache = lax.scan(body, x, (params["blocks"], cache))
+        x = rms_norm(x, params["final_norm"], a.norm_eps)
+        logits = self._head(params, x)[:, 0]
+        return logits, new_cache
+
     def prefill(self, params, batch):
         """Forward over a prompt, emitting (last-position logits, cache)."""
         a = self.arch

@@ -28,10 +28,13 @@ Two dispatch modes (``MoECfg.dispatch``):
   assignments into contiguous per-expert row segments, run the ragged
   grouped GEMM over exactly the occupied rows (``kernels.moe_gemm``), and
   combine through the inverse permutation.  Locally this drops nothing and
-  multiplies no zeros; under EP the a2a payload is the sorted rows + local
-  expert ids at the capacity-mode wire size, budgeted per destination
+  multiplies no zeros; under EP a tiny counts-exchange pre-pass ships the
+  per-(rank, expert) segment sizes, then the a2a payload is just the
+  sorted rows at the capacity-mode wire size, budgeted per destination
   *rank* (E_l*C rows) rather than per expert — every token kept by
-  per-expert capacity is also kept here, and usually more.
+  per-expert capacity is also kept here, and usually more.  Decode
+  (replicated tokens) sorts per rank by local expert id and combines the
+  ragged partial outputs with psum("ep").
 
 Everything is differentiable; expert-weight gradients reduce over the data
 axis through the gather transpose.
@@ -203,8 +206,8 @@ def _moe_ragged_local(xt, top_phys, top_w, w_up, w_gate, w_down,
 def _moe_ragged_sharded(xt, top_phys, top_w, wu_f, wg_f, wd_f,
                         activation: str, impl: str, moe: MoECfg,
                         ep_size: int, capacity: int, a2a):
-    """Dropless-style EP dispatch: sorted rows + local expert ids as the
-    all-to-all payload.
+    """Dropless-style EP dispatch: sorted rows as the all-to-all payload,
+    segment structure carried by a counts-exchange pre-pass.
 
     Rows are argsorted by global expert id (contiguous per-destination
     segments, experts contiguous per rank) and packed into a per-rank send
@@ -212,7 +215,22 @@ def _moe_ragged_sharded(xt, top_phys, top_w, wu_f, wg_f, wd_f,
     the row budget aggregated per *rank* instead of per expert: since
     sum_e min(c_e, C) <= min(sum_e c_e, E_l*C), every token capacity mode
     keeps is kept here too (usually strictly more; the local path keeps
-    all).  Each receiver re-sorts the merged segments by local expert id
+    all).
+
+    **Counts exchange**: before the payload a2a, each rank ships its
+    per-(destination, local-expert) *kept-row counts* — a tiny
+    (ep, E_l) int32 all_to_all.  Because rows inside each source chunk
+    arrive sorted by expert, those counts reconstruct the receiver-side
+    expert ids exactly (``jnp.repeat`` with a static total), so the
+    per-row id sideband the payload used to carry is no longer shipped.
+    On a JAX with ``lax.ragged_all_to_all`` the same counts would also
+    right-size the row payload itself; on this pinned JAX (0.4.37, no
+    ragged collective) the payload stays at the static capacity wire size
+    and the win is the id sideband + receiver-side segment metadata.  The
+    second (tiny) collective is priced by
+    ``resource_model.dispatch_costs`` as ``counts_bytes_per_layer``.
+
+    Each receiver re-sorts the merged segments by local expert id
     (sentinel E_l marks empty slots, sorting them to the never-computed
     tail), runs the ragged grouped FFN over exactly the occupied rows, and
     returns results through the inverse permutations.
@@ -240,18 +258,35 @@ def _moe_ragged_sharded(xt, top_phys, top_w, wu_f, wg_f, wd_f,
         .at[dest, posd].set(xs, mode="drop")
     )
     lid = (sorted_e - dest * E_l).astype(jnp.int32)
-    send_id = (
-        jnp.full((ep_size, S), E_l, jnp.int32)  # sentinel: empty slot
-        .at[dest, posd].set(lid, mode="drop")
+    # Kept rows per (destination rank, local expert): the counts-exchange
+    # payload.  Only kept rows count — budget-dropped rows never hit the
+    # wire, so the reconstruction must not include them.
+    send_counts = (
+        jnp.zeros((ep_size, E_l), jnp.int32)
+        .at[dest, lid].add(keep_s.astype(jnp.int32))
     )
 
     recv_x = _transport_bf16(a2a, send_x).reshape(ep_size * S, d)
-    recv_id = lax.all_to_all(
-        send_id, "ep", split_axis=0, concat_axis=0, tiled=True
-    ).reshape(ep_size * S)
+    recv_counts = lax.all_to_all(
+        send_counts, "ep", split_axis=0, concat_axis=0, tiled=True
+    ).reshape(ep_size, E_l)
+
+    # Reconstruct the per-row expert ids of each received chunk from its
+    # counts: chunk i is [c_i0 rows of expert 0, c_i1 of expert 1, ...,
+    # sentinel padding] by construction (rows were packed in sorted order).
+    ids_tmpl = jnp.arange(E_l + 1, dtype=jnp.int32)  # E_l = sentinel
+
+    def chunk_ids(cnts):
+        pad = jnp.maximum(S - jnp.sum(cnts), 0)
+        reps = jnp.concatenate([cnts, pad[None]])
+        return jnp.repeat(ids_tmpl, reps, total_repeat_length=S)
+
+    recv_id = jax.vmap(chunk_ids)(recv_counts).reshape(ep_size * S)
 
     order2 = jnp.argsort(recv_id)  # sentinels sort to the tail
-    counts2 = jnp.zeros((E_l + 1,), jnp.int32).at[recv_id].add(1)
+    counts2 = jnp.concatenate(
+        [jnp.sum(recv_counts, axis=0), jnp.zeros((1,), jnp.int32)]
+    )
     offsets2 = jnp.concatenate(
         [jnp.zeros((1,), jnp.int32),
          jnp.cumsum(counts2[:E_l]).astype(jnp.int32)]
@@ -267,6 +302,47 @@ def _moe_ragged_sharded(xt, top_phys, top_w, wu_f, wg_f, wd_f,
     vals = jnp.where(keep_s[:, None], vals, 0.0)
     vals = jnp.take(vals, inv, axis=0)  # back to flat (token, k) order
     return _combine_expert_outputs(vals, flat_w, keep_s[inv], T, k, d)
+
+
+def _moe_ragged_decode(xt, top_phys, top_w, wu_f, wg_f, wd_f,
+                       activation: str, impl: str, moe: MoECfg,
+                       ep_size: int):
+    """Ragged weight-parallel decode (token_sharded=False): tokens are
+    replicated over the "ep" axis; each rank locally sorts the replicated
+    rows by LOCAL expert id (rows routed to other ranks' experts get the
+    sentinel E_l and sort to the never-computed tail), runs the ragged
+    grouped FFN over exactly its own experts' rows, scatters partial
+    outputs back to flat (token, k) order, and combines with psum("ep") —
+    the same static slot layout capacity decode uses, minus the (E, C, d)
+    zero padding and minus the drops.  This is the ROADMAP's "ragged decode
+    needs per-rank local sorting of the replicated rows" follow-up.
+    """
+    T, d = xt.shape
+    k = moe.top_k
+    E = moe.num_experts
+    E_l = E // ep_size
+    flat_e = top_phys.reshape(-1)
+    flat_w = top_w.reshape(-1)
+    g = lax.axis_index("ep") if ep_size > 1 else 0
+    lid = flat_e - g * E_l
+    local = (lid >= 0) & (lid < E_l)
+    lid = jnp.where(local, lid, E_l).astype(jnp.int32)  # sentinel tail
+    order = jnp.argsort(lid)  # stable: local rows first, by expert
+    counts = jnp.zeros((E_l + 1,), jnp.int32).at[lid].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(counts[:E_l]).astype(jnp.int32)]
+    )
+    xs = jnp.take(xt, order // k, axis=0)  # (T*k, d) local-expert-sorted
+    ys = _ragged_rows_ffn(xs, wu_f, wg_f, wd_f, offsets, activation, impl)
+    # Rows past offsets[E_l] (other ranks' experts) come back zero, so the
+    # inverse scatter leaves non-local rows zero and the psum sums each
+    # row's single owning rank.
+    vals = jnp.zeros((flat_e.shape[0], d), ys.dtype).at[order].set(ys)
+    if ep_size > 1:
+        vals = lax.psum(vals, "ep")
+    keep = jnp.ones_like(flat_e, dtype=bool)  # dropless
+    return _combine_expert_outputs(vals, flat_w, keep, T, k, d)
 
 
 def _transport_bf16(a2a_fn, x):
@@ -383,9 +459,14 @@ def moe_ffn(
     wd_spec = P("ep", ("data", "tp"), None)
 
     ffn_fn = _expert_ffn_pallas if impl == "pallas" else _expert_ffn
-    # In the decode path tokens are replicated over ep/tp — mean metrics over
-    # the dp axes only to avoid double counting.
-    metric_axes = axes if token_sharded else tuple(plan.dp_axes)
+    # In the decode path tokens are replicated over ep/tp — mean metrics
+    # over the axes the batch dim is ACTUALLY sharded on.  ``dp_spec`` is
+    # None when the batch does not divide the dp axes (e.g. batch-1
+    # long-context decode): the tokens are then fully replicated, and
+    # psumming over plan.dp_axes anyway multiplies counts and token totals
+    # by the replica count — the ep>1 x dp>1 double-count bug the decode
+    # tests pin (metrics must be invariant to the mesh factoring).
+    metric_axes = axes if token_sharded else (dp_spec or ())
 
     def body(wr, wu, wg, wd, assignment, xl):
         b_l, s_l, d = xl.shape
@@ -418,11 +499,19 @@ def moe_ffn(
                 t, "ep", split_axis=0, concat_axis=0, tiled=True
             )
 
-        if moe.dispatch == "ragged" and token_sharded:
-            # Sort-based dropless dispatch.  With EP the a2a payload is the
-            # sorted rows + ids (rank-level row budget, capacity wire
-            # size); without EP the whole block is processed ragged.
-            if ep_size > 1:
+        if moe.dispatch == "ragged":
+            # Sort-based dropless dispatch.  Train/prefill (token-sharded):
+            # with EP the a2a payload is the sorted rows + a counts-exchange
+            # pre-pass (rank-level row budget, capacity wire size); without
+            # EP the whole block is processed ragged.  Decode (replicated
+            # tokens): each rank sorts locally by its own expert ids and
+            # partial outputs combine via psum("ep") — no capacity buffers.
+            if not token_sharded:
+                y = _moe_ragged_decode(
+                    xt, top_phys, top_w, wu_f, wg_f, wd_f,
+                    arch.ffn_activation, impl, moe, ep_size,
+                )
+            elif ep_size > 1:
                 y = _moe_ragged_sharded(
                     xt, top_phys, top_w, wu_f, wg_f, wd_f,
                     arch.ffn_activation, impl, moe, ep_size, capacity, a2a,
@@ -440,8 +529,8 @@ def moe_ffn(
             }
             return y, metrics
 
-        # Capacity dispatch (decode always uses it: replicated tokens +
-        # psum("ep") combine need the static per-expert slot layout).
+        # Capacity dispatch (decode default: replicated tokens +
+        # psum("ep") combine over the static per-expert slot layout).
         flat_e, pos, keep, flat_w = _dispatch_indices(top_phys, top_w, E, capacity)
         buf = _scatter_to_buffers(xt, flat_e, pos, keep, E, capacity)
 

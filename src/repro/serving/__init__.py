@@ -1,0 +1,22 @@
+"""Serving subsystem: continuous-batching MoE inference runtime.
+
+* :mod:`repro.serving.kv_cache` — paged KV-cache (block-table pages,
+  host-side allocator, device scatter/gather ops);
+* :mod:`repro.serving.engine` — request queue + iteration-level scheduler
+  driving jitted ``prefill_paged`` / ``decode_step_paged`` steps.
+
+The serving-mode resource model and the SLO-aware strategy planner live
+with their training counterparts (``repro.core.resource_model`` /
+``repro.core.planner``); ``repro.launch.serve`` is the CLI entry point.
+"""
+
+from repro.serving.engine import Engine, Request, ServeConfig
+from repro.serving.kv_cache import BlockPool, PagedLayout
+
+__all__ = [
+    "BlockPool",
+    "Engine",
+    "PagedLayout",
+    "Request",
+    "ServeConfig",
+]

@@ -1,0 +1,287 @@
+"""Continuous-batching MoE inference engine.
+
+Orbax-free, single-process serving runtime layered on the existing model
+stack: a FIFO request queue drives an **iteration-level scheduler** (Orca
+style) — every engine step admits whatever fits (prefill), advances every
+running sequence by one token (decode), and retires finished sequences,
+so new requests join the batch between *tokens*, not between *requests*.
+
+Scheduling policy (deterministic; the trace test pins it):
+
+* **Admission** is strictly FIFO — a request is admitted only if the head
+  of the queue fits (sequence slot + prompt pages + a per-step prefill
+  token budget).  No skip-ahead: a large request at the head blocks later
+  small ones, which is what makes starvation impossible.
+* **Prefill** runs one request at a time, right-padded to a power-of-two
+  bucket (bounded jit-cache), writing prompt K/V into the paged pool and
+  sampling the first token from the last valid position.
+* **Decode** runs one jitted step over ALL sequence slots each iteration
+  (static shapes); inactive slots ride along masked via sentinel
+  block-table rows.
+* **Preemption**: if the page pool cannot cover a running sequence's next
+  token, the *youngest* running sequence is evicted back to the FRONT of
+  the queue (prompt + generated so far), freeing its pages — LIFO
+  preemption + FIFO re-admission keeps the oldest work progressing.
+
+The engine is intentionally host-driven: all device work happens in two
+jitted functions (``LanguageModel.prefill_paged`` / ``decode_step_paged``)
+and the scheduler mutates only tiny numpy tables between calls — the same
+split a multi-host serving deployment needs.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.kv_cache import BlockPool, PagedLayout
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32)
+        assert self.tokens.ndim == 1 and self.tokens.size >= 1
+        assert self.max_new_tokens >= 1
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Engine knobs (the planner's ServingStrategy binds max_seqs and the
+    dispatch mode; the rest size the paged pool)."""
+
+    max_seqs: int = 4  # concurrent decode batch width
+    block_size: int = 16  # tokens per KV page
+    num_blocks: int = 128  # pool pages (shared by all layers)
+    max_blocks_per_seq: int = 16
+    prefill_tokens_per_step: int = 512  # admission token budget per step
+    cache_dtype: str = "float32"  # "bfloat16" on real accelerators
+    max_steps: int = 10_000  # run() safety valve
+
+    def layout(self) -> PagedLayout:
+        return PagedLayout(
+            num_blocks=self.num_blocks,
+            block_size=self.block_size,
+            max_seqs=self.max_seqs,
+            max_blocks_per_seq=self.max_blocks_per_seq,
+        )
+
+
+@dataclass
+class _SeqState:
+    req: Request
+    slot: int
+    admitted_at: int  # engine step of (re-)admission
+    generated: List[int] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.req.max_new_tokens:
+            return True
+        eos = self.req.eos_id
+        return eos is not None and bool(self.generated) and self.generated[-1] == eos
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class Engine:
+    """Continuous-batching engine over one LanguageModel + parameter set."""
+
+    def __init__(self, lm, params, cfg: ServeConfig = ServeConfig()):
+        self.lm = lm
+        self.params = params
+        self.cfg = cfg
+        layout = cfg.layout()
+        self.pool = BlockPool(layout)
+        self.cache = lm.init_paged_cache(
+            layout, dtype=jnp.dtype(cfg.cache_dtype)
+        )
+        self.queue: Deque[Request] = deque()
+        self.running: Dict[int, _SeqState] = {}  # slot -> state
+        self.finished: Dict[int, List[int]] = {}
+        # Tokens generated before a preemption (the re-queued request
+        # carries them in its prompt; outputs must still report them).
+        self._gen_prefix: Dict[int, List[int]] = {}
+        self.trace: List[Tuple] = []
+        self.step_no = 0
+        self.decode_steps = 0
+        self.decoded_tokens = 0
+        self._decode = jax.jit(lm.decode_step_paged)
+        # One wrapper serves every bucket: jit caches per input shape, and
+        # the power-of-two padding in _bucket is what bounds that cache.
+        self._prefill = jax.jit(lm.prefill_paged)
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Reject requests the engine could never serve up front — a FIFO
+        scheduler must not accept a head it can never admit (it would
+        wedge the whole queue)."""
+        layout = self.cfg.layout()
+        total = int(req.tokens.size) + req.max_new_tokens
+        assert total <= layout.max_len, (
+            f"request {req.rid} needs {total} tokens > max_len "
+            f"{layout.max_len}"
+        )
+        assert layout.blocks_for(total) <= layout.num_blocks, (
+            f"request {req.rid} needs {layout.blocks_for(total)} pages > "
+            f"pool size {layout.num_blocks} — it would preempt itself "
+            f"forever"
+        )
+        self.queue.append(req)
+        self.trace.append(("submit", self.step_no, req.rid))
+
+    def run(self, requests: Sequence[Request]) -> Dict[int, List[int]]:
+        """Serve ``requests`` to completion; returns rid -> generated ids."""
+        for r in requests:
+            self.submit(r)
+        while (self.queue or self.running) and self.step_no < self.cfg.max_steps:
+            self.step()
+        assert not self.queue and not self.running, "engine stalled"
+        return dict(self.finished)
+
+    # -- one scheduler iteration --------------------------------------------
+
+    def step(self) -> None:
+        self.step_no += 1
+        self._admit_and_prefill()
+        self._decode_once()
+        self.pool.check_invariants()
+
+    # -- admission + prefill -------------------------------------------------
+
+    def _admit_and_prefill(self) -> None:
+        budget = self.cfg.prefill_tokens_per_step
+        while self.queue:
+            req = self.queue[0]
+            plen = int(req.tokens.size)
+            if plen > budget:
+                # An over-budget prompt (longer than the per-step token
+                # budget — possible after preemption merges generated
+                # tokens into the prompt) still proceeds ALONE on a fresh
+                # step: the budget bounds aggregate admission, it must
+                # never permanently block the head.
+                if budget < self.cfg.prefill_tokens_per_step:
+                    break  # budget partially spent; head keeps priority
+            if not self.pool.can_admit(plen, req.max_new_tokens):
+                break  # strict FIFO: never skip the head (no starvation)
+            self.queue.popleft()
+            slot = self.pool.admit(plen)
+            st = _SeqState(req=req, slot=slot, admitted_at=self.step_no)
+            self.running[slot] = st
+            self.trace.append(("admit", self.step_no, req.rid, slot))
+            budget -= plen
+            self._prefill_one(st)
+
+    def _prefill_one(self, st: _SeqState) -> None:
+        plen = int(st.req.tokens.size)
+        bucket = _bucket(plen)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = st.req.tokens
+        bt = jnp.asarray(self.pool.block_table[st.slot][None])
+        lens = jnp.asarray([plen], jnp.int32)
+        logits, self.cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, self.cache, bt, lens
+        )
+        tok = int(jnp.argmax(logits[0]))
+        st.generated.append(tok)
+        self.trace.append(("prefill", self.step_no, st.req.rid, plen, bucket))
+        self._retire_if_done(st)
+
+    # -- decode --------------------------------------------------------------
+
+    def _decode_once(self) -> None:
+        if not self.running:
+            return
+        # Reserve page room for every running sequence's next token; evict
+        # the youngest back to the queue head until the rest fit.
+        for slot in self._slots_by_age(youngest_first=True):
+            if slot not in self.running:  # already preempted as a victim
+                continue
+            while not self.pool.extend(slot, 1):
+                victim = self._youngest_slot()
+                self._preempt(victim)
+                if victim == slot:
+                    break
+        if not self.running:
+            return
+        fills = {
+            s: int(self.pool.lengths[s]) - 1 for s in self.running
+        }  # fill BEFORE the new token (extend bumped lengths by 1)
+        toks = np.zeros((self.cfg.max_seqs, 1), np.int32)
+        lens = np.zeros((self.cfg.max_seqs,), np.int32)
+        for slot, st in self.running.items():
+            toks[slot, 0] = st.generated[-1]
+            lens[slot] = fills[slot]
+        bt = jnp.asarray(self.pool.block_table)
+        logits, self.cache = self._decode(
+            self.params, self.cache, bt, jnp.asarray(lens),
+            {"tokens": jnp.asarray(toks)},
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        active = sorted(self.running)
+        self.decode_steps += 1
+        self.decoded_tokens += len(active)
+        self.trace.append(
+            ("decode", self.step_no, tuple(self.running[s].req.rid for s in active))
+        )
+        for slot in active:
+            st = self.running[slot]
+            st.generated.append(int(nxt[slot]))
+            self._retire_if_done(st)
+
+    # -- lifecycle helpers ---------------------------------------------------
+
+    def _retire_if_done(self, st: _SeqState) -> None:
+        if not st.done:
+            return
+        self.pool.release(st.slot)
+        del self.running[st.slot]
+        out = self._gen_prefix.pop(st.req.rid, []) + list(st.generated)
+        self.finished[st.req.rid] = out
+        self.trace.append(("finish", self.step_no, st.req.rid, len(out)))
+
+    def _slots_by_age(self, youngest_first: bool = False) -> List[int]:
+        order = sorted(
+            self.running, key=lambda s: (self.running[s].admitted_at, s)
+        )
+        return order[::-1] if youngest_first else order
+
+    def _youngest_slot(self) -> int:
+        return self._slots_by_age(youngest_first=True)[0]
+
+    def _preempt(self, slot: int) -> None:
+        """Evict a running sequence: free its pages and push prompt +
+        generated-so-far to the FRONT of the queue for re-prefill."""
+        st = self.running.pop(slot)
+        self.pool.release(slot)
+        self._gen_prefix[st.req.rid] = (
+            self._gen_prefix.get(st.req.rid, []) + list(st.generated)
+        )
+        merged = np.concatenate([st.req.tokens, np.asarray(st.generated, np.int32)])
+        remaining = st.req.max_new_tokens - len(st.generated)
+        assert remaining >= 1, "done sequences are retired, not preempted"
+        self.queue.appendleft(
+            Request(
+                rid=st.req.rid,
+                tokens=merged,
+                max_new_tokens=remaining,
+                eos_id=st.req.eos_id,
+            )
+        )
+        self.trace.append(("preempt", self.step_no, st.req.rid))

@@ -1,0 +1,240 @@
+"""Paged KV-cache: block-table-indexed page pool for continuous batching.
+
+vLLM-style paging adapted to the repo's scan-over-reps model layout: the
+token positions of a sequence are striped over fixed-size **pages**
+(``block_size`` tokens each) drawn from a shared pool, and a per-sequence
+**block table** maps logical block index -> physical page id.  Admitting a
+request allocates pages for its prompt; each decode step extends by at most
+one page; finishing a request returns its pages to the free list — so HBM
+holds live tokens (rounded up to a page), not ``max_seqs * max_len`` dense
+rectangles.
+
+Split of responsibilities:
+
+* **Device side** (pure jnp, shape-static, jit-friendly): ``gather_pages``
+  materializes a sequence's prefix as a dense ``(b, S, h, d)`` view for the
+  existing attention path; ``append_tokens`` scatters freshly-computed K/V
+  rows into their (page, slot) cells.  Out-of-range page ids act as a
+  *sentinel*: writes drop (``mode="drop"``), reads clamp and are masked off
+  by the attention ``kv_len`` — which is how inactive batch slots and
+  padded prompt tails ride through the static-shape step functions without
+  corrupting the pool.
+
+* **Host side** (:class:`BlockPool`): the free-list allocator and the
+  numpy block table / length registers the engine mutates between steps.
+  The allocator is bookkeeping only — tables are pushed to device as tiny
+  int32 arrays each step.
+
+The pool layer is model-agnostic (no repro.models imports); the engine
+builds one pages tree per attention pattern position via
+``LanguageModel.init_paged_cache``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PagedLayout:
+    """Geometry of one paged KV pool (shared by every layer)."""
+
+    num_blocks: int  # physical pages in the pool
+    block_size: int  # tokens per page
+    max_seqs: int  # concurrent sequence slots (decode batch width)
+    max_blocks_per_seq: int  # block-table width (max_len / block_size)
+
+    def __post_init__(self):
+        assert self.num_blocks >= 1 and self.block_size >= 1
+        assert self.max_blocks_per_seq >= 1
+
+    @property
+    def max_len(self) -> int:
+        return self.max_blocks_per_seq * self.block_size
+
+    @property
+    def sentinel(self) -> int:
+        """Out-of-pool page id: writes through it drop, reads are masked."""
+        return self.num_blocks
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+
+# ---------------------------------------------------------------------------
+# Device ops (pure; static shapes)
+# ---------------------------------------------------------------------------
+
+
+def gather_pages(pages: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Dense per-sequence K (or V) prefix view.
+
+    pages: (N, bs, h, d); block_table: (b, nb) int32 page ids (sentinel
+    entries read as zeros — and are masked off anyway via the attention
+    ``kv_len``).  Returns (b, nb*bs, h, d).
+    """
+    b, nb = block_table.shape
+    _, bs, h, d = pages.shape
+    out = jnp.take(pages, block_table, axis=0, mode="fill", fill_value=0)
+    return out.reshape(b, nb * bs, h, d)
+
+
+def append_tokens(
+    pages: jax.Array,
+    block_table: jax.Array,
+    start: jax.Array,
+    kv: jax.Array,
+    *,
+    count: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Scatter ``kv`` rows into their (page, slot) cells.
+
+    pages: (N, bs, h, d); block_table: (b, nb); start: (b,) int32 write
+    offsets (sequence positions); kv: (b, s, h, d); count: (b,) — only the
+    first ``count[i]`` rows of sequence i are written (default: all ``s``;
+    prefill uses it to skip padded prompt tails).  Writes through sentinel
+    page ids (inactive slots, exhausted tables) drop silently.
+    """
+    N, bs = pages.shape[:2]
+    b, s = kv.shape[:2]
+    nb = block_table.shape[1]
+    pos = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # (b, s)
+    blk = jnp.clip(pos // bs, 0, nb - 1)
+    page = jnp.take_along_axis(block_table, blk, axis=1)  # (b, s)
+    slot = pos % bs
+    valid = pos // bs < nb
+    if count is not None:
+        valid &= jnp.arange(s, dtype=jnp.int32)[None, :] < count[:, None]
+    page = jnp.where(valid, page, N)  # sentinel => dropped
+    return pages.at[page, slot].set(kv.astype(pages.dtype), mode="drop")
+
+
+def init_pages(
+    layout: PagedLayout, reps: int, kv_heads: int, head_dim: int,
+    dtype=jnp.bfloat16,
+):
+    """One pattern position's page pool: {"k","v"} of
+    (reps, num_blocks, block_size, kv_heads, head_dim)."""
+    shape = (reps, layout.num_blocks, layout.block_size, kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Host-side allocator
+# ---------------------------------------------------------------------------
+
+
+class BlockPool:
+    """Free-list page allocator + block-table/length registers.
+
+    All state is host numpy; the engine snapshots ``block_table`` /
+    ``lengths`` to device arrays once per step.  Pages are recycled LIFO so
+    block-reuse bugs (stale data visible through a recycled page) surface
+    immediately in tests rather than after pool exhaustion.
+    """
+
+    def __init__(self, layout: PagedLayout):
+        self.layout = layout
+        self._free: List[int] = list(range(layout.num_blocks - 1, -1, -1))
+        self.block_table = np.full(
+            (layout.max_seqs, layout.max_blocks_per_seq),
+            layout.sentinel,
+            np.int32,
+        )
+        self.lengths = np.zeros((layout.max_seqs,), np.int32)
+        self.active = np.zeros((layout.max_seqs,), bool)
+
+    # -- capacity queries ---------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def free_slot(self) -> Optional[int]:
+        idx = np.flatnonzero(~self.active)
+        return int(idx[0]) if idx.size else None
+
+    def can_admit(self, prompt_len: int, gen_len: int) -> bool:
+        """Room for the prompt now AND a slot — generation pages are
+        allocated lazily, so a long-running seq can still starve the pool;
+        the engine handles that by preempting the youngest sequence."""
+        if self.free_slot() is None:
+            return False
+        if prompt_len + gen_len > self.layout.max_len:
+            return False
+        return self.layout.blocks_for(prompt_len) <= self.free_blocks
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def admit(self, prompt_len: int) -> int:
+        """Claim a slot + pages for ``prompt_len`` tokens; returns the
+        slot."""
+        slot = self.free_slot()
+        assert slot is not None, "no free sequence slot"
+        need = self.layout.blocks_for(prompt_len)
+        assert need <= self.free_blocks, "pool exhausted"
+        assert need <= self.layout.max_blocks_per_seq, prompt_len
+        for i in range(need):
+            self.block_table[slot, i] = self._free.pop()
+        self.lengths[slot] = prompt_len
+        self.active[slot] = True
+        return slot
+
+    def extend(self, slot: int, n: int = 1) -> bool:
+        """Reserve room for ``n`` more tokens; False if the pool or the
+        table is exhausted (caller must free or preempt)."""
+        assert self.active[slot]
+        have = self.layout.blocks_for(int(self.lengths[slot]))
+        need = self.layout.blocks_for(int(self.lengths[slot]) + n)
+        if need > self.layout.max_blocks_per_seq:
+            return False
+        if need - have > self.free_blocks:
+            return False
+        for i in range(have, need):
+            self.block_table[slot, i] = self._free.pop()
+        self.lengths[slot] += n
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return a sequence's pages to the free list."""
+        assert self.active[slot]
+        row = self.block_table[slot]
+        for i in range(self.layout.max_blocks_per_seq):
+            if row[i] != self.layout.sentinel:
+                self._free.append(int(row[i]))
+        row[:] = self.layout.sentinel
+        self.lengths[slot] = 0
+        self.active[slot] = False
+
+    # -- device snapshots ---------------------------------------------------
+
+    def device_tables(self) -> Tuple[jax.Array, jax.Array]:
+        """(block_table (max_seqs, nb), lengths (max_seqs,)) as int32 device
+        arrays — inactive slots carry sentinel rows / zero lengths."""
+        return (
+            jnp.asarray(self.block_table),
+            jnp.asarray(self.lengths),
+        )
+
+    def check_invariants(self) -> None:
+        """Every page is either free or owned by exactly one (slot, block);
+        live block counts match lengths."""
+        owned: List[int] = []
+        for s in range(self.layout.max_seqs):
+            row = self.block_table[s]
+            live = [int(p) for p in row if p != self.layout.sentinel]
+            if not self.active[s]:
+                assert not live and self.lengths[s] == 0, (s, live)
+                continue
+            assert len(live) == self.layout.blocks_for(
+                int(self.lengths[s])
+            ), (s, len(live), int(self.lengths[s]))
+            owned += live
+        assert len(set(owned)) == len(owned), "page owned twice"
+        assert not (set(owned) & set(self._free)), "live page on free list"
+        assert len(owned) + len(self._free) == self.layout.num_blocks

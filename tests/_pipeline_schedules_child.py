@@ -184,6 +184,27 @@ def main():
                 list(occ_il.max(axis=1))
                 == S.peak_activations_interleaved(PP_i, M_i, V_i)
             )
+            # Forward-only loss eval under the interleaved plan runs the
+            # vstage F-projection (smaller fill bubble); it must agree
+            # with the flat-schedule forward bit-for-bit on the loss, and
+            # its projection tables are asserted against the IR trace
+            # inside forward_tick_tables_v.
+            plan_fl = make_plan(mesh_i, arch, pipeline_on_pod=True)
+            l_fl, _ = jax.jit(LanguageModel(arch, plan_fl).loss)(
+                params, batch
+            )
+            RESULTS["vstage_forward_matches_flat"] = bool(
+                abs(float(l_adi) - float(l_fl)) < 1e-6
+            )
+            # Makespan V*M + (PP-1) CHUNK ticks: the idle fraction
+            # (PP-1)/(V*M+PP-1) is strictly below the flat staircase's
+            # (PP-1)/(M+PP-1).
+            ft = S.forward_tick_tables_v(PP_i, M_i, V_i)
+            RESULTS["vstage_forward_fill_bubble_smaller"] = bool(
+                ft.Tf == V_i * M_i + PP_i - 1
+                and (PP_i - 1) / ft.Tf
+                < (PP_i - 1) / (M_i + PP_i - 1)
+            )
 
         # Trainer path: make_train_step routes PP plans through the
         # schedule-executing backward.

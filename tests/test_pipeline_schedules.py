@@ -89,6 +89,14 @@ def test_interleaved_matches_sequential(child_results):
     assert child_results["interleaved_grads_close"]
 
 
+def test_vstage_forward_projection(child_results):
+    """Forward-only loss eval under an interleaved plan runs the vstage
+    F-projection: same loss as the flat forward, with the compacted
+    V*M + PP - 1 chunk-tick makespan (smaller fill bubble)."""
+    assert child_results["vstage_forward_matches_flat"]
+    assert child_results["vstage_forward_fill_bubble_smaller"]
+
+
 def test_pipelined_train_step(child_results):
     assert child_results["train_step_loss_close"]
     assert child_results["train_step_loss_decreases"]

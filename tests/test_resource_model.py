@@ -208,3 +208,120 @@ def test_interleaved_estimate_tradeoffs():
     assert e2.bubble_fraction == pytest.approx(e1.bubble_fraction / 2)
     assert e2.t_p2p == pytest.approx(2 * e1.t_p2p)
     assert e2.mem_stage0 > e1.mem_stage0
+
+
+# ---------------------------------------------------------------------------
+# Serving mode
+# ---------------------------------------------------------------------------
+
+
+def _serve(**kw):
+    base = dict(batch=16, context=2048, prefill_len=1024, EP=4, TP=1, DP=1)
+    base.update(kw)
+    return rm.ServeSetup(**base)
+
+
+def test_kv_bytes_gqa_and_page_rounding():
+    """KV bytes use the GQA head count and round context up to a page."""
+    arch = get_arch("granite-moe-3b-a800m")  # 24 q heads, 8 kv heads
+    m = rm.ModelShape.from_arch(arch)
+    s = _serve(context=17, block_size=16)
+    per_tok = rm.kv_bytes_per_token(m, s)
+    assert per_tok == 2 * m.n_attn * arch.num_kv_heads * arch.head_dim * 2
+    assert per_tok < 2 * m.n_attn * arch.num_heads * arch.head_dim * 2
+    # 17 tokens -> 2 pages of 16
+    assert rm.kv_bytes_per_seq(m, s) == 32 * per_tok
+
+
+def test_decode_capacity_padding_tax_dominates_small_batch():
+    """At decode batch sizes the capacity path issues >= one slot per
+    expert: its padding factor explodes as batch -> 1 while ragged's stays
+    bounded by the adaptive row tile."""
+    m = rm.ModelShape.from_arch(get_arch("granite-moe-3b-a800m"))
+    cap1 = rm.serving_dispatch_costs(m, _serve(batch=1, dispatch="capacity"))
+    cap256 = rm.serving_dispatch_costs(
+        m, _serve(batch=256, dispatch="capacity")
+    )
+    assert cap1.flops_factor > cap256.flops_factor >= 1.0
+    rag = rm.serving_dispatch_costs(m, _serve(batch=1, dispatch="ragged"))
+    assert rag.drop_rate == 0.0
+    # capacity under skew drops at decode exactly as in training
+    skew = rm.serving_dispatch_costs(
+        m, _serve(batch=64, dispatch="capacity", imbalance=2.0)
+    )
+    assert skew.drop_rate > 0.0
+
+
+def test_serve_estimate_monotonicity():
+    """Structural sanity: latency grows with batch and context; per-chip
+    goodput at fixed world size grows with batch until memory binds."""
+    m = rm.ModelShape.from_arch(get_arch("granite-moe-3b-a800m"))
+    e1 = rm.serve_estimate(m, _serve(batch=1), TPU_V5E)
+    e16 = rm.serve_estimate(m, _serve(batch=16), TPU_V5E)
+    e256 = rm.serve_estimate(m, _serve(batch=256), TPU_V5E)
+    assert e1.t_decode < e16.t_decode < e256.t_decode
+    assert e1.tokens_per_s_per_chip < e16.tokens_per_s_per_chip
+    ctx_long = rm.serve_estimate(m, _serve(context=32768), TPU_V5E)
+    assert ctx_long.t_decode > e16.t_decode
+    assert ctx_long.mem_per_chip > e16.mem_per_chip
+    # ragged streams fewer expert weights than capacity at tiny batch
+    ec = rm.serve_estimate(m, _serve(batch=1, dispatch="capacity"), TPU_V5E)
+    er = rm.serve_estimate(m, _serve(batch=1, dispatch="ragged"), TPU_V5E)
+    assert er.t_weights < ec.t_weights
+
+
+def test_serving_planner_slo_is_a_feasibility_constraint():
+    """Tightening the decode SLO must only REMOVE strategies, and every
+    survivor must estimate under it; with no SLO the goodput winner is at
+    least as fast as any SLO-constrained winner."""
+    arch = get_arch("granite-moe-3b-a800m")
+    kw = dict(context=2048, prefill_len=1024)
+    free = planner.valid_serving_strategies(arch, TPU_V5E, 16, **kw)
+    tight = planner.valid_serving_strategies(
+        arch, TPU_V5E, 16, slo_ms=5.0, **kw
+    )
+    assert free and tight
+    assert len(tight) < len(free)
+    assert all(s.estimate.t_decode * 1e3 <= 5.0 for s in tight)
+    ids = {(s.EP, s.TP, s.DP, s.batch, s.dispatch) for s in free}
+    assert all(
+        (s.EP, s.TP, s.DP, s.batch, s.dispatch) in ids for s in tight
+    )
+    best_free = planner.rank_serving_strategies(free)[0]
+    best_tight = planner.rank_serving_strategies(tight)[0]
+    assert (
+        best_free.estimate.tokens_per_s_per_chip
+        >= best_tight.estimate.tokens_per_s_per_chip
+    )
+    # constraints: replicas tile the fleet, EP | E, fast-domain bound
+    for s in free:
+        assert s.world == 16
+        assert (arch.moe.num_experts % s.EP) == 0
+        assert s.EP <= TPU_V5E.fast_domain
+
+
+def test_serving_planner_tight_slo_prefers_sharding():
+    """Under a tight latency SLO the winner shards the replica (EP*TP >
+    1) instead of maximizing replica count — streamed weight bytes per
+    chip bind the floor."""
+    arch = get_arch("granite-moe-3b-a800m")
+    best = planner.best_serving_strategy(
+        arch, TPU_V5E, 16, context=2048, prefill_len=1024, slo_ms=2.0
+    )
+    assert best is not None
+    assert best.EP * best.TP > 1
+    assert best.batch <= 4
+
+
+def test_counts_exchange_priced():
+    """The ragged EP train path prices its counts-exchange side channel;
+    capacity (static slots) and EP=1 (no wire) price zero."""
+    m = rm.ModelShape.from_arch(get_arch("granite-moe-3b-a800m"))
+    t_rag = rm.TrainSetup(b=256, s=4096, EP=4, dispatch="ragged")
+    t_cap = rm.TrainSetup(b=256, s=4096, EP=4, dispatch="capacity")
+    t_r1 = rm.TrainSetup(b=256, s=4096, EP=1, dispatch="ragged")
+    assert rm.dispatch_costs(m, t_rag).counts_bytes_per_layer == (
+        4.0 * 4 * (m.E / 4) * 4.0
+    )
+    assert rm.dispatch_costs(m, t_cap).counts_bytes_per_layer == 0.0
+    assert rm.dispatch_costs(m, t_r1).counts_bytes_per_layer == 0.0

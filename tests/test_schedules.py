@@ -314,6 +314,52 @@ def test_forward_projection_staircase():
         assert list(mb[s, ticks]) == list(range(8))
 
 
+@pytest.mark.parametrize(
+    "PP,M,V", [(2, 2, 2), (2, 4, 2), (3, 6, 2), (4, 8, 2), (4, 8, 4)]
+)
+def test_vstage_forward_projection(PP, M, V):
+    """The vstage F-projection: compacted makespan V*M + PP - 1, every
+    (stage, vs, mb) exactly once, chunk-ring ordering respected, out_ticks
+    are the last chunk's F ticks.  (The builder itself asserts the
+    projected per-stage F order against the full IR trace.)"""
+    ft = S.forward_tick_tables_v(PP, M, V)
+    assert ft.Tf == V * M + PP - 1
+    # smaller fill fraction than the flat staircase
+    assert (PP - 1) / ft.Tf < (PP - 1) / (M + PP - 1)
+    seen = set()
+    f_tick = {}
+    for s in range(PP):
+        for t in range(ft.Tf):
+            if ft.valid[s, t]:
+                key = (s, int(ft.vs[s, t]), int(ft.mb[s, t]))
+                assert key not in seen
+                seen.add(key)
+                f_tick[key] = t
+    assert seen == {
+        (s, v, m) for s in range(PP) for v in range(V) for m in range(M)
+    }
+    for (s, v, m), t in f_tick.items():
+        prv = S.prev_chunk(s, v, PP, V)
+        if prv is not None:
+            assert t > f_tick[prv + (m,)]
+        # arrivals: parked slot equals the consuming op's slot
+        sl = int(ft.slot[s, t])
+        assert 0 <= sl < ft.num_slots
+    assert ft.out_ticks == tuple(
+        f_tick[(PP - 1, V - 1, m)] for m in range(M)
+    )
+
+
+def test_vstage_forward_projection_v1_is_staircase():
+    """V=1 reduces bit-for-bit to the flat forward tables."""
+    for PP, M in ((2, 4), (4, 8)):
+        ft = S.forward_tick_tables_v(PP, M, 1)
+        valid, mb, T = S.forward_tick_tables(PP, M)
+        assert ft.Tf == T and ft.num_slots == 1
+        assert (ft.valid == valid).all() and (ft.mb == mb).all()
+        assert (ft.vs == 0).all()
+
+
 def test_occupancy_trace_matches_sim_peaks():
     for name in SCHEDULES:
         V = 2 if name == "interleaved_1f1b" else 1
