@@ -290,8 +290,10 @@ def fig14_trillion_scaling() -> List[Row]:
 
 
 def schedules(only: str = None) -> List[Row]:
-    """GPipe vs 1F1B (Eq 3-5): peak activations + bubble, simulated over the
-    same schedule IR (``core.schedules``) the SPMD executor interprets."""
+    """GPipe vs 1F1B vs interleaved vs zero-bubble ZB-H1 (Eq 3-5): peak
+    activations + bubble, simulated over the same schedule IR
+    (``core.schedules``) the SPMD executor interprets (split backwards
+    replay at t_bwd/2 per phase — equal total work per row)."""
     from repro.core import schedule_sim as ss
     from repro.core import schedules as sched_lib
     from repro.configs.base import SCHEDULES

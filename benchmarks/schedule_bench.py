@@ -1,12 +1,16 @@
-"""Pipeline-schedule benchmark: bubble fraction, peak residual slots and
-p2p hand-offs vs (PP, M, V) — the trade interleaved virtual stages buy
-(paper §III Eq 3–5 and the Megatron interleaved-1F1B literature).
+"""Pipeline-schedule benchmark: bubble fraction, peak residual slots,
+W-stash depth/bytes and p2p hand-offs vs (PP, M, V) — the trades
+interleaved virtual stages and the zero-bubble Bi/Bw split buy (paper §III
+Eq 3–5, the Megatron interleaved-1F1B literature, and ZB-H1, Qi et al.).
 
 Every row comes from the real schedule IR (``core.schedules.build``) and
 its discrete-event replay (``core.schedule_sim.simulate`` with per-chunk
-durations t/V), NOT from the closed forms — the closed forms are asserted
-against the IR in tests/test_schedule_invariants.py, and this bench records
-what the executor would actually run.
+durations t/V; split backwards at t_bwd/2 per phase), NOT from the closed
+forms — the closed forms are asserted against the IR in
+tests/test_schedule_invariants.py, and this bench records what the
+executor would actually run.  W-stash bytes are priced by the resource
+model for the reference shape in ``meta.wstash_ref`` (the IR itself only
+knows slot counts).
 
 Emits ``BENCH_schedules.json``:
 
@@ -31,6 +35,24 @@ GRID = [(2, 4), (2, 8), (4, 8), (4, 16), (8, 16), (8, 32)]
 GRID_SMOKE = [(2, 4), (4, 8)]
 VSTAGES = (1, 2, 4)
 T_FWD, T_BWD = 1.0, 2.0  # full-stage durations (bwd ~2x fwd)
+# Reference shape for the W-stash bytes column (resource-model pricing of
+# the per-chip (stage input, output cotangent) pairs a split schedule
+# parks between Bi and Bw).
+WSTASH_REF = {"arch": "granite-moe-3b-a800m", "b": 256, "s": 4096,
+              "EP": 4, "DP_chips": 64}
+
+
+def _wstash_ref_bytes(name: str, PP: int, M: int) -> float:
+    from repro.configs import get_arch
+    from repro.core import resource_model as rm
+
+    m = rm.ModelShape.from_arch(get_arch(WSTASH_REF["arch"]))
+    t = rm.TrainSetup(
+        b=WSTASH_REF["b"], s=WSTASH_REF["s"], PP=PP, EP=WSTASH_REF["EP"],
+        DP=max(WSTASH_REF["DP_chips"] // (PP * WSTASH_REF["EP"]), 1),
+        alpha=max(M // PP, 1), schedule=name,
+    )
+    return rm.wstash_bytes(m, t)
 
 
 def measure(name: str, PP: int, M: int, V: int) -> dict:
@@ -39,7 +61,9 @@ def measure(name: str, PP: int, M: int, V: int) -> dict:
 
     ir = sched_lib.build(name, PP, M, V)
     # Per-chunk durations: a chunk is 1/V of a stage, so makespans are
-    # comparable across V at equal total work.
+    # comparable across V at equal total work; split backwards charge
+    # t_bwd/2 per phase (simulate's default), so zb_h1 rows do the same
+    # total work as 1f1b rows and the makespan gap IS the drain recovered.
     r = ss.simulate(ir, t_fwd=T_FWD / V, t_bwd=T_BWD / V)
     return {
         "schedule": name,
@@ -52,6 +76,8 @@ def measure(name: str, PP: int, M: int, V: int) -> dict:
         "num_slots": ir.num_slots,
         "peak_in_flight": list(ir.peak_in_flight),
         "p2p_events": ir.p2p_events(),
+        "num_wslots": ir.num_wslots,
+        "wstash_bytes_ref": _wstash_ref_bytes(name, PP, M),
     }
 
 
@@ -62,11 +88,12 @@ def run(grid) -> dict:
             "t_bwd": T_BWD,
             "vstages": list(VSTAGES),
             "grid": [list(c) for c in grid],
+            "wstash_ref": dict(WSTASH_REF),
         },
         "sweep": [],
     }
     for PP, M in grid:
-        for name in ("gpipe", "1f1b"):
+        for name in ("gpipe", "1f1b", "zb_h1"):
             out["sweep"].append(measure(name, PP, M, 1))
         for V in VSTAGES:
             if V == 1:
@@ -75,11 +102,18 @@ def run(grid) -> dict:
 
     flat = [s for s in out["sweep"] if s["schedule"] == "1f1b"]
     il = [s for s in out["sweep"] if s["schedule"] == "interleaved_1f1b"]
+    zb = [s for s in out["sweep"] if s["schedule"] == "zb_h1"]
     pair = [
         (f, i)
         for f in flat
         for i in il
         if (f["PP"], f["M"]) == (i["PP"], i["M"])
+    ]
+    zpair = [
+        (f, z)
+        for f in flat
+        for z in zb
+        if (f["PP"], f["M"]) == (z["PP"], z["M"])
     ]
     out["summary"] = {
         "bubble_1f1b_max": max(s["bubble_fraction"] for s in flat),
@@ -91,6 +125,20 @@ def run(grid) -> dict:
         "p2p_grow_max": max(
             i["p2p_events"] / f["p2p_events"] for f, i in pair
         ),
+        # Zero-bubble ZB-H1 vs 1f1b at EQUAL Eq-4 residual slots and EQUAL
+        # p2p: the deferred-Bw drain fill, paid for in W-stash slots only.
+        "bubble_zb_h1_min": min(s["bubble_fraction"] for s in zb),
+        "bubble_shrink_zb_max": max(
+            f["bubble_fraction"] / z["bubble_fraction"] for f, z in zpair
+        ),
+        "zb_equal_slots": all(
+            z["num_slots"] == f["num_slots"]
+            and z["p2p_events"] == f["p2p_events"]
+            and z["bubble_fraction"] < f["bubble_fraction"]
+            for f, z in zpair
+        ),
+        "zb_wstash_slots_max": max(s["num_wslots"] for s in zb),
+        "zb_wstash_bytes_ref_max": max(s["wstash_bytes_ref"] for s in zb),
     }
     return out
 
@@ -135,6 +183,13 @@ def main() -> None:
           f"(max shrink {s['bubble_shrink_max']:.2f}x) at up to "
           f"{s['slot_grow_max']:.2f}x residual slots and "
           f"{s['p2p_grow_max']:.2f}x p2p hand-offs")
+    print(f"zb_h1:  bubble min {s['bubble_zb_h1_min']:.3f} "
+          f"(max shrink {s['bubble_shrink_zb_max']:.2f}x vs 1f1b) at EQUAL "
+          f"residual slots + p2p "
+          f"(equal-slot win on every cell: {s['zb_equal_slots']}), "
+          f"W-stash <= {s['zb_wstash_slots_max']} slots "
+          f"({s['zb_wstash_bytes_ref_max']/1e6:.0f} MB on the reference "
+          f"shape)")
 
 
 if __name__ == "__main__":

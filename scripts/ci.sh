@@ -30,4 +30,19 @@ python benchmarks/moe_gemm_bench.py --smoke --check-schema BENCH_moe_gemm.json
 python benchmarks/schedule_bench.py --smoke --check-schema BENCH_schedules.json
 python benchmarks/serving_bench.py --smoke --check-schema BENCH_serving.json
 
+# Zero-bubble acceptance gate on the committed schedule bench: zb_h1 rows
+# exist, beat 1f1b's bubble at EQUAL Eq-4 residual-slot count on every
+# (PP, M) cell, and report their W-stash separately.
+python - <<'PY'
+import json
+rec = json.load(open("BENCH_schedules.json"))
+zb = [s for s in rec["sweep"] if s["schedule"] == "zb_h1"]
+assert zb, "BENCH_schedules.json has no zb_h1 rows -- regenerate it"
+assert rec["summary"]["zb_equal_slots"] is True, (
+    "zb_h1 must beat 1f1b at equal residual slots on every cell")
+assert all(s["num_wslots"] > 0 and s["wstash_bytes_ref"] > 0 for s in zb), (
+    "zb_h1 rows must report their W-stash (slots + bytes)")
+print(f"zb gate ok: {len(zb)} zb_h1 cells, equal-slot bubble win on all")
+PY
+
 exec python -m pytest -x -q "$@"

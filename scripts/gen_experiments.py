@@ -104,10 +104,12 @@ def main():
     frame = (ROOT / "docs" / "experiments_frame.md").read_text()
     perf = (ROOT / "docs" / "experiments_perf.md").read_text()
     serving = (ROOT / "docs" / "experiments_serving.md").read_text()
+    schedules = (ROOT / "docs" / "experiments_schedules.md").read_text()
     out = frame.format(
         dryrun=dryrun_section(records),
         roofline=roofline_section(records),
         serving=serving,
+        schedules=schedules,
         perf=perf,
     )
     (ROOT / "EXPERIMENTS.md").write_text(out)

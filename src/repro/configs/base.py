@@ -20,8 +20,12 @@ from typing import Optional, Sequence, Tuple
 # bind the winner, and the executor (``repro.core.pipeline``) interprets
 # the matching ``repro.core.schedules`` IR.  Kept here — next to the other
 # single-source-of-truth config vocabulary — so configs, planner and
-# executor can never disagree on the legal names.
-SCHEDULES: Tuple[str, ...] = ("gpipe", "1f1b", "interleaved_1f1b")
+# executor can never disagree on the legal names.  ``zb_h1`` is the
+# zero-bubble ZB-H1 schedule: backward split into activation-grad (Bi) and
+# deferred weight-grad (Bw) ops at 1F1B-equal residual memory, the drain
+# bubble filled by the deferred Bw's (plus a small W-stash priced
+# separately by the resource model).
+SCHEDULES: Tuple[str, ...] = ("gpipe", "1f1b", "interleaved_1f1b", "zb_h1")
 DEFAULT_SCHEDULE = "1f1b"
 
 # Expert dispatch modes the system understands end-to-end: the MoE layer

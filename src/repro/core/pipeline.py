@@ -22,7 +22,8 @@ Two executors interpret the schedule IR of ``core.schedules``:
   as the ``schedule="gpipe"`` AD oracle in tests.
 
 * :func:`pipelined_step` — the schedule-*executing* train step: it
-  interprets the full per-tick op table (``F``/``B``/idle, each op tagged
+  interprets the full per-tick op table (``F``/``B``/``Bi``/``Bw``/idle,
+  each op tagged
   with its virtual stage) of any built schedule, so 1F1B actually runs with
   its Eq-4 memory profile instead of relying on AD ordering, and
   interleaved 1F1B runs its PP*V chunk ring (per-vstage parameter chunks
@@ -40,14 +41,29 @@ Two executors interpret the schedule IR of ``core.schedules``:
   occupancy trace so tests can check the *executed* peak in-flight count
   against ``schedule_sim`` on the same IR.
 
+  Zero-bubble schedules split the backward into a TWO-PHASE protocol
+  (``zb_h1``): a ``Bi`` tick runs the same recompute-and-pullback as a
+  fused B and ppermutes the input cotangent upstream, but DEFERS the
+  weight grads — it parks the pullback's inputs (the stage input and the
+  stage-output cotangent) in a second scan-carried **W-stash** buffer with
+  ``Schedule.num_wslots`` slots and frees its residual slot immediately
+  (1F1B-equal Eq-4 residency).  A later ``Bw`` tick drains one stash
+  entry: it re-runs the stage pullback from the stashed pair,
+  differentiating w.r.t. the parameters only, and accumulates the weight
+  grads — numerically the same pullback a fused B would have applied, in
+  the same ascending-microbatch order, so grads stay exact vs the AD
+  oracle.  The executed W-stash occupancy is emitted next to the residual
+  trace (``metrics["pipeline_wstash_occupancy"]``).
+
 SPMD cost note: every stage executes the same program each tick and masks
 the op it was not assigned, so a tick costs one fwd + one bwd regardless of
 schedule — plus one loss-head forward+vjp (full-vocab logits), which only
-the last stage's B ticks consume; bubbles materialize as masked compute,
-identical in cost to idle bubbles and visible to the roofline analysis.
-Fusing the unassigned op (and restricting the head to the last stage) via
-``lax.cond`` is a ROADMAP follow-up, pending stable pp-manual branch
-predicates under GSPMD at scale.
+the last stage's B/Bi ticks consume, plus (split schedules only) one
+weight-grad recompute serving the tick's potential Bw; bubbles materialize
+as masked compute, identical in cost to idle bubbles and visible to the
+roofline analysis.  Fusing the unassigned op (and restricting the head to
+the last stage) via ``lax.cond`` is a ROADMAP follow-up, pending stable
+pp-manual branch predicates under GSPMD at scale.
 """
 
 from __future__ import annotations
@@ -62,7 +78,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import compat
 from repro.configs.base import ArchConfig
 from repro.core import schedules as sched_lib
-from repro.core.schedules import OP_B, OP_F
+from repro.core.schedules import OP_B, OP_BI, OP_BW, OP_F
 from repro.models import transformer
 from repro.sharding import MeshPlan
 
@@ -583,7 +599,10 @@ def pipelined_step(
     ``{"blocks": <same structure as block_params>, "embed": ...,
     "head": <same structure as head_params>}`` and ``occupancy`` is the
     executed (PP, num_ticks) in-flight residual count — comparable 1:1 with
-    ``Schedule.occupancy_trace()``.
+    ``Schedule.occupancy_trace()``.  For split-backward schedules
+    (``zb_h1``) ``metrics["pipeline_wstash_occupancy"]`` carries the
+    executed deferred-weight-grad residency, comparable 1:1 with
+    ``Schedule.wstash_trace()``.
     """
     pp_axis = plan.pp_axis
     assert pp_axis is not None
@@ -609,6 +628,11 @@ def pipelined_step(
     tt = sched_lib.tick_tables(sched)
     T = sched.num_ticks
     K = sched.num_slots
+    # Split-backward (zero-bubble) schedules defer weight grads through a
+    # W-stash of num_wslots (stage input, output cotangent) pairs; fused
+    # schedules allocate none and skip the whole Bw phase at trace time.
+    Kw = sched.num_wslots
+    has_split = Kw > 0
     ring = V > 1  # chunk hand-offs wrap around the stage ring
 
     staged, rpc = _stage_block_params(block_params, arch, plan, vstages=V)
@@ -640,6 +664,7 @@ def pipelined_step(
         slot_t = jnp.asarray(tt.slot)
         afwd_t = jnp.asarray(tt.arrive_fwd)
         abwd_t = jnp.asarray(tt.arrive_bwd)
+        wslot_t = jnp.asarray(tt.wslot)
 
         act_spec = P(tuple(plan.dp_axes), tuple(plan.sp_axes), None)
 
@@ -701,8 +726,8 @@ def pipelined_step(
         )
 
         def tick(carry, t):
-            (in_buf, cot_buf, recv_h, recv_g, gacc, gemb, ghead,
-             ce, aux, z, loads, live) = carry
+            (in_buf, cot_buf, wstash, recv_h, recv_g, gacc, gemb, ghead,
+             ce, aux, z, loads, live, live_w) = carry
 
             # -- 1. park wire arrivals in their residual slots -------------
             a_f = afwd_t[stage, t]
@@ -716,22 +741,26 @@ def pipelined_step(
                 cot_buf, jnp.where(a_b >= 0, recv_g, curc), a_b, 0
             )
 
-            # -- 2. the tick's op (one of F / B / idle, from the IR) -------
+            # -- 2. the tick's op (F / B / Bi / Bw / idle, from the IR) ----
             kind = kind_t[stage, t]
             mb = mb_t[stage, t]
             vs = vs_t[stage, t]
             slot = slot_t[stage, t]
             is_f = kind == OP_F
-            is_b = kind == OP_B
+            # Cotangent producers: the fused B or the split Bi — both run
+            # the recompute-and-pullback and ppermute the input grad.
+            is_cot = jnp.logical_or(kind == OP_B, kind == OP_BI)
+            is_fused_b = kind == OP_B
             # The op's chunk: only chunk (PP-1, V-1) owns the loss head.
             last_chunk = jnp.logical_and(is_last, vs == V - 1)
             x0 = lax.dynamic_index_in_dim(xm_local, mb, 0, keepdims=False)
             lbl = lax.dynamic_index_in_dim(labels_local, mb, 0, keepdims=False)
             h_in = lax.dynamic_index_in_dim(in_buf, slot, 0, keepdims=False)
 
-            # One vjp serves both op kinds: its primal output is the F
-            # result; its pullback is the B recompute-and-backprop.  The
-            # vstage index is closed over (not differentiated).
+            # One vjp serves F and the cotangent backward: its primal
+            # output is the F result; its pullback is the B/Bi
+            # recompute-and-backprop.  The vstage index is closed over (not
+            # differentiated).
             (y, aux_d, z_d), vjp_fn, loads_d = jax.vjp(
                 lambda sp_, e_, x_, h_: full_stage(sp_, e_, x_, h_, vs),
                 sp_floats, emb_p, x0, h_in, has_aux=True,
@@ -758,11 +787,15 @@ def pipelined_step(
                 lax.dynamic_index_in_dim(cot_buf, slot, 0, keepdims=False),
             )
 
-            # -- 5. backward op --------------------------------------------
+            # -- 5a. cotangent backward (fused B or split Bi) --------------
             inv_m = jnp.float32(1.0 / M)
             g_sp, g_emb_s, _g_x0, g_h = vjp_fn((y_cot, inv_m, inv_m))
-            bmask = is_b.astype(jnp.float32)
-            lmask = bmask * last_chunk.astype(jnp.float32)
+            cmask = is_cot.astype(jnp.float32)
+            # Weight grads land NOW only for the fused B; a Bi defers them
+            # to its Bw.  Head (+ head-side embedding) grads and the loss
+            # belong to the cotangent tick — the head pullback seeds y_cot.
+            bmask = is_fused_b.astype(jnp.float32)
+            lmask = cmask * last_chunk.astype(jnp.float32)
             gacc = [
                 a + g.astype(jnp.float32) * bmask for a, g in zip(gacc, g_sp)
             ]
@@ -777,25 +810,75 @@ def pipelined_step(
             )
             ce = ce + ce_mb * lmask
 
+            # -- 5b. two-phase backward: W-stash park / drain (split only) -
+            if has_split:
+                is_bi = kind == OP_BI
+                is_bw = kind == OP_BW
+                wslot = wslot_t[stage, t]
+                wh_buf, wc_buf = wstash
+                # Bw reads the PRE-update stash (its entry was parked by an
+                # earlier Bi; a tick is one op, so no same-tick store).
+                w_h = lax.dynamic_index_in_dim(wh_buf, wslot, 0, keepdims=False)
+                w_c = lax.dynamic_index_in_dim(wc_buf, wslot, 0, keepdims=False)
+                # The weight pullback: re-run the stage from the stashed
+                # input, differentiate w.r.t. the parameters only, and
+                # apply the stashed output cotangent — numerically the
+                # exact weight-grad half of the fused pullback.
+                _, wvjp_fn, _ = jax.vjp(
+                    lambda sp_, e_: full_stage(sp_, e_, x0, w_h, vs),
+                    sp_floats, emb_p, has_aux=True,
+                )
+                g_sp_w, g_emb_w = wvjp_fn((w_c, inv_m, inv_m))
+                wmask = is_bw.astype(jnp.float32)
+                gacc = [
+                    a + g.astype(jnp.float32) * wmask
+                    for a, g in zip(gacc, g_sp_w)
+                ]
+                gemb = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) * wmask,
+                    gemb, g_emb_w,
+                )
+                # Bi parks (stage input, output cotangent) for its Bw and
+                # frees the residual slot (Eq-4-equal residency).
+                wh_buf = lax.dynamic_update_index_in_dim(
+                    wh_buf, jnp.where(is_bi, h_in, w_h), wslot, 0
+                )
+                wc_buf = lax.dynamic_update_index_in_dim(
+                    wc_buf, jnp.where(is_bi, y_cot, w_c), wslot, 0
+                )
+                wstash = (wh_buf, wc_buf)
+                live_w = (
+                    live_w + is_bi.astype(jnp.int32) - is_bw.astype(jnp.int32)
+                )
+
             # -- 6. occupancy + wire sends ---------------------------------
-            live = live + is_f.astype(jnp.int32) - is_b.astype(jnp.int32)
+            live = live + is_f.astype(jnp.int32) - is_cot.astype(jnp.int32)
             sent_h = _send_fwd(y, plan, ring=ring)
             sent_g = _send_bwd(g_h.astype(act_dtype), plan, ring=ring)
-            carry = (in_buf, cot_buf, sent_h, sent_g, gacc, gemb, ghead,
-                     ce, aux, z, loads, live)
-            return carry, live
+            carry = (in_buf, cot_buf, wstash, sent_h, sent_g, gacc, gemb,
+                     ghead, ce, aux, z, loads, live, live_w)
+            return carry, (live, live_w)
 
+        wstash0 = (
+            (
+                jnp.zeros((Kw, b_mu, s, d), act_dtype),
+                jnp.zeros((Kw, b_mu, s, d), act_dtype),
+            )
+            if has_split
+            else None
+        )
         carry0 = (
             jnp.zeros((K, b_mu, s, d), act_dtype),
             jnp.zeros((K, b_mu, s, d), act_dtype),
+            wstash0,
             zero_h, zero_h,
             gacc0, gemb0, ghead0,
-            f32z, f32z, f32z, zero_loads, jnp.int32(0),
+            f32z, f32z, f32z, zero_loads, jnp.int32(0), jnp.int32(0),
         )
-        carry, occ = lax.scan(tick, carry0, jnp.arange(T))
-        (_, _, _, _, gacc, gemb, ghead, ce, aux, z, loads, _) = carry
+        carry, (occ, wocc) = lax.scan(tick, carry0, jnp.arange(T))
+        (_, _, _, _, _, gacc, gemb, ghead, ce, aux, z, loads, _, _) = carry
         g_blocks = sp_rebuild(gacc)
-        return g_blocks, gemb, ghead, ce, aux, z, loads, occ
+        return g_blocks, gemb, ghead, ce, aux, z, loads, occ, wocc
 
     in_specs = (
         jax.tree.map(lambda v: P(pp_axis), staged),
@@ -813,10 +896,11 @@ def pipelined_step(
         P(pp_axis),  # z
         P(pp_axis) if has_moe else P(),
         P(pp_axis),  # occupancy (PP, T)
+        P(pp_axis),  # W-stash occupancy (PP, T); zeros for fused schedules
     )
 
     def wrapped(stage_params, emb_p, head_p, xm_in, lbl_in):
-        g_blocks, gemb, ghead, ce, aux, z, loads, occ = stage_program(
+        g_blocks, gemb, ghead, ce, aux, z, loads, occ, wocc = stage_program(
             stage_params, emb_p, head_p, xm_in, lbl_in
         )
         lead = lambda v: v[None]
@@ -828,9 +912,9 @@ def pipelined_step(
         else:
             loads = loads[None]
         return (g_blocks, gemb, ghead, ce[None], aux[None],
-                z[None], loads, occ[None])
+                z[None], loads, occ[None], wocc[None])
 
-    (g_blocks, gemb, ghead, ce, aux, z, loads, occ) = compat.shard_map(
+    (g_blocks, gemb, ghead, ce, aux, z, loads, occ, wocc) = compat.shard_map(
         wrapped,
         mesh=mesh,
         in_specs=in_specs,
@@ -859,6 +943,9 @@ def pipelined_step(
         "moe_aux_loss": aux_mean,
         "moe_z_loss": z_mean,
         "expert_load": loads,
+        # Executed deferred-weight-grad residency, comparable 1:1 with
+        # Schedule.wstash_trace() (all zeros for fused-backward schedules).
+        "pipeline_wstash_occupancy": wocc,
     }
     grads = {"blocks": g_blocks, "embed": gemb, "head": ghead}
     return loss, grads, metrics, occ

@@ -361,15 +361,45 @@ def peak_in_flight(
     """Closed-form per-stage peak residency of each schedule family, in
     units of one microbatch through one CHUNK (a chunk is 1/V of a stage's
     layers).  Delegates to the IR module's closed forms (single source,
-    pinned against the real builders by tests/test_schedule_invariants.py)."""
+    pinned against the real builders by tests/test_schedule_invariants.py).
+    ``zb_h1`` shares 1F1B's Eq-4 profile by construction: Bi frees the
+    residual slot on B's cadence."""
     from repro.core.schedules import peak_activations_interleaved
 
     assert schedule in SCHEDULES, schedule
     if schedule == "gpipe":
         return M
-    # 1f1b == interleaved at V=1 (Eq 4); interleaved: the Eq-4 analogue.
+    # 1f1b == zb_h1 == interleaved at V=1 (Eq 4); interleaved: the Eq-4
+    # analogue.
     V_eff = V if schedule == "interleaved_1f1b" else 1
     return peak_activations_interleaved(PP, M, V_eff)[stage]
+
+
+def peak_wstash(schedule: str, PP: int, M: int) -> int:
+    """Closed-form W-stash depth: deferred weight grads simultaneously
+    pending per stage.  Zero for fused-backward schedules; ``min(PP, M)``
+    for ZB-H1 (the IR module's closed form, pinned against the real
+    builder)."""
+    from repro.core.schedules import peak_wstash_zb_h1
+
+    assert schedule in SCHEDULES, schedule
+    if schedule != "zb_h1":
+        return 0
+    return peak_wstash_zb_h1(PP, M)
+
+
+def wstash_bytes(m: ModelShape, t: TrainSetup) -> float:
+    """Per-chip bytes of the split executor's scan-carried W-stash: each
+    of the ``peak_wstash`` deferred weight grads parks the stage INPUT and
+    the stage-output cotangent (two (b_mu, s, d) activations — what the
+    stage-granular weight pullback recomputes from), regardless of the
+    stage's layer count.  This is the memory ZB-H1 pays for filling the
+    drain — reported separately from the Eq-4 residual term."""
+    depth = peak_wstash(t.schedule, t.PP, t.M)
+    if depth == 0:
+        return 0.0
+    b_mu_tok = t.b / t.DP / t.M
+    return depth * 2.0 * t.bytes_act * (b_mu_tok / t.EP) * t.s * m.d_model
 
 
 def memory_pp_interleaved(m: ModelShape, t: TrainSetup, stage: int = 0) -> float:
@@ -390,14 +420,17 @@ def memory_1f1b_skew(m: ModelShape, t: TrainSetup) -> float:
 
 def memory_pp(m: ModelShape, t: TrainSetup, stage: int = 0) -> float:
     """Schedule-aware per-stage pipeline peak (Eq 3, Eq 4 or the
-    interleaved Eq-4 analogue per ``t.schedule``/``t.vstages``) — what the
-    planner's Eq-11 feasibility check uses."""
+    interleaved Eq-4 analogue per ``t.schedule``/``t.vstages``, plus the
+    W-stash term for split-backward schedules) — what the planner's Eq-11
+    feasibility check uses."""
     assert t.schedule in SCHEDULES, t.schedule
     if t.schedule == "gpipe":
         return memory_pp_gpipe(m, t)  # all M in flight on every stage
     if t.schedule == "interleaved_1f1b" and t.vstages > 1:
         return memory_pp_interleaved(m, t, stage)
-    return memory_pp_1f1b(m, t, stage)
+    # zb_h1 is Eq-4-equal on the residual slots (Bi frees them on B's
+    # cadence); the deferred weight grads add the W-stash on top.
+    return memory_pp_1f1b(m, t, stage) + wstash_bytes(m, t)
 
 
 def schedule_bubble_fraction(
@@ -406,10 +439,19 @@ def schedule_bubble_fraction(
     """Eq-3-style idle fraction of the schedule at equal fwd/bwd op cost:
     (PP-1)/(M+PP-1) for the flush schedules, (PP-1)/(V·M+PP-1) interleaved
     — exactly the unit-op tick fraction of the IR (pinned by the
-    simulator/model cross-check test)."""
+    simulator/model cross-check test).
+
+    ``zb_h1`` counts THREE unit ops per microbatch (F, Bi, Bw — the
+    backward split in half), and the deferred Bw's fill all drain idles:
+    per-stage idle drops to PP-1 unit ops in a 3M + PP - 1 tick table, the
+    paper-style ``(PP-1)(t_F + t_B - 2 t_Bw)`` ZB-H1 bubble at
+    ``t_Bi = t_Bw = t_B / 2`` — strictly below 1F1B's at every PP > 1
+    (valid for M >= PP, which ``M = alpha * PP`` guarantees)."""
     assert schedule in SCHEDULES, schedule
     if PP <= 1:
         return 0.0
+    if schedule == "zb_h1":
+        return (PP - 1) / (3 * M + PP - 1)
     units = V * M if schedule == "interleaved_1f1b" else M
     return (PP - 1) / (units + PP - 1)
 
@@ -524,6 +566,11 @@ class Estimate:
     t_dispatch: float = 0.0
     drop_rate: float = 0.0
     moe_flops_factor: float = 1.0
+    # Split-backward accounting: per-chip bytes of the deferred weight-grad
+    # stash (zb_h1; 0 for fused schedules).  Already included in
+    # mem_stage0 — reported separately so the Eq-4-equal residual claim
+    # stays auditable.
+    wstash_bytes: float = 0.0
 
 
 def estimate(
@@ -611,6 +658,7 @@ def estimate(
         t_dispatch=t_disp,
         drop_rate=disp.drop_rate,
         moe_flops_factor=disp.flops_factor,
+        wstash_bytes=wstash_bytes(m, t) if t.PP > 1 else 0.0,
     )
 
 

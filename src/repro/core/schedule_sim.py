@@ -1,5 +1,5 @@
 """Discrete-event simulator over the schedule IR (GPipe / 1F1B /
-interleaved 1F1B).
+interleaved 1F1B / zero-bubble ZB-H1).
 
 Validates the paper's pipeline analysis (Eq 3–5): peak in-flight microbatch
 (chunk) activations per stage, bubble fraction, and step makespan.  Used by
@@ -14,9 +14,12 @@ durations: ``t_fwd`` / ``t_bwd`` are PER OP, i.e. per virtual-stage chunk
 1/V of a stage's layers, so callers model equal total work by passing
 ``t_fwd / V`` — the named entry points below do this — which is exactly how
 interleaving shrinks the fill/drain bubble from ``(PP-1)/(M+PP-1)`` to
-``(PP-1)/(V*M+PP-1)``.  Stage-to-stage hand-off is immediate (P2P cost is
-modeled separately in the resource model).  It is schedule-accurate, not
-time-accurate.
+``(PP-1)/(V*M+PP-1)``.  Split-backward schedules charge Bw ops ``t_bw``
+(default ``t_bwd / 2``) and Bi ops the remaining ``t_bwd - t_bw``, so a
+ZB-H1 replay does the same total work as 1F1B and the makespan difference
+IS the recovered drain bubble (``(PP-1)(t_F + t_B - 2 t_Bw)`` per stage).
+Stage-to-stage hand-off is immediate (P2P cost is modeled separately in
+the resource model).  It is schedule-accurate, not time-accurate.
 """
 
 from __future__ import annotations
@@ -37,7 +40,7 @@ class Op:
     stage: int
     mb: int
     vs: int  # virtual stage (model chunk) on the stage
-    kind: str  # "F" | "B"
+    kind: str  # "F" | "B" | "Bi" | "Bw"
     start: float
     end: float
 
@@ -49,36 +52,51 @@ class ScheduleResult:
     makespan: float
     bubble_fraction: float  # idle time / (stages * makespan)
     peak_in_flight: List[int]  # per stage: max live fwd chunk activations
+    peak_wstash: List[int] = None  # per stage: max deferred weight grads
 
 
 def simulate(
-    sched: Schedule, t_fwd: float = 1.0, t_bwd: float = 2.0
+    sched: Schedule,
+    t_fwd: float = 1.0,
+    t_bwd: float = 2.0,
+    t_bw: float = None,
 ) -> ScheduleResult:
     """Replay the IR's per-stage op order with real per-chunk fwd/bwd
     durations — through the same ``schedules.list_schedule`` dependency
-    resolver that built the IR, so the two cannot drift."""
+    resolver that built the IR, so the two cannot drift.  ``t_bwd`` is the
+    FULL backward; split schedules charge Bw ops ``t_bw`` (default
+    ``t_bwd / 2``) and Bi ops the rest."""
     PP = sched.PP
     placed = sched_lib.list_schedule(
         [sched.stage_order(s) for s in range(PP)],
         t_fwd=t_fwd,
         t_bwd=t_bwd,
         V=sched.V,
+        t_bw=t_bw,
     )
     ops = [Op(s, mb, vs, kind, start, end)
            for s, (kind, mb, vs), start, end in placed]
-    # Peak in-flight residency: +1 per F, -1 per B, in start order per stage.
+    # Peak residencies in start order per stage: residuals (+1 per F, -1
+    # per cotangent-producing B/Bi) and the split W-stash (+1 Bi, -1 Bw).
     in_flight = [0] * PP
     peak = [0] * PP
+    wstash = [0] * PP
+    wpeak = [0] * PP
     for o in sorted(ops, key=lambda o: o.start):
         if o.kind == "F":
             in_flight[o.stage] += 1
             peak[o.stage] = max(peak[o.stage], in_flight[o.stage])
-        else:
+        elif o.kind in sched_lib.COT_KINDS:
             in_flight[o.stage] -= 1
+            if o.kind == "Bi":
+                wstash[o.stage] += 1
+                wpeak[o.stage] = max(wpeak[o.stage], wstash[o.stage])
+        else:  # Bw
+            wstash[o.stage] -= 1
     makespan = max(o.end for o in ops)
     busy = sum(o.end - o.start for o in ops)
     bubble = 1.0 - busy / (PP * makespan)
-    return ScheduleResult(sched, ops, makespan, bubble, peak)
+    return ScheduleResult(sched, ops, makespan, bubble, peak, wpeak)
 
 
 def gpipe(PP: int, M: int, t_fwd: float = 1.0, t_bwd: float = 2.0) -> ScheduleResult:
@@ -105,8 +123,21 @@ def interleaved_1f1b(
     )
 
 
+def zb_h1(
+    PP: int, M: int, t_fwd: float = 1.0, t_bwd: float = 2.0,
+    t_bw: float = None,
+) -> ScheduleResult:
+    """Zero-bubble ZB-H1: 1F1B with the backward split into Bi + Bw.
+    ``t_bwd`` is the FULL backward (Bi gets ``t_bwd - t_bw``, Bw gets
+    ``t_bw``, default an even split), so makespans are directly comparable
+    with :func:`one_f_one_b` at equal total work — the difference is the
+    drain bubble the deferred weight grads fill."""
+    return simulate(sched_lib.build("zb_h1", PP, M), t_fwd, t_bwd, t_bw)
+
+
 BY_NAME = {
     "gpipe": gpipe,
     "1f1b": one_f_one_b,
     "interleaved_1f1b": interleaved_1f1b,
+    "zb_h1": zb_h1,
 }

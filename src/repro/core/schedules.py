@@ -5,10 +5,22 @@ A :class:`Schedule` is a per-stage, per-tick op table: at global clock tick
 
 * ``("F", mb, vs)`` — forward of microbatch ``mb`` through the stage's
   virtual stage (model chunk) ``vs``;
-* ``("B", mb, vs)`` — backward of microbatch ``mb`` through chunk ``vs``
-  (consumes the residual saved by the matching F and the cotangent handed
-  back by the next chunk);
+* ``("B", mb, vs)`` — fused backward of microbatch ``mb`` through chunk
+  ``vs`` (consumes the residual saved by the matching F and the cotangent
+  handed back by the next chunk, emitting input AND weight grads);
+* ``("Bi", mb, vs)`` — activation-grad backward only: consumes the residual
+  + cotangent like B and hands the input cotangent upstream, but DEFERS the
+  weight grads — it stashes what the weight pullback needs (the stage input
+  and the output cotangent) into a W-stash slot;
+* ``("Bw", mb, vs)`` — deferred weight-grad backward: drains the W-stash
+  slot its Bi filled into parameter grads.  No hand-off (weight grads are
+  local), so Bw ops are free to float into bubble ticks;
 * ``None``          — idle (a bubble tick).
+
+``B ≡ Bi + Bw``: a fused-backward schedule and a split-backward schedule of
+the same (F, cotangent-producer) placement compute identical gradients; the
+split buys schedule freedom — zero-bubble schedules (ZB-H1, Qi et al.) fill
+the 1F1B drain bubble with the deferred Bw's.
 
 The IR is the **single source of truth** for pipeline schedules: the
 discrete-event simulator (``core.schedule_sim``) replays it with real
@@ -48,16 +60,36 @@ where prev/next walk the ``c = vs * PP + stage`` chunk order.
 Residual slots: each (stage, vs, mb) is assigned a fixed buffer slot for
 its whole residency — from the tick its input activation *arrives*
 (prev-chunk F tick plus one; own F tick for the first chunk (0, 0)) until
-its B op frees it.  ``Schedule.num_slots`` is the buffer depth the executor
-must allocate; for 1F1B it is ``PP`` independent of M (the paper's Eq 4
-point), for GPipe it is ``M``, and for interleaved 1F1B it grows to
-``~2(PP-1) + (V-1)PP + 1`` on stage 0 — the Eq-4-style depth per stage.
+its B — or, under a split backward, its Bi — op frees it.
+``Schedule.num_slots`` is the buffer depth the executor must allocate; for
+1F1B it is ``PP`` independent of M (the paper's Eq 4 point), for GPipe it
+is ``M``, for interleaved 1F1B it grows to ``~2(PP-1) + (V-1)PP + 1`` on
+stage 0 — the Eq-4-style depth per stage — and for ZB-H1 it EQUALS 1F1B's
+(Bi frees the same slot at the same cadence B would).
+
+W-stash slots (split-backward schedules only): each split (stage, vs, mb)
+additionally gets a fixed W-stash slot for the [Bi, Bw] deferral window —
+the executor parks the stage input + output cotangent there between the
+two backward phases.  ``Schedule.num_wslots`` is that buffer's depth
+(``min(PP, M)`` for ZB-H1 — the price of filling the drain, reported
+separately by the resource model); 0 for fused-backward schedules.
+
+The ``zb_h1`` builder realizes the zero-bubble ZB-H1 decomposition at
+1F1B-equal residual memory: Bi ops keep 1F1B's warmup depth and B-cadence
+(same Eq-4 in-flight peaks, same ``num_slots``), while the M Bw ops float
+into the drain stalls and the tail.  At unit op cost the makespan drops to
+``3M + PP - 1`` ticks (1F1B's F+B work is 2 unit ops, so its table is
+``2(M + PP - 1)`` ticks over the same work-per-op) — per-stage idle shrinks
+from ``2(PP-1)`` ticks to ``PP-1``, the paper-style
+``(PP-1)(t_F + t_B - 2 t_Bw)`` bubble with ``t_Bi = t_Bw = t_B / 2``.
 
 Every built schedule passes :func:`check_invariants` — the universal,
 builder-agnostic validity harness (one op per (stage, tick), hand-off
-ordering across stages *and* vstages, every (mb, vs) F'd and B'd exactly
-once, slot-lifetime disjointness, and ``num_slots`` equal to the peak of
-the residency trace) — so new builders are validated by construction.
+ordering across stages *and* vstages, every (mb, vs) F'd exactly once and
+backward-completed exactly once — fused B, or a Bi-then-Bw pair —
+slot-lifetime disjointness in both buffers, and ``num_slots`` /
+``num_wslots`` equal to the peaks of their residency traces) — so new
+builders are validated by construction.
 """
 
 from __future__ import annotations
@@ -70,10 +102,30 @@ import numpy as np
 
 from repro.configs.base import SCHEDULES
 
-Op = Tuple[str, int, int]  # ("F"|"B", mb, vstage)
+Op = Tuple[str, int, int]  # ("F"|"B"|"Bi"|"Bw", mb, vstage)
 
-# Integer op encoding for the executor's tick tables.
-OP_IDLE, OP_F, OP_B = 0, 1, 2
+# Integer op encoding for the executor's tick tables.  KIND_CODE is the
+# single source of truth for the kind -> code lowering: every consumer maps
+# through it (and raises on an unknown kind) so a new op kind can never be
+# silently mis-encoded.
+OP_IDLE, OP_F, OP_B, OP_BI, OP_BW = 0, 1, 2, 3, 4
+KIND_CODE = {"F": OP_F, "B": OP_B, "Bi": OP_BI, "Bw": OP_BW}
+# Residual-occupancy delta of each op kind (F parks a chunk input; the
+# cotangent-producing backward — fused B or split Bi — frees it; Bw only
+# touches the W-stash).
+OCC_DELTA = {"F": 1, "B": -1, "Bi": -1, "Bw": 0}
+# Cotangent producers: the ops that consume the residual and ppermute the
+# input gradient upstream (the "B" role in the hand-off ordering rules).
+COT_KINDS = ("B", "Bi")
+
+
+def _kind_code(kind: str) -> int:
+    try:
+        return KIND_CODE[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown op kind {kind!r}; known: {sorted(KIND_CODE)}"
+        ) from None
 
 
 class InvariantViolation(AssertionError):
@@ -164,10 +216,97 @@ def interleaved_1f1b_order(PP: int, M: int, V: int, stage: int) -> List[Op]:
     return seq
 
 
+@lru_cache(maxsize=None)
+def _zb_h1_orders(PP: int, M: int) -> Tuple[Tuple[Op, ...], ...]:
+    """Per-stage op orders of the ZB-H1 zero-bubble schedule (V = 1).
+
+    Built by a global tick-level greedy over all stages at unit op cost —
+    the same clock the executor runs — with three rules per stage per tick,
+    in priority order:
+
+    1. run the next **Bi** (ascending mb) when its own F is done and the
+       downstream cotangent has arrived (1F1B's B rule — Bi keeps B's
+       cadence and critical path, so hand-off ordering and the Eq-4
+       residual profile are unchanged);
+    2. when more than ``PP - 1`` weight grads are pending, run the oldest
+       **Bw** — the deferral ceiling: the stash must bank enough Bw's to
+       fill the drain stalls (the last stage provably needs PP pending at
+       its final Bi) but no more, which caps ``num_wslots`` at
+       ``min(PP, M)`` instead of letting deferred work pile up to M;
+    3. run the next **F** under 1F1B's in-flight cap ``min(PP - s, M)``
+       (Eq-4 memory discipline);
+    4. otherwise fill the stall with the oldest pending **Bw**.
+
+    For ``M >= PP`` the result is tick-optimal: makespan ``3M + PP - 1``
+    (asserted in tests), per-stage idle ``PP - 1`` unit ops vs 1F1B's
+    ``2(PP - 1)`` — the ``(PP-1)(t_F + t_B - 2 t_Bw)`` ZB-H1 bubble.
+    """
+    f_next = [0] * PP
+    bi_next = [0] * PP
+    bw_next = [0] * PP
+    f_tick: Dict[Tuple[int, int], int] = {}
+    bi_tick: Dict[Tuple[int, int], int] = {}
+    cap = [min(PP - s, M) for s in range(PP)]
+    ceiling = PP - 1  # max deferred weight grads before Bw preempts F
+    orders: List[List[Op]] = [[] for _ in range(PP)]
+    t, done, total = 0, 0, 3 * M * PP
+    while done < total:
+        picks: List[Optional[Op]] = []
+        for s in range(PP):
+            op: Optional[Op] = None
+            m = bi_next[s]
+            if (
+                m < M
+                and f_tick.get((s, m), t) < t
+                and (s == PP - 1 or bi_tick.get((s + 1, m), t) < t)
+            ):
+                op = ("Bi", m, 0)
+            if op is None and bi_next[s] - bw_next[s] > ceiling:
+                op = ("Bw", bw_next[s], 0)
+            if op is None:
+                m = f_next[s]
+                if (
+                    m < M
+                    and f_next[s] - bi_next[s] < cap[s]
+                    and (s == 0 or f_tick.get((s - 1, m), t) < t)
+                ):
+                    op = ("F", m, 0)
+            if op is None and bw_next[s] < bi_next[s]:
+                op = ("Bw", bw_next[s], 0)
+            picks.append(op)
+        for s, op in enumerate(picks):
+            if op is None:
+                continue
+            kind, m, _ = op
+            if kind == "F":
+                f_tick[(s, m)] = t
+                f_next[s] += 1
+            elif kind == "Bi":
+                bi_tick[(s, m)] = t
+                bi_next[s] += 1
+            else:
+                bw_next[s] += 1
+            orders[s].append(op)
+            done += 1
+        t += 1
+        assert t <= 3 * total + 2 * PP + 4, (
+            f"zb_h1 greedy deadlocked at PP={PP}, M={M}"
+        )
+    return tuple(tuple(o) for o in orders)
+
+
+def zb_h1_order(PP: int, M: int, stage: int) -> List[Op]:
+    """ZB-H1 (zero bubble, Qi et al.): 1F1B with the backward split into
+    Bi (activation grad, on 1F1B's B cadence) and Bw (weight grad, deferred
+    into the drain stalls and the tail).  See :func:`_zb_h1_orders`."""
+    return list(_zb_h1_orders(PP, M)[stage])
+
+
 _ORDERS = {
     "gpipe": gpipe_order,
     "1f1b": one_f_one_b_order,
     "interleaved_1f1b": interleaved_1f1b_order,
+    "zb_h1": zb_h1_order,
 }
 assert set(_ORDERS) == set(SCHEDULES), "configs.base.SCHEDULES drifted"
 
@@ -192,7 +331,7 @@ class Schedule:
     M: int
     V: int  # virtual stages (model chunks) per physical stage
     num_ticks: int
-    # ops[stage][tick] -> ("F"|"B", mb, vs) or None (idle)
+    # ops[stage][tick] -> ("F"|"B"|"Bi"|"Bw", mb, vs) or None (idle)
     ops: Tuple[Tuple[Optional[Op], ...], ...]
     # max simultaneously-live (F-done, B-pending) chunk activations per stage
     peak_in_flight: Tuple[int, ...]
@@ -200,6 +339,11 @@ class Schedule:
     # num_slots
     slots: Tuple[Tuple[Tuple[int, ...], ...], ...]  # slots[stage][vs][mb]
     num_slots: int
+    # W-stash geometry (split-backward schedules): fixed slot per split
+    # (stage, vs, mb) covering the [Bi, Bw] deferral window; -1 for fused
+    # entries, depth num_wslots (0 when the whole table is fused).
+    wslots: Tuple[Tuple[Tuple[int, ...], ...], ...] = ()
+    num_wslots: int = 0
 
     # -- views --------------------------------------------------------------
 
@@ -216,23 +360,52 @@ class Schedule:
             if op is not None and op[0] == kind
         }
 
+    def cot_ticks(self) -> Dict[Tuple[int, int, int], int]:
+        """{(stage, vs, mb): tick} of the residual-consuming, cotangent-
+        producing backward — the fused B or the split Bi (the "B" role in
+        hand-off ordering and slot lifetimes)."""
+        out = self.op_ticks("B")
+        out.update(self.op_ticks("Bi"))
+        return out
+
     def occupancy_trace(self) -> np.ndarray:
         """(PP, num_ticks) int32: live (F-done, B-pending) chunk activations
         per stage AFTER each tick — the executor must reproduce this
-        exactly."""
+        exactly.  Kinds map through the explicit OCC_DELTA table (F parks,
+        B/Bi frees, Bw leaves residuals untouched); unknown kinds raise."""
         out = np.zeros((self.PP, self.num_ticks), np.int32)
         for s, row in enumerate(self.ops):
             live = 0
             for t, op in enumerate(row):
                 if op is not None:
-                    live += 1 if op[0] == "F" else -1
+                    if op[0] not in OCC_DELTA:
+                        raise ValueError(
+                            f"unknown op kind {op[0]!r}; known: "
+                            f"{sorted(OCC_DELTA)}"
+                        )
+                    live += OCC_DELTA[op[0]]
+                out[s, t] = live
+        return out
+
+    def wstash_trace(self) -> np.ndarray:
+        """(PP, num_ticks) int32: pending deferred weight grads per stage
+        AFTER each tick (+1 at Bi, -1 at Bw) — the executed W-stash
+        occupancy the split executor must reproduce.  All zeros for fused
+        tables."""
+        out = np.zeros((self.PP, self.num_ticks), np.int32)
+        for s, row in enumerate(self.ops):
+            live = 0
+            for t, op in enumerate(row):
+                if op is not None:
+                    live += 1 if op[0] == "Bi" else -1 if op[0] == "Bw" else 0
                 out[s, t] = live
         return out
 
     def p2p_events(self) -> int:
         """Wire hand-offs the executor performs: one per F with a next
-        chunk plus one per B with a prev chunk (interleaving multiplies
-        these ~V×)."""
+        chunk plus one per cotangent-producing backward (B or Bi) with a
+        prev chunk (interleaving multiplies these ~V×; Bw ops emit weight
+        grads only — no wire)."""
         n = 0
         for s, row in enumerate(self.ops):
             for op in row:
@@ -241,21 +414,36 @@ class Schedule:
                 k, _m, vs = op
                 if k == "F" and next_chunk(s, vs, self.PP, self.V):
                     n += 1
-                if k == "B" and prev_chunk(s, vs, self.PP, self.V):
+                if k in COT_KINDS and prev_chunk(s, vs, self.PP, self.V):
                     n += 1
         return n
 
     def describe(self) -> str:
+        wide = any(
+            op is not None and len(op[0]) > 1
+            for row in self.ops
+            for op in row
+        )
         rows = []
         for s, row in enumerate(self.ops):
             cells = []
             for op in row:
+                if op is not None and op[0] not in KIND_CODE:
+                    raise ValueError(
+                        f"unknown op kind {op[0]!r}; known: "
+                        f"{sorted(KIND_CODE)}"
+                    )
                 if op is None:
-                    cells.append("    .  " if self.V > 1 else "   . ")
+                    pad = " " if wide else ""
+                    cells.append(
+                        f"    .{pad}  " if self.V > 1 else f"   .{pad} "
+                    )
                 elif self.V > 1:
-                    cells.append(f"{op[0]}{op[2]}.{op[1]:<3d} ")
+                    cells.append(f"{op[0]:<{3 if wide else 1}s}"
+                                 f"{op[2]}.{op[1]:<3d} ")
                 else:
-                    cells.append(f"{op[0]}{op[1]:<3d} ")
+                    cells.append(f"{op[0]:<{2 if wide else 1}s}"
+                                 f"{op[1]:<3d} ")
             rows.append(f"stage {s}: " + "".join(cells))
         return "\n".join(rows)
 
@@ -270,6 +458,7 @@ def list_schedule(
     t_fwd: float = 1.0,
     t_bwd: float = 2.0,
     V: int = 1,
+    t_bw: Optional[float] = None,
 ) -> List[Tuple[int, Op, float, float]]:
     """Greedy dependency-resolving list scheduler over per-stage op orders.
 
@@ -277,17 +466,27 @@ def list_schedule(
     with unit durations, so starts become integral ticks — and the
     discrete-event simulator call this):
 
-        F(chunk, mb) waits on F(prev_chunk, mb);  B(chunk, mb) waits on
-        F(chunk, mb) and, below the last chunk, on B(next_chunk, mb);
+        F(chunk, mb) waits on F(prev_chunk, mb);  B/Bi(chunk, mb) waits on
+        F(chunk, mb) and, below the last chunk, on B/Bi(next_chunk, mb)
+        (Bi plays B's role in the cotangent hand-off chain);
+        Bw(chunk, mb) waits only on its own Bi(chunk, mb) — weight grads
+        are local, so Bw floats freely within its stage's sequence;
         each stage is sequential.  Durations are PER OP, i.e. per chunk
         (callers model interleaving by passing per-vstage durations).
+
+    ``t_bwd`` is the FULL backward duration; split schedules charge Bw ops
+    ``t_bw`` (default ``t_bwd / 2``) and Bi ops the remaining
+    ``t_bwd - t_bw``, so fused and split orders are comparable at equal
+    total work.
 
     Returns [(stage, op, start, end)] or raises on a deadlocked order.
     """
     PP = len(stage_orders)
+    t_w = t_bwd / 2.0 if t_bw is None else t_bw
+    dur = {"F": t_fwd, "B": t_bwd, "Bi": t_bwd - t_w, "Bw": t_w}
     pending = {s: list(stage_orders[s]) for s in range(PP)}
     done_f: Dict[Tuple[int, int, int], float] = {}
-    done_b: Dict[Tuple[int, int, int], float] = {}
+    done_b: Dict[Tuple[int, int, int], float] = {}  # B and Bi (cot producers)
     t_stage = [0.0] * PP
     placed: List[Tuple[int, Op, float, float]] = []
 
@@ -297,10 +496,16 @@ def list_schedule(
         for s in range(PP):
             while pending[s]:
                 kind, mb, vs = pending[s][0]
+                if kind not in dur:
+                    raise ValueError(
+                        f"unknown op kind {kind!r}; known: {sorted(dur)}"
+                    )
                 if kind == "F":
                     prv = prev_chunk(s, vs, PP, V)
                     dep = 0.0 if prv is None else done_f.get(prv + (mb,))
-                else:
+                elif kind == "Bw":
+                    dep = done_b.get((s, vs, mb))  # own Bi only
+                else:  # fused B or split Bi: residual + downstream cotangent
                     nxt = next_chunk(s, vs, PP, V)
                     dep = (
                         done_f.get((s, vs, mb))
@@ -311,11 +516,13 @@ def list_schedule(
                         dep = None
                 if dep is None:
                     break
-                dur = t_fwd if kind == "F" else t_bwd
                 start = max(t_stage[s], dep)
-                end = start + dur
+                end = start + dur[kind]
                 t_stage[s] = end
-                (done_f if kind == "F" else done_b)[(s, vs, mb)] = end
+                if kind == "F":
+                    done_f[(s, vs, mb)] = end
+                elif kind in COT_KINDS:
+                    done_b[(s, vs, mb)] = end
                 placed.append((s, (kind, mb, vs), start, end))
                 pending[s].pop(0)
                 progressed = True
@@ -326,9 +533,17 @@ def list_schedule(
 def _place_ops(
     name: str, PP: int, M: int, V: int
 ) -> List[List[Optional[Op]]]:
-    """Unit-time list scheduling of the canonical per-stage orders."""
+    """Unit-time list scheduling of the canonical per-stage orders: every
+    op costs one tick (split orders pass t_bwd=2/t_bw=1 so Bi and Bw are
+    each a unit op; fused orders charge the whole backward one tick)."""
+    orders = _stage_orders(name, PP, M, V)
+    split = any(op[0] == "Bw" for order in orders for op in order)
     placed = list_schedule(
-        _stage_orders(name, PP, M, V), t_fwd=1.0, t_bwd=1.0, V=V
+        orders,
+        t_fwd=1.0,
+        t_bwd=2.0 if split else 1.0,
+        V=V,
+        t_bw=1.0 if split else None,
     )
     T = int(max(end for _, _, _, end in placed))
     table: List[List[Optional[Op]]] = [[None] * T for _ in range(PP)]
@@ -349,7 +564,8 @@ def _residency(
 ) -> List[Tuple[int, int, Tuple[int, int]]]:
     """[(alloc_tick, free_tick, (vs, mb))] residual residencies of a stage:
     a chunk input lives from the tick it ARRIVES (prev-chunk F + 1; own F
-    tick for the raw-input chunk (0, 0)) until its B op frees it."""
+    tick for the raw-input chunk (0, 0)) until its B — or, split, its Bi —
+    op frees it (``b`` is the cotangent-producer tick map)."""
     out = []
     for vs in range(V):
         for mb in range(M):
@@ -366,7 +582,8 @@ def _assign_slots(
 ) -> Tuple[Tuple[Tuple[Tuple[int, ...], ...], ...], int]:
     """Fixed residual slot per (stage, vs, mb): smallest free slot over the
     arrival→backward lifetime (greedy over sorted arrivals — optimal depth
-    for interval graphs, so ``num_slots`` equals the peak residency)."""
+    for interval graphs, so ``num_slots`` equals the peak residency).  The
+    freeing op is the cotangent producer: fused B or split Bi."""
     f = {
         (s, op[2], op[1]): t
         for s, row in enumerate(table)
@@ -377,7 +594,7 @@ def _assign_slots(
         (s, op[2], op[1]): t
         for s, row in enumerate(table)
         for t, op in enumerate(row)
-        if op and op[0] == "B"
+        if op and op[0] in COT_KINDS
     }
     slots: List[Tuple[Tuple[int, ...], ...]] = []
     depth = 0
@@ -396,6 +613,60 @@ def _assign_slots(
         slots.append(tuple(tuple(row) for row in stage_slots))
         depth = max(depth, len(free_at))
     return tuple(slots), depth
+
+
+def _wstash_residency(
+    bi: Dict[Tuple[int, int, int], int],
+    bw: Dict[Tuple[int, int, int], int],
+    stage: int,
+) -> List[Tuple[int, int, Tuple[int, int]]]:
+    """[(bi_tick, bw_tick, (vs, mb))] W-stash residencies of a stage: the
+    deferred weight-grad inputs live from the Bi that stashed them until
+    the Bw that drains them."""
+    return [
+        (t_bi, bw[key], (key[1], key[2]))
+        for key, t_bi in bi.items()
+        if key[0] == stage and key in bw
+    ]
+
+
+def _assign_wslots(
+    table: List[List[Optional[Op]]], PP: int, M: int, V: int
+) -> Tuple[Tuple[Tuple[Tuple[int, ...], ...], ...], int]:
+    """Fixed W-stash slot per split (stage, vs, mb): smallest free slot
+    over the Bi→Bw deferral window (same greedy interval coloring as the
+    residual slots, so ``num_wslots`` equals the peak number of deferred
+    weight grads).  Fused entries get slot -1; a fully-fused table has
+    depth 0."""
+    bi = {
+        (s, op[2], op[1]): t
+        for s, row in enumerate(table)
+        for t, op in enumerate(row)
+        if op and op[0] == "Bi"
+    }
+    bw = {
+        (s, op[2], op[1]): t
+        for s, row in enumerate(table)
+        for t, op in enumerate(row)
+        if op and op[0] == "Bw"
+    }
+    wslots: List[Tuple[Tuple[int, ...], ...]] = []
+    depth = 0
+    for s in range(PP):
+        free_at: List[int] = []
+        stage_slots = [[-1] * M for _ in range(V)]
+        for alloc, free, (vs, mb) in sorted(_wstash_residency(bi, bw, s)):
+            for i, fa in enumerate(free_at):
+                if fa <= alloc:
+                    stage_slots[vs][mb] = i
+                    free_at[i] = free + 1
+                    break
+            else:
+                stage_slots[vs][mb] = len(free_at)
+                free_at.append(free + 1)
+        wslots.append(tuple(tuple(row) for row in stage_slots))
+        depth = max(depth, len(free_at))
+    return tuple(wslots), depth
 
 
 # ---------------------------------------------------------------------------
@@ -417,18 +688,26 @@ def check_invariants(sched: Schedule) -> None:
     :class:`InvariantViolation` on the first failure.  Covered:
 
     1. table shape: PP rows of num_ticks cells, at most one well-formed op
-       per (stage, tick);
-    2. completeness: every (stage, vs, mb) is F'd and B'd exactly once;
-    3. residual exists: B(chunk, mb) after F(chunk, mb);
+       per (stage, tick), kinds drawn from KIND_CODE;
+    2. completeness: every (stage, vs, mb) is F'd exactly once and
+       backward-completed exactly once — EITHER one fused B, OR a split
+       Bi + Bw pair (never both forms, never a dangling half);
+    3. residual exists: B/Bi(chunk, mb) after F(chunk, mb), and
+       Bi-before-Bw per (stage, vs, mb) — the weight grad drains a stash
+       its Bi must have filled;
     4. hand-off ordering across stages AND vstages: F(chunk) strictly after
-       F(prev_chunk), B(chunk) strictly after B(next_chunk) — one ppermute
-       tick per (possibly wrap-around) edge;
+       F(prev_chunk), B/Bi(chunk) strictly after B/Bi(next_chunk) — one
+       ppermute tick per (possibly wrap-around) edge (Bw has no hand-off);
     5. slot geometry: slots shaped (PP, V, M), ids < num_slots, and no two
-       residencies overlap in the same (stage, slot);
+       residencies (arrival → B/Bi) overlap in the same (stage, slot);
     6. num_slots == the max of the residency occupancy trace (the depth is
        minimal, not just sufficient);
-    7. peak_in_flight == per-stage max of the F-minus-B occupancy trace,
-       which drains to zero.
+    7. W-stash geometry: wslots shaped (PP, V, M) with a valid slot id for
+       every split key (-1 for fused keys), no two [Bi, Bw] deferral
+       windows overlap in the same (stage, wslot), and num_wslots == the
+       peak of the W-stash residency trace (no stash over-allocation);
+    8. peak_in_flight == per-stage max of the F-minus-B/Bi occupancy
+       trace, which drains to zero; the W-stash trace drains too.
     """
     PP, M, V, T = sched.PP, sched.M, sched.V, sched.num_ticks
 
@@ -441,27 +720,49 @@ def check_invariants(sched: Schedule) -> None:
                 continue
             _require(
                 len(op) == 3
-                and op[0] in ("F", "B")
+                and op[0] in KIND_CODE
                 and 0 <= op[1] < M
                 and 0 <= op[2] < V,
                 sched, "malformed op", s, t, op,
             )
 
-    # 2. completeness
+    # 2. completeness: one F; one fused B xor one (Bi, Bw) pair
     f = sched.op_ticks("F")
-    b = sched.op_ticks("B")
+    b_fused = sched.op_ticks("B")
+    bi = sched.op_ticks("Bi")
+    bw = sched.op_ticks("Bw")
     want = {(s, vs, mb) for s in range(PP) for vs in range(V) for mb in range(M)}
     _require(set(f) == want, sched, "every (stage, vs, mb) F'd exactly once")
-    _require(set(b) == want, sched, "every (stage, vs, mb) B'd exactly once")
+    _require(
+        not (set(b_fused) & (set(bi) | set(bw))), sched,
+        "fused B and split Bi/Bw for the same (stage, vs, mb)",
+    )
+    _require(
+        set(bi) == set(bw), sched,
+        "split keys must have BOTH a Bi and a Bw (dangling half)",
+    )
+    _require(
+        (set(b_fused) | set(bi)) == want, sched,
+        "every (stage, vs, mb) B'd exactly once",
+    )
     n_ops = sum(1 for row in sched.ops for op in row if op is not None)
-    _require(n_ops == 2 * PP * V * M, sched, "duplicate ops in the table")
+    _require(
+        n_ops == len(f) + len(b_fused) + len(bi) + len(bw),
+        sched, "duplicate ops in the table",
+    )
 
-    # 3 + 4. residual + hand-off ordering over the chunk ring
+    # 3 + 4. residual + Bi-before-Bw + hand-off ordering over the chunk ring
+    b = dict(b_fused)
+    b.update(bi)  # the cotangent producer per key (B role)
     for s in range(PP):
         for vs in range(V):
             for mb in range(M):
                 c = (s, vs, mb)
                 _require(b[c] > f[c], sched, "B before its F", c)
+                if c in bw:
+                    _require(
+                        bw[c] > bi[c], sched, "Bw not after its Bi", c,
+                    )
                 prv = prev_chunk(s, vs, PP, V)
                 if prv is not None:
                     _require(
@@ -512,7 +813,49 @@ def check_invariants(sched: Schedule) -> None:
         sched.num_slots, max_resident,
     )
 
-    # 7. occupancy trace: peaks match, drains to zero, never negative
+    # 7. W-stash geometry and minimal depth (split-backward schedules)
+    _require(
+        len(sched.wslots) == PP
+        and all(len(sv) == V and all(len(row) == M for row in sv)
+                for sv in sched.wslots),
+        sched, "wslots must be shaped (PP, V, M)",
+    )
+    max_stash = 0
+    for s in range(PP):
+        wres = _wstash_residency(bi, bw, s)
+        by_wslot: Dict[int, List[Tuple[int, int]]] = {}
+        for alloc, free, (vs, mb) in wres:
+            wslot = sched.wslots[s][vs][mb]
+            _require(
+                0 <= wslot < sched.num_wslots, sched,
+                "W-stash slot id out of range", s, vs, mb, wslot,
+            )
+            by_wslot.setdefault(wslot, []).append((alloc, free))
+        for vs in range(V):
+            for mb in range(M):
+                if (s, vs, mb) not in bi:
+                    _require(
+                        sched.wslots[s][vs][mb] == -1, sched,
+                        "fused key must carry W-stash slot -1", s, vs, mb,
+                    )
+        for wslot, intervals in by_wslot.items():
+            intervals.sort()
+            for (a0, f0), (a1, _) in zip(intervals, intervals[1:]):
+                _require(
+                    f0 < a1, sched,
+                    "overlapping deferral windows in one W-stash slot",
+                    s, wslot, (a0, f0), a1,
+                )
+        for t in {a for a, _, _ in wres}:
+            live = sum(1 for a, fr, _ in wres if a <= t <= fr)
+            max_stash = max(max_stash, live)
+    _require(
+        sched.num_wslots == max_stash, sched,
+        "num_wslots != max of the W-stash residency trace (stash "
+        "over- or under-allocated)", sched.num_wslots, max_stash,
+    )
+
+    # 8. occupancy traces: peaks match, drain to zero, never negative
     occ = sched.occupancy_trace()
     _require(
         tuple(int(x) for x in occ.max(axis=1)) == tuple(sched.peak_in_flight),
@@ -520,6 +863,14 @@ def check_invariants(sched: Schedule) -> None:
     )
     _require(bool((occ[:, -1] == 0).all()), sched, "schedule does not drain")
     _require(bool((occ >= 0).all()), sched, "negative occupancy (B before F)")
+    wocc = sched.wstash_trace()
+    _require(
+        bool((wocc[:, -1] == 0).all()), sched,
+        "W-stash does not drain (missing Bw)",
+    )
+    _require(
+        bool((wocc >= 0).all()), sched, "negative W-stash (Bw before Bi)",
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -560,10 +911,11 @@ def build(name: str, PP: int, M: int, V: int = 1) -> Schedule:
         live = peak = 0
         for op in table[s]:
             if op:
-                live += 1 if op[0] == "F" else -1
+                live += OCC_DELTA[op[0]]
                 peak = max(peak, live)
         occupancy.append(peak)
     slots, depth = _assign_slots(table, PP, M, V)
+    wslots, wdepth = _assign_wslots(table, PP, M, V)
     sched = Schedule(
         name=name,
         PP=PP,
@@ -574,6 +926,8 @@ def build(name: str, PP: int, M: int, V: int = 1) -> Schedule:
         peak_in_flight=tuple(occupancy),
         slots=slots,
         num_slots=depth,
+        wslots=wslots,
+        num_wslots=wdepth,
     )
     check_invariants(sched)
     return sched
@@ -592,20 +946,27 @@ class TickTables:
     ``arrive_fwd``/``arrive_bwd`` give the residual-buffer slot into which a
     wire payload arriving at the START of a tick must be stored (-1: no
     arrival): the activation ppermuted by the prev chunk's F at ``t-1``, and
-    the cotangent ppermuted by the next chunk's B at ``t-1``, respectively.
-    With virtual stages the chunk ring's wrap-around edges make stage 0 a
-    forward receiver (from stage PP-1) and stage PP-1 a backward receiver
-    (from stage 0); each stage still receives at most one payload per
-    direction per tick, because each sender ppermutes one payload per tick.
+    the cotangent ppermuted by the next chunk's B (or Bi) at ``t-1``,
+    respectively.  With virtual stages the chunk ring's wrap-around edges
+    make stage 0 a forward receiver (from stage PP-1) and stage PP-1 a
+    backward receiver (from stage 0); each stage still receives at most one
+    payload per direction per tick, because each sender ppermutes one
+    payload per tick.
+
+    ``wslot`` is the W-stash slot of the tick's op for split-backward
+    schedules: the slot a Bi op STORES its deferred weight-grad inputs
+    into, and the slot the matching Bw op later DRAINS (-1 when the op has
+    no stash interaction — F, fused B, idle).
     """
 
-    kind: np.ndarray  # (PP, T) in {OP_IDLE, OP_F, OP_B}
+    kind: np.ndarray  # (PP, T) in {OP_IDLE, OP_F, OP_B, OP_BI, OP_BW}
     mb: np.ndarray  # (PP, T) microbatch of the op (0 when idle)
     vs: np.ndarray  # (PP, T) virtual stage (chunk) of the op (0 when idle)
     slot: np.ndarray  # (PP, T) residual slot of the op's (vs, mb) (0 idle)
     arrive_fwd: np.ndarray  # (PP, T) slot to store arriving activation, -1
     arrive_fwd_mb: np.ndarray  # (PP, T) arriving microbatch id, -1
     arrive_bwd: np.ndarray  # (PP, T) slot to store arriving cotangent, -1
+    wslot: np.ndarray = None  # (PP, T) W-stash slot of a Bi/Bw op, -1
 
 
 def tick_tables(sched: Schedule) -> TickTables:
@@ -617,15 +978,25 @@ def tick_tables(sched: Schedule) -> TickTables:
     arrive_fwd = np.full((PP, T), -1, np.int32)
     arrive_fwd_mb = np.full((PP, T), -1, np.int32)
     arrive_bwd = np.full((PP, T), -1, np.int32)
+    wslot = np.full((PP, T), -1, np.int32)
     for s in range(PP):
         for t, op in enumerate(sched.ops[s]):
             if op is None:
                 continue
             k, m, v = op
-            kind[s, t] = OP_F if k == "F" else OP_B
+            # Explicit kind -> code map; raises on an unknown kind so a new
+            # op kind can never be silently mis-encoded as OP_B.
+            kind[s, t] = _kind_code(k)
             mb[s, t] = m
             vs[s, t] = v
-            slot[s, t] = sched.slots[s][v][m]
+            if k in ("Bi", "Bw"):
+                wslot[s, t] = sched.wslots[s][v][m]
+                assert wslot[s, t] >= 0, ("split op without a W-stash slot",
+                                          s, t, op)
+            # A Bw op reads the stash, not the residual buffer: its slot
+            # cell stays 0 (unused by the executor).
+            if k != "Bw":
+                slot[s, t] = sched.slots[s][v][m]
             if k == "F":
                 nxt = next_chunk(s, v, PP, V)
                 if nxt is not None and t + 1 < T:
@@ -633,14 +1004,14 @@ def tick_tables(sched: Schedule) -> TickTables:
                     assert arrive_fwd[ns, t + 1] == -1, "fwd arrival clash"
                     arrive_fwd[ns, t + 1] = sched.slots[ns][nv][m]
                     arrive_fwd_mb[ns, t + 1] = m
-            if k == "B":
+            if k in COT_KINDS:
                 prv = prev_chunk(s, v, PP, V)
                 if prv is not None and t + 1 < T:
                     ps, pv = prv
                     assert arrive_bwd[ps, t + 1] == -1, "bwd arrival clash"
                     arrive_bwd[ps, t + 1] = sched.slots[ps][pv][m]
     return TickTables(
-        kind, mb, vs, slot, arrive_fwd, arrive_fwd_mb, arrive_bwd
+        kind, mb, vs, slot, arrive_fwd, arrive_fwd_mb, arrive_bwd, wslot
     )
 
 
@@ -780,6 +1151,17 @@ def forward_tick_tables_v(PP: int, M: int, V: int) -> ForwardTables:
 def peak_activations_1f1b(PP: int) -> List[int]:
     """Paper Eq 4: stage i holds (PP - i) in-flight microbatches at peak."""
     return [PP - i for i in range(PP)]
+
+
+def peak_wstash_zb_h1(PP: int, M: int) -> int:
+    """Closed-form W-stash depth of the ZB-H1 builder: ``min(PP, M)``
+    deferred weight grads — the greedy's ``PP - 1`` deferral ceiling plus
+    the one Bw the final-drain Bi banks before the tail.  The pleasing
+    symmetry with 1F1B's Eq-4 residual depth (also ``min(PP, M)``) is not
+    an accident: the drain has ``PP - s`` stalls to fill on stage ``s``
+    exactly where 1F1B holds ``PP - s`` residuals.  Pinned against the
+    real IR's ``num_wslots`` by tests/test_schedule_invariants.py."""
+    return min(PP, M)
 
 
 def peak_activations_interleaved(PP: int, M: int, V: int) -> List[int]:

@@ -375,7 +375,8 @@ def main():
     ap.add_argument("--pipeline", action="store_true",
                     help="Piper: pipeline stages over the pod axis")
     ap.add_argument("--schedule", default=None,
-                    help="pipeline schedule (gpipe|1f1b|interleaved_1f1b)")
+                    help="pipeline schedule (gpipe|1f1b|interleaved_1f1b|"
+                         "zb_h1)")
     ap.add_argument("--vstages", type=int, default=None,
                     help="virtual stages per stage (interleaved_1f1b)")
     ap.add_argument("--hierarchical-a2a", action="store_true")

@@ -415,7 +415,9 @@ class LanguageModel:
 
         Returns (loss, grads, metrics) with ``grads`` matching the ``params``
         tree; ``metrics["pipeline_occupancy"]`` carries the executed (PP,
-        num_ticks) in-flight residual counts.
+        num_ticks) in-flight residual counts (and, for split-backward
+        schedules, ``metrics["pipeline_wstash_occupancy"]`` the executed
+        deferred-weight-grad residency).
         """
         from repro.core import pipeline
 

@@ -89,7 +89,9 @@ class MeshPlan:
     # Pipeline schedule (a core.schedules builder name).  1F1B is the
     # paper's schedule (Eq 4 memory profile); "gpipe" keeps the all-F-then-
     # all-B order; "interleaved_1f1b" splits each stage into ``vstages``
-    # virtual stages (model chunks).  Only consulted when pp > 1.
+    # virtual stages (model chunks); "zb_h1" splits the backward into
+    # Bi/Bw and fills the drain bubble with the deferred weight grads at
+    # Eq-4-equal residual memory.  Only consulted when pp > 1.
     schedule: str = DEFAULT_SCHEDULE
     # Virtual stages per pipeline stage; > 1 only with interleaved_1f1b
     # (must divide the layer-reps per stage — the executor asserts it).

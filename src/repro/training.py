@@ -131,6 +131,7 @@ def make_train_step(lm: LanguageModel, opt_cfg: OptimizerConfig):
             # GPipe-ordered reverse pipeline from the forward scan.
             loss, grads, metrics = lm.loss_and_grads(cast(state["params"]), batch)
             metrics.pop("pipeline_occupancy", None)
+            metrics.pop("pipeline_wstash_occupancy", None)
         else:
             def loss_fn(params):
                 return lm.loss(cast(params), batch)

@@ -6,9 +6,13 @@ Checks the schedule-EXECUTING pipeline (core.pipeline.pipelined_step):
 * executed per-tick residual occupancy == the schedule IR's trace (so the
   executor provably ran the IR's op order, not AD's);
 * executed 1F1B peaks == paper Eq 4 == schedule_sim on the same IR;
-* loss + grads under ALL schedules (gpipe, 1f1b, interleaved_1f1b@V=2)
+* loss + grads under ALL schedules (gpipe, 1f1b, zb_h1,
+  interleaved_1f1b@V=2)
   allclose to the non-pipelined sequential stack (value_and_grad oracle),
   and — same forward, same token layout — to reverse-mode AD at 1e-5;
+* the zb_h1 two-phase backward: executed W-stash residency == the IR's
+  wstash trace, Eq-4-equal residual peaks, and grads byte-matching the
+  fused 1f1b executor (B ≡ Bi + Bw, executed);
 * interleaved executed occupancy == the vstage IR trace (the chunk ring
   with its wrap-around ppermutes provably runs the interleaved order);
 * the Trainer's pipelined train step runs and matches the oracle loss.
@@ -78,13 +82,25 @@ def main():
         )(params)
 
         out = {}
-        for name in ("gpipe", "1f1b"):
+        for name in ("gpipe", "1f1b", "zb_h1"):
             plan_pp = make_plan(mesh, arch, pipeline_on_pod=True, schedule=name)
             lm_pp = LanguageModel(arch, plan_pp)
             loss, grads, metrics = jax.jit(lm_pp.loss_and_grads)(params, batch)
             occ = np.asarray(metrics["pipeline_occupancy"])
             sched = S.build(name, PP, M)
             out[name] = (loss, grads, occ, sched)
+            if name == "zb_h1":
+                # The split executor's W-stash: executed deferred-weight-
+                # grad residency == the IR's trace, peak == num_wslots ==
+                # the min(PP, M) closed form.
+                wocc = np.asarray(metrics["pipeline_wstash_occupancy"])
+                RESULTS["zb_h1_wstash_trace"] = bool(
+                    np.array_equal(wocc, sched.wstash_trace())
+                )
+                RESULTS["zb_h1_wstash_peak_formula"] = bool(
+                    int(wocc.max()) == sched.num_wslots
+                    == S.peak_wstash_zb_h1(PP, M)
+                )
 
             # (a) The hand-rolled schedule-ordered backward is EXACT: same
             # forward, same token layout, only the op order differs from
@@ -125,11 +141,23 @@ def main():
         RESULTS["gpipe_peak_all_m"] = bool(
             list(out["gpipe"][2].max(axis=1)) == [M] * PP
         )
+        # ZB-H1 executes at 1F1B's Eq-4 residual profile: Bi frees the slot
+        # on B's cadence, so the executed peaks are identical.
+        RESULTS["zb_h1_peak_eq4"] = bool(
+            list(out["zb_h1"][2].max(axis=1)) == S.peak_activations_1f1b(PP)
+        )
         # Same math, different order: the two schedules agree tightly.
         RESULTS["schedules_agree"] = bool(
             abs(float(out["gpipe"][0]) - float(out["1f1b"][0])) < 1e-5
         ) and grad_close(out["gpipe"][1], out["1f1b"][1], atol=1e-4,
                          emb_rel_tol=1e-3)
+        # B ≡ Bi + Bw, executed: the two-phase backward re-applies the very
+        # same pullbacks in the same ascending-mb accumulation order, so
+        # zb_h1 reproduces the 1f1b executor's grads to float noise.
+        RESULTS["zb_h1_matches_fused_exec"] = bool(
+            abs(float(out["zb_h1"][0]) - float(out["1f1b"][0])) < 1e-6
+        ) and grad_close(out["1f1b"][1], out["zb_h1"][1], atol=1e-6,
+                         emb_rel_tol=1e-5)
 
         # Interleaved 1F1B: PP=2 stages x V=2 virtual stages on a 4-device
         # sub-mesh (reps = PP*V = 4, one pattern-rep per chunk).  Same

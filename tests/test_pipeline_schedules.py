@@ -4,9 +4,10 @@ Needs 8 host devices (PP=4 over "pod"), so the heavy lifting runs in a child
 process with XLA_FLAGS set (same pattern as test_multidevice.py) and this
 module asserts on the child's verdicts.  Covered:
 
-* executor occupancy trace == Schedule.occupancy_trace() for gpipe, 1f1b
-  AND interleaved_1f1b@V=2 (the executor provably interprets the vstage IR
-  tick by tick, chunk-ring wrap hand-offs included);
+* executor occupancy trace == Schedule.occupancy_trace() for gpipe, 1f1b,
+  zb_h1 AND interleaved_1f1b@V=2 (the executor provably interprets the
+  vstage IR tick by tick, chunk-ring wrap hand-offs included; for zb_h1
+  the W-stash trace replays too);
 * executed 1F1B peaks == paper Eq 4 == schedule_sim on the same IR, and
   executed interleaved peaks == the Eq-4 analogue;
 * pipelined loss/grads == sequential stack oracle under all schedules,
@@ -42,7 +43,7 @@ def child_results():
     return json.loads(line[len("RESULTS "):])
 
 
-@pytest.mark.parametrize("sched", ["gpipe", "1f1b"])
+@pytest.mark.parametrize("sched", ["gpipe", "1f1b", "zb_h1"])
 def test_executor_runs_the_ir(child_results, sched):
     assert child_results[f"{sched}_occupancy_trace"]
     assert child_results[f"{sched}_peak_matches_sim"]
@@ -53,14 +54,14 @@ def test_executed_1f1b_memory_profile_eq4(child_results):
     assert child_results["gpipe_peak_all_m"]
 
 
-@pytest.mark.parametrize("sched", ["gpipe", "1f1b"])
+@pytest.mark.parametrize("sched", ["gpipe", "1f1b", "zb_h1"])
 def test_schedule_backward_matches_ad_exactly(child_results, sched):
     """Same forward, same layout — the hand-rolled schedule-ordered backward
     must agree with reverse-mode AD to float noise."""
     assert child_results[f"{sched}_matches_ad_oracle"]
 
 
-@pytest.mark.parametrize("sched", ["gpipe", "1f1b"])
+@pytest.mark.parametrize("sched", ["gpipe", "1f1b", "zb_h1"])
 def test_pipelined_matches_sequential(child_results, sched):
     assert child_results[f"{sched}_loss_close"]
     assert child_results[f"{sched}_grads_close"]
@@ -68,6 +69,18 @@ def test_pipelined_matches_sequential(child_results, sched):
 
 def test_schedules_agree_with_each_other(child_results):
     assert child_results["schedules_agree"]
+
+
+def test_zb_h1_two_phase_backward(child_results):
+    """The zero-bubble executor: executed residual occupancy keeps 1F1B's
+    Eq-4 profile (Bi frees the slot on B's cadence), the W-stash residency
+    replays the IR's trace and peaks at the min(PP, M) closed form, and
+    B ≡ Bi + Bw holds executed — zb_h1's grads reproduce the fused 1f1b
+    executor's to float noise."""
+    assert child_results["zb_h1_peak_eq4"]
+    assert child_results["zb_h1_wstash_trace"]
+    assert child_results["zb_h1_wstash_peak_formula"]
+    assert child_results["zb_h1_matches_fused_exec"]
 
 
 def test_interleaved_executor_runs_the_vstage_ir(child_results):

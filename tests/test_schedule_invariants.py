@@ -76,15 +76,40 @@ def test_builder_matches_resource_model_peaks(name, PP, M, V):
 )
 def test_num_slots_is_minimal(name, V):
     """num_slots equals the peak of the residency occupancy trace — the
-    depth is minimal, not merely sufficient (harness check 6)."""
+    depth is minimal, not merely sufficient (harness check 6).  The freeing
+    op is the cotangent producer: fused B, or split Bi."""
     sched = S.build(name, 4, 8, V)
-    f, b = sched.op_ticks("F"), sched.op_ticks("B")
+    f, b = sched.op_ticks("F"), sched.cot_ticks()
     peak = 0
     for s in range(sched.PP):
         res = S._residency(f, b, s, sched.PP, sched.V, sched.M)
         for t in range(sched.num_ticks):
             peak = max(peak, sum(1 for a, fr, _ in res if a <= t <= fr))
     assert sched.num_slots == peak
+
+
+@pytest.mark.parametrize("PP", PPS)
+@pytest.mark.parametrize("M", MS)
+def test_zb_h1_wstash_matches_closed_forms(PP, M):
+    """The resource model prices ZB-H1 with closed forms; they must equal
+    the real IR: W-stash depth min(PP, M), Eq-4 residual slots, and (for
+    M >= PP) the 3M + PP - 1 unit-op makespan behind the
+    (PP-1)/(3M+PP-1) bubble fraction."""
+    sched = S.build("zb_h1", PP, M)
+    assert sched.num_wslots == S.peak_wstash_zb_h1(PP, M)
+    assert sched.num_wslots == rm.peak_wstash("zb_h1", PP, M)
+    flat = S.build("1f1b", PP, M)
+    assert sched.num_slots == flat.num_slots
+    assert sched.peak_in_flight == flat.peak_in_flight
+    if M >= PP:
+        assert sched.num_ticks == 3 * M + PP - 1
+        idle = PP * sched.num_ticks - 3 * PP * M
+        frac = idle / (PP * sched.num_ticks)
+        assert frac == pytest.approx(
+            rm.schedule_bubble_fraction("zb_h1", PP, M)
+        )
+    for name in ("gpipe", "1f1b", "interleaved_1f1b"):
+        assert rm.peak_wstash(name, PP, M) == 0
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +261,114 @@ def test_detects_wrong_shape():
     sched = flat_sched()
     bad = dataclasses.replace(sched, ops=sched.ops[:-1])
     with pytest.raises(S.InvariantViolation, match="PP rows"):
+        S.check_invariants(bad)
+
+
+# ---------------------------------------------------------------------------
+# Split-backward (Bi/Bw) perturbations: the harness must catch every way a
+# zero-bubble table can go wrong.
+# ---------------------------------------------------------------------------
+
+
+def zb_sched():
+    return S.build("zb_h1", 4, 8)
+
+
+def test_harness_accepts_zb():
+    S.check_invariants(zb_sched())
+
+
+def test_detects_bw_before_bi():
+    """Bi-before-Bw ordering: a weight grad cannot drain a stash its Bi
+    has not filled."""
+    sched = zb_sched()
+    ops = _mut_ops(sched)
+    bi = sched.op_ticks("Bi")
+    bw = sched.op_ticks("Bw")
+    key = (2, 0, 3)
+    t_bi, t_bw = bi[key], bw[key]
+    ops[2][t_bi], ops[2][t_bw] = ops[2][t_bw], ops[2][t_bi]
+    with pytest.raises(S.InvariantViolation):
+        S.check_invariants(_with_ops(sched, ops))
+
+
+def test_detects_missing_bw():
+    """A dropped Bw is a weight grad that never lands (and a stash entry
+    that never drains)."""
+    sched = zb_sched()
+    ops = _mut_ops(sched)
+    t = next(i for i, op in enumerate(ops[1]) if op and op[0] == "Bw")
+    ops[1][t] = None
+    with pytest.raises(S.InvariantViolation, match="Bi and a Bw|drain"):
+        S.check_invariants(_with_ops(sched, ops))
+
+
+def test_detects_duplicate_bw():
+    """The same weight grad applied twice silently doubles that
+    microbatch's contribution."""
+    sched = zb_sched()
+    ops = _mut_ops(sched)
+    src = next(op for op in ops[0] if op and op[0] == "Bw")
+    t_idle = next(i for i, op in enumerate(ops[0]) if op is None)
+    ops[0][t_idle] = src
+    with pytest.raises(S.InvariantViolation, match="duplicate"):
+        S.check_invariants(_with_ops(sched, ops))
+
+
+def test_detects_missing_bi_half():
+    """A Bw whose backward ran as a fused B is a double-counted weight
+    grad: fused and split forms must never mix per (stage, vs, mb)."""
+    sched = zb_sched()
+    ops = _mut_ops(sched)
+    t = next(i for i, op in enumerate(ops[3]) if op and op[0] == "Bi")
+    ops[3][t] = ("B", ops[3][t][1], ops[3][t][2])
+    with pytest.raises(S.InvariantViolation, match="fused B and split"):
+        S.check_invariants(_with_ops(sched, ops))
+
+
+def test_detects_wstash_collision():
+    """Two overlapping deferral windows in one W-stash slot: the second Bi
+    would overwrite a pending weight-grad input before its Bw drains it."""
+    sched = zb_sched()
+    wslots = [list(list(r) for r in sv) for sv in sched.wslots]
+    wslots[3] = [[0] * sched.M for _ in range(sched.V)]
+    bad = dataclasses.replace(
+        sched, wslots=tuple(tuple(tuple(r) for r in sv) for sv in wslots)
+    )
+    with pytest.raises(S.InvariantViolation, match="deferral windows"):
+        S.check_invariants(bad)
+
+
+def test_detects_wstash_overflow():
+    """A wslot id beyond num_wslots would index past the executor's
+    scan-carried stash buffer."""
+    sched = zb_sched()
+    wslots = [list(list(r) for r in sv) for sv in sched.wslots]
+    wslots[1][0][0] = sched.num_wslots
+    bad = dataclasses.replace(
+        sched, wslots=tuple(tuple(tuple(r) for r in sv) for sv in wslots)
+    )
+    with pytest.raises(S.InvariantViolation, match="W-stash slot id"):
+        S.check_invariants(bad)
+
+
+def test_detects_oversized_wstash():
+    """num_wslots above the residency peak is stash memory the executor
+    would allocate for nothing — the harness requires minimality."""
+    bad = dataclasses.replace(zb_sched(), num_wslots=zb_sched().num_wslots + 1)
+    with pytest.raises(S.InvariantViolation, match="num_wslots"):
+        S.check_invariants(bad)
+
+
+def test_detects_fused_key_with_wslot():
+    """Fused keys must carry wslot -1 (no stash interaction)."""
+    sched = flat_sched()
+    wslots = [list(list(r) for r in sv) for sv in sched.wslots]
+    wslots[0][0][0] = 0
+    bad = dataclasses.replace(
+        sched, wslots=tuple(tuple(tuple(r) for r in sv) for sv in wslots)
+    )
+    with pytest.raises(S.InvariantViolation, match="-1"):
         S.check_invariants(bad)
 
 

@@ -31,7 +31,7 @@ def test_ir_wellformed(name, PP, M):
         pytest.skip("interleaved needs M % PP == 0")
     sched = S.build(name, PP, M)
     f = sched.op_ticks("F")
-    b = sched.op_ticks("B")
+    b = sched.cot_ticks()  # fused B, or the split Bi in B's role
     assert len(f) == len(b) == PP * M  # every op exactly once (V=1)
     for s in range(PP):
         for mb in range(M):
@@ -41,8 +41,17 @@ def test_ir_wellformed(name, PP, M):
             if s < PP - 1:  # cotangent hand-off
                 assert b[(s, 0, mb)] > b[(s + 1, 0, mb)]
     # at most one op per (stage, tick) is structural in the table; the tick
-    # count matches the unit-time makespan of the flush schedules
-    assert sched.num_ticks == 2 * (M + PP - 1)
+    # count matches the unit-time makespan: 2(M+PP-1) for the fused flush
+    # schedules, 3M+PP-1 for ZB-H1 (three unit ops per mb, drain filled)
+    if name == "zb_h1":
+        bw = sched.op_ticks("Bw")
+        assert len(bw) == PP * M
+        for key, t_bw in bw.items():
+            assert t_bw > b[key]  # Bi before its Bw
+        if M >= PP:
+            assert sched.num_ticks == 3 * M + PP - 1
+    else:
+        assert sched.num_ticks == 2 * (M + PP - 1)
 
 
 @pytest.mark.parametrize("name", SCHEDULES)
@@ -57,6 +66,7 @@ def test_ir_matches_canonical_stage_orders(name, PP, M):
         "1f1b": S.one_f_one_b_order,
         # V defaults to 1, where interleaved reduces to plain 1f1b
         "interleaved_1f1b": S.one_f_one_b_order,
+        "zb_h1": S.zb_h1_order,
     }[name]
     for s in range(PP):
         assert sched.stage_order(s) == order(PP, M, s)
@@ -98,13 +108,13 @@ def test_residual_buffer_depth(PP, M):
 @pytest.mark.parametrize("PP,M", GRID)
 def test_slot_lifetimes_disjoint(name, PP, M):
     """No two (vs, mb) chunk inputs may occupy a stage's slot at the same
-    tick (lifetime: activation arrival -> backward)."""
+    tick (lifetime: activation arrival -> backward B/Bi)."""
     if name == "interleaved_1f1b" and M % PP:
         pytest.skip("interleaved needs M % PP == 0")
     V = 2 if name == "interleaved_1f1b" else 1
     sched = S.build(name, PP, M, V)
     f = sched.op_ticks("F")
-    b = sched.op_ticks("B")
+    b = sched.cot_ticks()
     for s in range(PP):
         by_slot = {}
         for vs in range(V):
@@ -189,6 +199,102 @@ def test_interleaved_v1_is_plain_1f1b():
 
 
 # ---------------------------------------------------------------------------
+# ZB-H1: the zero-bubble split-backward schedule
+# ---------------------------------------------------------------------------
+
+# Golden pin of the ZB-H1 table at (PP=4, M=8): per-stage op orders (the
+# tick placement follows deterministically via list_schedule).  Warmup and
+# the F/Bi alternation are exactly 1F1B's; the Bw's slot into the steady
+# rotation and the drain stalls, with the banked tail filling the
+# 2(PP-1)-tick 1F1B drain bubble down to PP-1.
+GOLDEN_ZB_H1_4x8 = (
+    # stage 0
+    "F0 F1 F2 F3 Bi0 F4 Bi1 F5 Bi2 F6 Bi3 Bw0 F7 Bi4 Bw1 Bw2 Bi5 Bw3 Bw4 "
+    "Bi6 Bw5 Bw6 Bi7 Bw7",
+    # stage 1
+    "F0 F1 F2 Bi0 F3 Bi1 F4 Bi2 F5 Bi3 Bw0 F6 Bi4 Bw1 F7 Bi5 Bw2 Bw3 Bi6 "
+    "Bw4 Bw5 Bi7 Bw6 Bw7",
+    # stage 2
+    "F0 F1 Bi0 F2 Bi1 F3 Bi2 F4 Bi3 Bw0 F5 Bi4 Bw1 F6 Bi5 Bw2 F7 Bi6 Bw3 "
+    "Bw4 Bi7 Bw5 Bw6 Bw7",
+    # stage 3
+    "F0 Bi0 F1 Bi1 F2 Bi2 F3 Bi3 Bw0 F4 Bi4 Bw1 F5 Bi5 Bw2 F6 Bi6 Bw3 F7 "
+    "Bi7 Bw4 Bw5 Bw6 Bw7",
+)
+
+
+def test_zb_h1_golden_table():
+    """Pin the ZB-H1 builder's (PP=4, M=8) emission: op orders, tick
+    count 3M+PP-1, 1F1B-equal residual geometry, min(PP, M) W-stash."""
+    sched = S.build("zb_h1", 4, 8)
+    flat = S.build("1f1b", 4, 8)
+    for s, want in enumerate(GOLDEN_ZB_H1_4x8):
+        got = " ".join(f"{k}{m}" for k, m, _vs in sched.stage_order(s))
+        assert got == want, (s, got)
+    assert sched.num_ticks == 3 * 8 + 4 - 1
+    assert sched.num_slots == flat.num_slots == 4
+    assert sched.peak_in_flight == flat.peak_in_flight
+    assert sched.num_wslots == S.peak_wstash_zb_h1(4, 8) == 4
+
+
+@pytest.mark.parametrize("PP,M", GRID)
+def test_zb_h1_fusion_equivalence_with_1f1b(PP, M):
+    """B ≡ Bi + Bw: dropping the Bw ops and renaming Bi back to B recovers
+    the 1F1B canonical order on every stage — the split is a pure
+    refinement of 1F1B's (F, cotangent) structure, which is why the
+    executor's zb_h1 grads are bit-identical to 1f1b's."""
+    sched = S.build("zb_h1", PP, M)
+    for s in range(PP):
+        fused = [
+            ("B", op[1], op[2]) if op[0] == "Bi" else op
+            for op in sched.stage_order(s)
+            if op[0] != "Bw"
+        ]
+        assert fused == S.one_f_one_b_order(PP, M, s), (PP, M, s)
+
+
+@pytest.mark.parametrize("PP,M", GRID)
+def test_zb_h1_memory_and_makespan(PP, M):
+    """ZB-H1's contract vs 1F1B at every grid point: identical Eq-4
+    residual slots and in-flight peaks; tick count 3M+PP-1 for M >= PP
+    (each microbatch is 3 unit ops, the drain is filled); the W-stash depth
+    equals the closed form min(PP, M)."""
+    z = S.build("zb_h1", PP, M)
+    f = S.build("1f1b", PP, M)
+    assert z.num_slots == f.num_slots
+    assert z.peak_in_flight == f.peak_in_flight
+    assert z.num_wslots == S.peak_wstash_zb_h1(PP, M)
+    if M >= PP:
+        assert z.num_ticks == 3 * M + PP - 1
+    # unit-op idle fraction strictly below 1F1B's at every PP > 1
+    if PP > 1:
+        idle_z = PP * z.num_ticks - 3 * PP * M
+        idle_f = PP * f.num_ticks - 2 * PP * M
+        assert idle_z / (PP * z.num_ticks) < idle_f / (PP * f.num_ticks)
+
+
+def test_zb_h1_wstash_trace():
+    """The W-stash trace: +1 at Bi, -1 at Bw, drains to zero, peaks at
+    num_wslots; fused schedules trace identically zero."""
+    z = S.build("zb_h1", 4, 8)
+    wt = z.wstash_trace()
+    assert wt.shape == (4, z.num_ticks)
+    assert (wt[:, -1] == 0).all() and (wt >= 0).all()
+    assert wt.max() == z.num_wslots
+    for name in ("gpipe", "1f1b"):
+        f = S.build(name, 4, 8)
+        assert (f.wstash_trace() == 0).all()
+        assert f.num_wslots == 0
+    # p2p volume is 1F1B's: Bw ops never touch the wire
+    assert z.p2p_events() == S.build("1f1b", 4, 8).p2p_events()
+
+
+def test_zb_h1_rejects_vstages():
+    with pytest.raises(ValueError, match="virtual-stage"):
+        S.build("zb_h1", 4, 8, 2)
+
+
+# ---------------------------------------------------------------------------
 # build() cache + parameter validation (regression: the lru_cache key must
 # include V — a V-less key would alias interleaved tables of different
 # depths onto whichever was built first)
@@ -249,11 +355,16 @@ def test_sim_consumes_ir(name):
 def test_sim_makespan_and_bubble_match_model(name, PP, M, V):
     """Builder–formula drift catch: on unit-time ops the simulated makespan
     must equal the IR's tick count, and the simulated idle fraction must
-    equal the resource model's Eq-3 bubble formula, for every schedule."""
+    equal the resource model's Eq-3 bubble formula, for every schedule.
+    ZB-H1's unit-op convention is three unit ops per microbatch (the
+    backward split in half: t_bwd=2, t_bw=1)."""
     if V > 1 and name != "interleaved_1f1b":
         return  # no vstage form
     sched = S.build(name, PP, M, V)
-    r = ss.simulate(sched, t_fwd=1.0, t_bwd=1.0)
+    if name == "zb_h1":
+        r = ss.simulate(sched, t_fwd=1.0, t_bwd=2.0, t_bw=1.0)
+    else:
+        r = ss.simulate(sched, t_fwd=1.0, t_bwd=1.0)
     assert r.makespan == sched.num_ticks
     want = rm.schedule_bubble_fraction(name, PP, M, V)
     assert abs(r.bubble_fraction - want) < 1e-12, (name, PP, M, V)
@@ -268,6 +379,13 @@ def test_sim_named_entrypoints():
     assert il.peak_in_flight == S.peak_activations_interleaved(4, 8, 2)
     # per-chunk ops take t/V: equal total work, strictly smaller makespan
     assert il.makespan < f.makespan
+    zb = ss.zb_h1(4, 8)
+    # Eq-4 residual profile, equal total work, strictly smaller makespan:
+    # the deferred Bw's fill the drain.
+    assert zb.peak_in_flight == f.peak_in_flight
+    assert zb.peak_wstash == [S.peak_wstash_zb_h1(4, 8)] * 4
+    assert zb.makespan < f.makespan
+    assert zb.bubble_fraction < f.bubble_fraction
     assert set(ss.BY_NAME) == set(SCHEDULES)
 
 
@@ -275,7 +393,10 @@ def test_sim_named_entrypoints():
 def test_tick_tables_arrivals(name):
     """Lowered executor tables: an arrival at (s, t) is exactly the op its
     chunk-ring neighbor ppermuted at t-1, parked in the receiver's slot for
-    that (vs, mb) — including the wrap-around edges when V > 1."""
+    that (vs, mb) — including the wrap-around edges when V > 1.  Kinds map
+    through the explicit KIND_CODE table (the bugfixed lowering: no silent
+    everything-that-isn't-F-is-B fallback), and split ops carry their
+    W-stash slot."""
     PP, M = 4, 8
     V = 2 if name == "interleaved_1f1b" else 1
     sched = S.build(name, PP, M, V)
@@ -288,21 +409,48 @@ def test_tick_tables_arrivals(name):
             if op is None:
                 assert k == S.OP_IDLE
                 continue
-            assert k == (S.OP_F if op[0] == "F" else S.OP_B)
+            assert k == S.KIND_CODE[op[0]]
             assert tt.mb[s, t] == op[1]
             assert tt.vs[s, t] == op[2]
-            assert tt.slot[s, t] == sched.slots[s][op[2]][op[1]]
+            if op[0] == "Bw":
+                # a Bw reads the W-stash, not the residual buffer
+                assert tt.wslot[s, t] == sched.wslots[s][op[2]][op[1]] >= 0
+            else:
+                assert tt.slot[s, t] == sched.slots[s][op[2]][op[1]]
+            if op[0] == "Bi":
+                assert tt.wslot[s, t] == sched.wslots[s][op[2]][op[1]] >= 0
+            elif op[0] in ("F", "B"):
+                assert tt.wslot[s, t] == -1
             if op[0] == "F":
                 nxt = S.next_chunk(s, op[2], PP, V)
                 if nxt is not None:
                     ns, nv = nxt
                     assert tt.arrive_fwd[ns, t + 1] == sched.slots[ns][nv][op[1]]
                     assert tt.arrive_fwd_mb[ns, t + 1] == op[1]
-            if op[0] == "B":
+            if op[0] in S.COT_KINDS:
                 prv = S.prev_chunk(s, op[2], PP, V)
                 if prv is not None:
                     ps, pv = prv
                     assert tt.arrive_bwd[ps, t + 1] == sched.slots[ps][pv][op[1]]
+
+
+def test_tick_tables_reject_unknown_kind():
+    """The kind -> code lowering must raise on an unknown kind instead of
+    silently encoding it as OP_B (the bug this PR fixes) — same for the
+    describe()/occupancy_trace() views."""
+    import dataclasses
+
+    sched = S.build("1f1b", 2, 2)
+    ops = [list(r) for r in sched.ops]
+    t = next(i for i, op in enumerate(ops[0]) if op and op[0] == "B")
+    ops[0][t] = ("Bx", ops[0][t][1], ops[0][t][2])
+    bad = dataclasses.replace(sched, ops=tuple(tuple(r) for r in ops))
+    with pytest.raises(ValueError, match="unknown op kind"):
+        S.tick_tables(bad)
+    with pytest.raises(ValueError, match="unknown op kind"):
+        bad.occupancy_trace()
+    with pytest.raises(ValueError, match="unknown op kind"):
+        bad.describe()
 
 
 def test_forward_projection_staircase():
