@@ -26,10 +26,14 @@ def main() -> None:
     sched_bench = functools.partial(pf.schedules, only=args.schedule)
     functools.update_wrapper(sched_bench, pf.schedules)
 
+    from benchmarks import a2a_overlap_bench as ab
     from benchmarks import serving_bench as sb
 
     def serving():
         return sb.rows(smoke=True)
+
+    def a2a_overlap():
+        return ab.rows(smoke=True)
 
     benches = [
         pf.table1_model_configs,
@@ -46,6 +50,7 @@ def main() -> None:
         sched_bench,
         pf.kernels,
         serving,
+        a2a_overlap,
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -29,6 +29,7 @@ python -m pytest tests/test_serving.py -q
 python benchmarks/moe_gemm_bench.py --smoke --check-schema BENCH_moe_gemm.json
 python benchmarks/schedule_bench.py --smoke --check-schema BENCH_schedules.json
 python benchmarks/serving_bench.py --smoke --check-schema BENCH_serving.json
+python benchmarks/a2a_overlap_bench.py --smoke --check-schema BENCH_a2a_overlap.json
 
 # Zero-bubble acceptance gate on the committed schedule bench: zb_h1 rows
 # exist, beat 1f1b's bubble at EQUAL Eq-4 residual-slot count on every
@@ -43,6 +44,25 @@ assert rec["summary"]["zb_equal_slots"] is True, (
 assert all(s["num_wslots"] > 0 and s["wstash_bytes_ref"] > 0 for s in zb), (
     "zb_h1 rows must report their W-stash (slots + bytes)")
 print(f"zb gate ok: {len(zb)} zb_h1 cells, equal-slot bubble win on all")
+PY
+
+# Chunked-a2a acceptance gate on the committed overlap bench: the best
+# chunked K strictly beats the monolithic K=1 layer pass on at least one
+# multi-device cell, and the calibrated comm-model's argmax-K direction
+# agrees with the measured one on the headline cell.
+python - <<'PY'
+import json
+rec = json.load(open("BENCH_a2a_overlap.json"))
+s = rec["summary"]
+assert rec["sweep"], "BENCH_a2a_overlap.json has no cells -- regenerate it"
+assert s["chunked_beats_monolithic"] is True, (
+    "chunked double-buffered a2a must beat monolithic K=1 on >= 1 cell")
+assert s["model_direction_agrees"] is True, (
+    "calibrated model argmax-K direction must match the measured one")
+h = s["headline"]
+print(f"a2a overlap gate ok: ep={h['ep']} {h['algo']} "
+      f"K={h['best_measured_K']} -> {h['speedup_best_vs_K1']:.2f}x vs K=1 "
+      f"({s['cells_with_chunked_win']}/{len(rec['sweep'])} cells win)")
 PY
 
 exec python -m pytest -x -q "$@"

@@ -105,11 +105,13 @@ def main():
     perf = (ROOT / "docs" / "experiments_perf.md").read_text()
     serving = (ROOT / "docs" / "experiments_serving.md").read_text()
     schedules = (ROOT / "docs" / "experiments_schedules.md").read_text()
+    a2a = (ROOT / "docs" / "experiments_a2a.md").read_text()
     out = frame.format(
         dryrun=dryrun_section(records),
         roofline=roofline_section(records),
         serving=serving,
         schedules=schedules,
+        a2a=a2a,
         perf=perf,
     )
     (ROOT / "EXPERIMENTS.md").write_text(out)

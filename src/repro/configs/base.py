@@ -36,6 +36,18 @@ DEFAULT_SCHEDULE = "1f1b"
 DISPATCH_MODES: Tuple[str, ...] = ("capacity", "ragged")
 DEFAULT_DISPATCH = "capacity"
 
+# EP all-to-all algorithms and chunk depths the system understands
+# end-to-end: the MoE layer executes them (``repro.models.moe`` routes the
+# dispatch/combine through ``repro.core.halo`` — flat collective vs the
+# HALO hierarchical decomposition, monolithic vs chunked double-buffered),
+# ``repro.core.comm_model`` prices them (per-phase latency + the
+# chunked-overlap closed form), and the planner enumerates
+# ``a2a_algo x a2a_chunks`` per Strategy.  Single source of truth, like
+# SCHEDULES and DISPATCH_MODES.
+A2A_ALGOS: Tuple[str, ...] = ("flat", "halo")
+DEFAULT_A2A = "flat"
+A2A_CHUNK_CANDIDATES: Tuple[int, ...] = (1, 2, 4, 8)
+
 # ---------------------------------------------------------------------------
 # Sub-configs
 # ---------------------------------------------------------------------------

@@ -116,6 +116,93 @@ def speedup(case: A2ACase, platform: Platform) -> float:
     return f / h if h > 0 else 1.0
 
 
+# ---------------------------------------------------------------------------
+# Chunked double-buffered overlap (ROADMAP direction 2)
+# ---------------------------------------------------------------------------
+
+
+def a2a_time(
+    case: A2ACase, platform: Platform, algo: str, latency: float = 5e-6
+) -> float:
+    """One collective of ``case`` under the named algorithm."""
+    assert algo in ("flat", "halo"), algo
+    f = flat_a2a_time if algo == "flat" else halo_a2a_time
+    return f(case, platform, latency)
+
+
+def chunked_a2a_time(
+    case: A2ACase, platform: Platform, algo: str, chunks: int,
+    latency: float = 5e-6,
+) -> float:
+    """K back-to-back transfers of 1/K the rows (NO compute to hide
+    behind): the bandwidth term is unchanged, but the per-collective
+    latency (and any per-message fixed cost inside the algo model) is paid
+    K times — chunking alone is never free, which is why an optimal K
+    exists once compute enters the picture."""
+    assert chunks >= 1, chunks
+    sub = A2ACase(case.n_ranks, case.row_bytes / chunks)
+    return chunks * a2a_time(sub, platform, algo, latency)
+
+
+def overlapped_layer_time(
+    case: A2ACase, platform: Platform, algo: str, chunks: int,
+    t_comp: float, latency: float = 5e-6,
+) -> float:
+    """Closed form for the double-buffered dispatch -> expert FFN ->
+    combine pipeline of one MoE-layer pass (models.moe / halo.overlapped_a2a):
+
+        T ≈ T_a2a(chunk_0) + max(T_comp, T_a2a) · (K−1) + tail
+
+    with per-chunk transfer cost c = dispatch + combine of 1/K the rows
+    (each paying the per-collective latency) and per-chunk compute
+    p = t_comp / K.  Chunk 0's dispatch cannot be hidden (pipeline fill),
+    the K−1 steady-state slots each take max(c, p), and the tail is the
+    last chunk's compute + combine drain.  K = 1 reduces exactly to the
+    serial ``2·T_a2a(case) + t_comp``.  Larger K amortizes the fill/drain
+    exposure (≈ c) but multiplies the latency term — the argmin over K is
+    the planner's knob."""
+    assert chunks >= 1, chunks
+    sub = A2ACase(case.n_ranks, case.row_bytes / chunks)
+    c = 2.0 * a2a_time(sub, platform, algo, latency)  # dispatch + combine
+    p = t_comp / chunks
+    return c + (chunks - 1) * max(c, p) + p
+
+
+def exposed_a2a_time(
+    case: A2ACase, platform: Platform, algo: str, chunks: int,
+    t_comp: float, latency: float = 5e-6,
+) -> float:
+    """Seconds of the layer pass NOT hidden behind expert compute — what
+    the resource model charges as exposed a2a.  Serial (K=1, flat) exposure
+    is the full 2·T_a2a; in the bandwidth-rich regime (c < p) chunking
+    shrinks it to ~2·T_a2a/K (the fill chunk)."""
+    return overlapped_layer_time(
+        case, platform, algo, chunks, t_comp, latency
+    ) - t_comp
+
+
+def best_a2a_config(
+    case: A2ACase, platform: Platform, t_comp: float,
+    algos=("flat", "halo"), chunk_candidates=(1, 2, 4, 8),
+    latency: float = 5e-6,
+) -> Dict[str, object]:
+    """Pick (algo, chunks) minimizing the overlapped layer-pass time.
+    Returns {"algo", "chunks", "t_layer", "t_exposed"}."""
+    best = None
+    for algo in algos:
+        for K in chunk_candidates:
+            t = overlapped_layer_time(case, platform, algo, K, t_comp,
+                                      latency)
+            if best is None or t < best["t_layer"]:
+                best = {
+                    "algo": algo,
+                    "chunks": K,
+                    "t_layer": t,
+                    "t_exposed": t - t_comp,
+                }
+    return best
+
+
 def effective_a2a_bandwidth(case: A2ACase, platform: Platform, algo: str) -> float:
     """Bytes/s/GPU achieved — the paper's Fig 5 metric."""
     total = (case.n_ranks - 1) * case.row_bytes

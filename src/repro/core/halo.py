@@ -33,7 +33,7 @@ tested in tests/test_halo.py on multi-device host meshes.
 
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -117,3 +117,64 @@ def flat_all_to_all(x: jax.Array, axis: str = "ep") -> jax.Array:
     if x.shape[0] == 1:
         return x
     return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# Chunked double-buffered dispatch/compute/combine (ROADMAP direction 2)
+# ---------------------------------------------------------------------------
+
+
+def chunk_slices(total: int, n_chunks: int) -> List[Tuple[int, int]]:
+    """Split ``total`` rows into ``<= n_chunks`` contiguous (start, size)
+    slices of near-equal static size.  The leading chunks take
+    ceil(total/K) rows so only the LAST chunk is short when K does not
+    divide the payload (the tail chunk); empty chunks are dropped, so
+    K > total degenerates to ``total`` single-row chunks."""
+    assert total >= 0 and n_chunks >= 1, (total, n_chunks)
+    if total == 0:
+        return [(0, 0)]
+    size = -(-total // n_chunks)  # ceil
+    out: List[Tuple[int, int]] = []
+    start = 0
+    while start < total:
+        sz = min(size, total - start)
+        out.append((start, sz))
+        start += sz
+    return out
+
+
+def overlapped_a2a(
+    transport: Callable[[jax.Array], jax.Array],
+    get_chunk: Callable[[int, int], jax.Array],
+    compute: Callable[[jax.Array, int, int], jax.Array],
+    slices: List[Tuple[int, int]],
+) -> List[jax.Array]:
+    """Software-pipelined dispatch -> compute -> combine over row chunks.
+
+    The unrolled loop issues chunk k+1's dispatch transfer BEFORE chunk k's
+    expert compute: the two are data-independent in the lowered HLO, so the
+    latency-hiding scheduler can run the collective and the grouped GEMM
+    concurrently (double buffering).  Symmetrically, chunk k's combine
+    transfer is issued before chunk k+1's compute and overlaps it.  The
+    backward pass inherits the same structure through AD: ``all_to_all`` is
+    linear (its transpose is the reverse collective) and slicing/concat
+    transpose chunk-wise, so cotangent transfers interleave with the expert
+    GEMM pullbacks exactly like the forward.
+
+    ``transport`` moves one (ep, rows_c, d) chunk across the "ep" axis (the
+    a2a is an involution, so dispatch and combine share it); ``get_chunk``
+    materializes the send rows for slice (start, size); ``compute`` maps one
+    received chunk to its same-shape combine payload.  Returns the list of
+    combined chunks in slice order (caller concatenates).  With a single
+    slice this is exactly the monolithic transfer -> compute -> transfer.
+    """
+    recv: Dict[int, jax.Array] = {}
+    recv[0] = transport(get_chunk(*slices[0]))
+    outs: List[jax.Array] = []
+    for k, (start, size) in enumerate(slices):
+        if k + 1 < len(slices):
+            # prefetch: dispatch chunk k+1 while chunk k computes
+            recv[k + 1] = transport(get_chunk(*slices[k + 1]))
+        y = compute(recv.pop(k), start, size)
+        outs.append(transport(y))  # combine overlaps chunk k+1's compute
+    return outs

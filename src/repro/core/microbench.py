@@ -12,6 +12,7 @@ most importantly the tall-and-skinny GEMM efficiency collapse of Fig 4.
 from __future__ import annotations
 
 import time
+import types
 from typing import Dict, List, Tuple
 
 import jax
@@ -113,3 +114,85 @@ def a2a_bandwidth_curve(msg_sizes: Tuple[int, ...] = (2**14, 2**17, 2**20)) -> L
         rows.append({"ranks": n, "msg_bytes": m, "seconds": sec,
                      "gbps": bytes_moved / sec / 1e9})
     return rows
+
+
+def a2a_overlap_layer(
+    ep: int, rows: int, d: int, d_ff: int,
+    algo: str = "flat", chunks: int = 1, g1: int = None,
+    part: str = "layer",
+):
+    """Build one capacity-layout MoE layer pass over ``ep`` host devices:
+    dispatch a2a -> expert FFN -> combine a2a, software-pipelined through
+    ``halo.overlapped_a2a`` exactly like models.moe's chunked path (same
+    transport, same unrolled double-buffered loop) but with a synthetic
+    one-expert FFN so the probe isolates the transport/compute pipeline.
+
+    ``part`` selects what the jitted function runs — "layer" (the full
+    chunked pipeline), "a2a" (one monolithic dispatch transfer only) or
+    "ffn" (the expert GEMMs only) — the latter two are the calibration
+    points benchmarks/a2a_overlap_bench.py fits its analytical model from.
+
+    Returns ``(jitted_fn, mesh, args)``; time with ``_time_fn(f, *args)``
+    under ``with mesh:``.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+    from repro.core import halo
+    from repro.sharding import host_mesh
+
+    assert algo in ("flat", "halo"), algo
+    assert ep <= len(jax.devices()), (ep, len(jax.devices()))
+    mesh = host_mesh((ep,), ("ep",))
+    # hierarchical_all_to_all only reads plan.mesh; a full MeshPlan would
+    # drag in an arch, so hand it a one-field stand-in.
+    shim = types.SimpleNamespace(mesh=mesh)
+    if algo == "halo":
+        a2a = lambda t: halo.hierarchical_all_to_all(t, shim, g1=g1)
+    else:
+        a2a = halo.flat_all_to_all
+    slices = halo.chunk_slices(rows, chunks)
+
+    def layer(x, wu, wd):
+        def ffn(rx):
+            h = rx.reshape(ep * rx.shape[1], d)
+            h = jnp.maximum(h @ wu, 0.0) @ wd
+            return h.reshape(ep, rx.shape[1], d)
+
+        if part == "a2a":
+            return a2a(x)
+        if part == "ffn":
+            return ffn(x)
+
+        def get_chunk(start, size):
+            return x[:, start:start + size]
+
+        def compute(rx, start, size):
+            return ffn(rx)
+
+        outs = halo.overlapped_a2a(a2a, get_chunk, compute, slices)
+        return jnp.concatenate(outs, axis=1)
+
+    f = jax.jit(compat.shard_map(
+        layer, mesh=mesh, in_specs=(P("ep"), P(), P()), out_specs=P("ep"),
+        check_vma=False,
+    ))
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (ep * ep * rows, d), jnp.float32)
+    x = x.reshape(ep * ep, rows, d)
+    wu = jax.random.normal(key, (d, d_ff), jnp.float32) * 0.01
+    wd = jax.random.normal(key, (d_ff, d), jnp.float32) * 0.01
+    return f, mesh, (x, wu, wd)
+
+
+def measure_a2a_overlap(
+    ep: int, rows: int, d: int, d_ff: int,
+    algo: str = "flat", chunks: int = 1, g1: int = None,
+    part: str = "layer", iters: int = 3, warmup: int = 1,
+) -> float:
+    """Seconds per call of one ``a2a_overlap_layer`` configuration."""
+    f, mesh, args = a2a_overlap_layer(
+        ep, rows, d, d_ff, algo=algo, chunks=chunks, g1=g1, part=part
+    )
+    with mesh:
+        return _time_fn(f, *args, iters=iters, warmup=warmup)

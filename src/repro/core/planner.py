@@ -14,12 +14,16 @@ from dataclasses import dataclass, replace
 from typing import Iterable, List, Optional, Tuple
 
 from repro.configs.base import (
+    A2A_ALGOS,
+    A2A_CHUNK_CANDIDATES,
     ArchConfig,
+    DEFAULT_A2A,
     DEFAULT_DISPATCH,
     DEFAULT_SCHEDULE,
     DISPATCH_MODES,
     SCHEDULES,
 )
+from repro.core import comm_model as cm
 from repro.core import resource_model as rm
 from repro.core.platform import Platform
 
@@ -40,6 +44,11 @@ class Strategy:
     # Virtual stages per pipeline stage (interleaved_1f1b only): buys a
     # 1/V bubble for ~2× Eq-4 residual memory and V× p2p volume.
     vstages: int = 1
+    # EP all-to-all algorithm (flat vs HALO hierarchical) and chunk depth
+    # of the double-buffered dispatch/combine overlap — ranked per config
+    # like the schedule and dispatch mode.
+    a2a_algo: str = DEFAULT_A2A
+    a2a_chunks: int = 1
 
     @property
     def world(self) -> int:
@@ -56,11 +65,13 @@ class Strategy:
             f"PP={self.PP:<3d} EP={self.EP:<3d} DP={self.DP:<3d} "
             f"alpha={self.alpha} sched={sched:<5s} "
             f"disp={self.dispatch:<8s} "
+            f"a2a={self.a2a_algo}x{self.a2a_chunks} "
             f"ckpt={int(self.checkpoint_activations)} "
             f"Bp={self.bytes_per_param:<2d} "
             f"mem0={e.mem_stage0/1e9:7.1f}GB mfu={e.mfu*100:5.1f}% "
             f"t_step={e.t_step*1e3:8.1f}ms "
             f"(comp={e.t_compute*1e3:.1f} a2a={e.t_a2a*1e3:.1f} "
+            f"a2a_exp={e.t_a2a_exposed*1e3:.1f} "
             f"p2p={e.t_p2p*1e3:.1f} dp={e.t_dp_grad*1e3:.1f} "
             f"disp={e.t_dispatch*1e3:.1f} drop={e.drop_rate:.2f} "
             f"bubble={e.bubble_fraction:.2f})"
@@ -139,49 +150,78 @@ def valid_strategies(
             # MoE archs rank both dispatch modes (capacity padding tax +
             # drops vs ragged sort overhead); dense archs have no dispatch.
             dispatches = DISPATCH_MODES if shape.E else (DEFAULT_DISPATCH,)
+            # a2a algorithm x chunk depth: only meaningful when an EP
+            # dispatch exists.  The comm model gates the hierarchical
+            # candidate — inside a single node HALO's extra phase only adds
+            # latency (speedup < 1), so it is pruned there; chunk depths
+            # are always ranked (the estimate prices the latency tax, so
+            # oversized K loses on MFU, not by fiat).
+            if shape.E and EP > 1:
+                tokens = batch * seq * shape.k / (EP * DP)
+                probe = cm.A2ACase(
+                    n_ranks=EP, row_bytes=2.0 * tokens * shape.d_model / EP
+                )
+                # halo inside one node is the flat collective plus extra
+                # latency (the model prices them identically) — only keep
+                # it where the hierarchy strictly wins.
+                algos = [
+                    a
+                    for a in A2A_ALGOS
+                    if a == "flat" or cm.speedup(probe, platform) > 1.0
+                ]
+                a2a_opts = [
+                    (a, K) for a in algos for K in A2A_CHUNK_CANDIDATES
+                ]
+            else:
+                a2a_opts = [(DEFAULT_A2A, 1)]
             for alpha in alphas:
                 M = alpha * PP
                 if batch % (DP * M) or batch // (DP * M) == 0:
                     continue
                 for schedule, vstages in schedules:
                     for dispatch in dispatches:
-                        for ckpt in (False, True):
-                            # 16 B/param = paper's fp16+fp32-master policy;
-                            # 12 B = our executor (fp32 master+moments,
-                            # transient bf16 compute copies); 8 B = bf16
-                            # moments fallback.
-                            for bpp in (16, 12, 8):
-                                t = rm.TrainSetup(
-                                    b=batch,
-                                    s=seq,
-                                    PP=PP,
-                                    EP=EP,
-                                    DP=DP,
-                                    alpha=alpha,
-                                    schedule=schedule,
-                                    vstages=vstages,
-                                    checkpoint_activations=ckpt,
-                                    bytes_per_param=bpp,
-                                    zero=zero,
-                                    imbalance=imbalance,
-                                    dispatch=dispatch,
-                                )
-                                est = rm.estimate(
-                                    shape, t, platform,
-                                    overlap_fraction=overlap_fraction,
-                                )
-                                if not est.mem_ok:  # Eq 11
+                        for a2a_algo, a2a_chunks in a2a_opts:
+                            for ckpt in (False, True):
+                                # 16 B/param = paper's fp16+fp32-master
+                                # policy; 12 B = our executor (fp32
+                                # master+moments, transient bf16 compute
+                                # copies); 8 B = bf16 moments fallback.
+                                for bpp in (16, 12, 8):
+                                    t = rm.TrainSetup(
+                                        b=batch,
+                                        s=seq,
+                                        PP=PP,
+                                        EP=EP,
+                                        DP=DP,
+                                        alpha=alpha,
+                                        schedule=schedule,
+                                        vstages=vstages,
+                                        checkpoint_activations=ckpt,
+                                        bytes_per_param=bpp,
+                                        zero=zero,
+                                        imbalance=imbalance,
+                                        dispatch=dispatch,
+                                        a2a_algo=a2a_algo,
+                                        a2a_chunks=a2a_chunks,
+                                    )
+                                    est = rm.estimate(
+                                        shape, t, platform,
+                                        overlap_fraction=overlap_fraction,
+                                    )
+                                    if not est.mem_ok:  # Eq 11
+                                        continue
+                                    out.append(
+                                        Strategy(PP, EP, DP, alpha,
+                                                 schedule, ckpt, bpp, est,
+                                                 dispatch=dispatch,
+                                                 vstages=vstages,
+                                                 a2a_algo=a2a_algo,
+                                                 a2a_chunks=a2a_chunks)
+                                    )
+                                    break  # cheapest fitting policy wins
+                                else:
                                     continue
-                                out.append(
-                                    Strategy(PP, EP, DP, alpha, schedule,
-                                             ckpt, bpp, est,
-                                             dispatch=dispatch,
-                                             vstages=vstages)
-                                )
-                                break  # cheapest fitting policy wins
-                            else:
-                                continue
-                            break
+                                break
     return out
 
 
@@ -190,11 +230,18 @@ def rank_strategies(strategies: List[Strategy]) -> List[Strategy]:
     partition — identical bubble, different residency) prefer the lower
     drop rate (dropless ragged beats capacity at equal speed — dropped
     tokens are silent quality loss, not time), then the smaller stage-0
-    peak, which is how 1F1B wins whenever both fit."""
+    peak, which is how 1F1B wins whenever both fit; among configs whose
+    a2a exposure also ties (e.g. a compute-dominated step where every
+    chunk depth fully hides), prefer fewer chunks and the flat collective
+    — the simpler executor path at equal estimated speed."""
     return sorted(
         strategies,
         key=lambda s: (
-            -s.estimate.mfu, s.estimate.drop_rate, s.estimate.mem_stage0
+            -s.estimate.mfu,
+            s.estimate.drop_rate,
+            s.estimate.mem_stage0,
+            s.a2a_chunks,
+            s.a2a_algo != DEFAULT_A2A,
         ),
     )
 

@@ -15,12 +15,15 @@ from dataclasses import dataclass, field, replace
 from typing import Dict, Optional
 
 from repro.configs.base import (
+    A2A_ALGOS,
     ArchConfig,
+    DEFAULT_A2A,
     DEFAULT_DISPATCH,
     DEFAULT_SCHEDULE,
     DISPATCH_MODES,
     SCHEDULES,
 )
+from repro.core import comm_model as cm
 from repro.core.platform import Platform
 
 # Row-tile granularity of the ragged grouped-GEMM kernel
@@ -141,8 +144,16 @@ class TrainSetup:
     # sort + tile-metadata overhead but multiplies no zeros and drops
     # nothing.
     dispatch: str = DEFAULT_DISPATCH
+    # EP all-to-all algorithm ("flat" collective vs HALO hierarchical) and
+    # chunk depth of the double-buffered dispatch/combine overlap
+    # (models.moe / halo.overlapped_a2a).  The defaults reproduce the
+    # serial Eq-6 pricing exactly.
+    a2a_algo: str = DEFAULT_A2A
+    a2a_chunks: int = 1
 
     def __post_init__(self):
+        assert self.a2a_algo in A2A_ALGOS, self.a2a_algo
+        assert self.a2a_chunks >= 1, self.a2a_chunks
         # Mirror MeshPlan: a V>1 depth belongs to the interleaved schedule
         # only — rejecting the combo here keeps every consumer (memory,
         # bubble, p2p) consistent without per-site guards.
@@ -489,6 +500,36 @@ def t_a2a_lower_bound(m: ModelShape, t: TrainSetup, platform: Platform) -> float
     return 2 * a2a_bytes_per_gpu(m, t) / bw
 
 
+def a2a_case(m: ModelShape, t: TrainSetup) -> cm.A2ACase:
+    """The comm-model instance of ONE dispatch (or combine) collective of
+    one MoE layer per step: EP ranks, each shipping its per-destination
+    row block (total payload / EP) — consistent with
+    :func:`a2a_bytes_per_gpu` = row_bytes * (EP - 1)."""
+    tokens = t.b * t.s * m.k / (t.EP * t.DP)
+    return cm.A2ACase(
+        n_ranks=t.EP, row_bytes=t.bytes_act * tokens * m.d_model / t.EP
+    )
+
+
+def moe_layer_compute_time(
+    m: ModelShape, t: TrainSetup, platform: Platform
+) -> float:
+    """Seconds one rank spends in ONE hosted MoE layer's routed expert
+    GEMMs across the step's tokens, FORWARD pass (2 FLOPs/param/token; the
+    backward is 2x) — the compute a chunked dispatch/combine can hide
+    behind.  Uses the same skinny-GEMM efficiency as :func:`t_compute`,
+    whose per-layer MoE share this matches by construction."""
+    if m.E == 0:
+        return 0.0
+    disp = dispatch_costs(m, t)
+    tokens_per_rank = t.b * t.s / (t.DP * t.EP)
+    flops = 2.0 * m.k * disp.flops_factor * m.expert_params * tokens_per_rank
+    tok_per_expert = t.b * t.s * m.k / (m.E * t.DP * t.PP)
+    min_dim = min(tok_per_expert, m.d_ffn_moe, m.d_model)
+    eff = platform.gemm_efficiency(int(min_dim))
+    return flops / (platform.peak_flops * eff)
+
+
 def p2p_bytes_per_boundary(m: ModelShape, t: TrainSetup) -> float:
     """Activation bytes crossing one pipeline-stage boundary per microbatch
     per EP rank (paper §III-B2: 2 b_mu s d bytes)."""
@@ -571,6 +612,15 @@ class Estimate:
     # mem_stage0 — reported separately so the Eq-4-equal residual claim
     # stays auditable.
     wstash_bytes: float = 0.0
+    # Chunked/hierarchical a2a accounting: t_a2a stays the serial Eq-6
+    # reference; t_a2a_exposed is what actually hits the critical path
+    # after the algo choice + double-buffered chunk overlap, and
+    # a2a_overlap_saving = t_a2a - t_a2a_exposed.  Defaults (flat, K=1)
+    # keep t_a2a_exposed == t_a2a exactly.
+    t_a2a_exposed: float = 0.0
+    a2a_overlap_saving: float = 0.0
+    a2a_algo: str = DEFAULT_A2A
+    a2a_chunks: int = 1
 
 
 def estimate(
@@ -585,6 +635,31 @@ def estimate(
     # runs the same two collectives again (paper: 4 a2a per MoE layer per
     # fwd+bwd).  Each GPU hosts L_moe/PP such layers.
     ta2a = 2 * t_a2a_lower_bound(m, t, platform) * m.L_moe / t.PP
+
+    # Algo choice (flat vs HALO) + chunked double-buffered overlap: scale
+    # the serial Eq-6 reference by the comm model's exposed/serial ratio.
+    # The forward pass hides behind the layer's forward expert GEMMs, the
+    # backward behind the 2x backward GEMMs; each pass ships the same two
+    # collectives, so the ratio averages the two exposures.  Defaults
+    # (flat, K=1) leave ta2a_exposed == ta2a bit-for-bit.
+    ta2a_exposed = ta2a
+    if (
+        m.E
+        and t.EP > 1
+        and ta2a > 0
+        and (t.a2a_algo != "flat" or t.a2a_chunks > 1)
+    ):
+        case = a2a_case(m, t)
+        t_serial = 2.0 * cm.flat_a2a_time(case, platform)  # one pass
+        if t_serial > 0:
+            p_fwd = moe_layer_compute_time(m, t, platform)
+            exp_f = cm.exposed_a2a_time(
+                case, platform, t.a2a_algo, t.a2a_chunks, p_fwd
+            )
+            exp_b = cm.exposed_a2a_time(
+                case, platform, t.a2a_algo, t.a2a_chunks, 2.0 * p_fwd
+            )
+            ta2a_exposed = ta2a * (exp_f + exp_b) / (2.0 * t_serial)
 
     # Pipeline P2P: (PP-1) boundaries x M microbatches x fwd+bwd.
     p2p_bw = (
@@ -635,7 +710,7 @@ def estimate(
         bubble = frac / (1.0 - frac)
     else:
         bubble = 0.0
-    exposed = (ta2a + tp2p + tdp) * (1.0 - overlap_fraction)
+    exposed = (ta2a_exposed + tp2p + tdp) * (1.0 - overlap_fraction)
     t_step = (
         (tc * t.imbalance + t_disp + exposed) * (1 + bubble)
         + t.step_overhead
@@ -659,6 +734,10 @@ def estimate(
         drop_rate=disp.drop_rate,
         moe_flops_factor=disp.flops_factor,
         wstash_bytes=wstash_bytes(m, t) if t.PP > 1 else 0.0,
+        t_a2a_exposed=ta2a_exposed,
+        a2a_overlap_saving=ta2a - ta2a_exposed,
+        a2a_algo=t.a2a_algo,
+        a2a_chunks=t.a2a_chunks,
     )
 
 

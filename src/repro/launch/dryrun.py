@@ -82,6 +82,50 @@ def _dispatch_model_record(arch, shape, chips: int, plan) -> dict:
     return out
 
 
+def _a2a_model_record(arch, shape, chips: int, plan) -> dict:
+    """Resource-model ranking of the EP a2a path for this cell: every
+    ``a2a_algo x a2a_chunks`` combo the planner enumerates, priced at the
+    cell's (PP, EP, DP), with the serial Eq-6 reference, the overlapped
+    exposure, and the resulting step time — ranked best-first."""
+    from repro.configs.base import A2A_ALGOS, A2A_CHUNK_CANDIDATES
+    from repro.core import resource_model as rm
+    from repro.core.platform import TPU_V5E
+
+    if arch.moe is None or plan.ep <= 1:
+        return {}
+    m = rm.ModelShape.from_arch(arch)
+    PP = max(plan.pp, 1)
+    EP = max(plan.ep, 1)
+    DP = max(chips // (PP * EP), 1)
+    combos = []
+    for algo in A2A_ALGOS:
+        for K in A2A_CHUNK_CANDIDATES:
+            t = rm.TrainSetup(
+                b=shape.global_batch, s=shape.seq_len, PP=PP, EP=EP, DP=DP,
+                dispatch=arch.moe.dispatch, zero="world",
+                a2a_algo=algo, a2a_chunks=K,
+            )
+            est = rm.estimate(m, t, TPU_V5E)
+            combos.append({
+                "a2a_algo": algo,
+                "a2a_chunks": K,
+                "t_a2a_serial_s": est.t_a2a,
+                "t_a2a_exposed_s": est.t_a2a_exposed,
+                "a2a_overlap_saving_s": est.a2a_overlap_saving,
+                "t_step_s": est.t_step,
+                "mfu": est.mfu,
+            })
+    combos.sort(key=lambda c: c["t_step_s"])
+    return {
+        "combos": combos,
+        "best": {k: combos[0][k] for k in ("a2a_algo", "a2a_chunks")},
+        "selected": {
+            "a2a_algo": "halo" if plan.hierarchical_a2a else "flat",
+            "a2a_chunks": plan.a2a_chunks,
+        },
+    }
+
+
 def choose_memory_policy(arch, shape, chips: int):
     """Planner-informed defaults so the full config fits 16 GB/chip."""
     params = arch.total_params()
@@ -100,6 +144,7 @@ def run_cell(
     schedule: str = None,
     vstages: int = None,
     hierarchical_a2a: bool = False,
+    a2a_chunks: int = None,
     compress_p2p: bool = False,
     remat: str = None,
     dispatch: str = None,
@@ -136,6 +181,7 @@ def run_cell(
         "schedule": schedule,
         "vstages": vstages,
         "hierarchical_a2a": hierarchical_a2a,
+        "a2a_chunks": a2a_chunks or 1,
         "compress_p2p": compress_p2p,
         "dispatch": arch.moe.dispatch if arch.moe else None,
     }
@@ -163,6 +209,7 @@ def run_cell(
             remat=remat or auto_remat,
             optimizer_dtype=opt_dtype,
             hierarchical_a2a=hierarchical_a2a,
+            a2a_chunks=a2a_chunks or 1,
         )
         plan.compress_p2p = compress_p2p
         if pipeline:
@@ -191,6 +238,9 @@ def run_cell(
         record["dispatch_model"] = _dispatch_model_record(
             arch, shape, chips, plan
         )
+        # Ranked a2a_algo x a2a_chunks enumeration for this cell (the
+        # planner's knob, priced by the overlap-aware resource model).
+        record["a2a_model"] = _a2a_model_record(arch, shape, chips, plan)
 
         with plan.mesh:
             if shape.kind == "train":
@@ -380,6 +430,9 @@ def main():
     ap.add_argument("--vstages", type=int, default=None,
                     help="virtual stages per stage (interleaved_1f1b)")
     ap.add_argument("--hierarchical-a2a", action="store_true")
+    ap.add_argument("--a2a-chunks", type=int, default=None,
+                    help="chunk depth of the double-buffered EP a2a "
+                         "(1 = monolithic)")
     ap.add_argument("--compress-p2p", action="store_true")
     ap.add_argument("--remat", default=None)
     ap.add_argument("--dispatch", default=None,
@@ -402,6 +455,7 @@ def main():
         schedule=args.schedule,
         vstages=args.vstages,
         hierarchical_a2a=args.hierarchical_a2a,
+        a2a_chunks=args.a2a_chunks,
         compress_p2p=args.compress_p2p,
         remat=args.remat,
         dispatch=args.dispatch,

@@ -43,6 +43,12 @@ def main():
     ap.add_argument("--dispatch", default=None,
                     help="MoE expert dispatch (capacity|ragged); default: "
                          "the planner's ranked choice")
+    ap.add_argument("--a2a", default=None, choices=["flat", "halo"],
+                    help="EP all-to-all algorithm; default: the planner's "
+                         "ranked choice")
+    ap.add_argument("--a2a-chunks", type=int, default=None,
+                    help="chunk depth of the double-buffered EP a2a "
+                         "(1 = monolithic); default: the planner's choice")
     ap.add_argument("--migrate-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -116,6 +122,15 @@ def main():
             )
         print(f"[trainer] moe dispatch: {arch.moe.dispatch}")
 
+    # And the a2a path: flag wins, else the planner's ranked
+    # (algo, chunks); both bind into the MeshPlan the MoE layer reads.
+    a2a_algo = args.a2a or (best.a2a_algo if best is not None else "flat")
+    a2a_chunks = args.a2a_chunks or (
+        best.a2a_chunks if best is not None else 1
+    )
+    if arch.moe is not None:
+        print(f"[trainer] ep a2a: {a2a_algo} x{a2a_chunks} chunks")
+
     n_dev = len(jax.devices())
     if args.mesh:
         shape = tuple(int(x) for x in args.mesh.split(","))
@@ -124,10 +139,14 @@ def main():
         plan = make_plan(
             mesh, arch, pipeline_on_pod=args.pipeline, schedule=schedule,
             vstages=vstages if args.pipeline else 1,
+            hierarchical_a2a=a2a_algo == "halo",
+            a2a_chunks=a2a_chunks,
         )
     elif n_dev > 1:
         mesh = host_mesh((1, n_dev), ("data", "model"))
-        plan = make_plan(mesh, arch, schedule=schedule)
+        plan = make_plan(mesh, arch, schedule=schedule,
+                         hierarchical_a2a=a2a_algo == "halo",
+                         a2a_chunks=a2a_chunks)
     else:
         plan = single_device_plan(arch)
     print(f"[mesh] devices={plan.num_devices} ep={plan.ep} tp={plan.tp} "

@@ -17,7 +17,12 @@ GSPMD heuristics:
   the all_gather transpose);
 * optionally (``plan.hierarchical_a2a``) the dispatch uses HALO's
   hierarchical two-phase schedule from ``repro.core.halo`` instead of the
-  flat collective.
+  flat collective;
+* optionally (``plan.a2a_chunks`` > 1) the dispatch buffer is split into
+  row chunks driven through ``halo.overlapped_a2a``: chunk k+1's transfer
+  is issued while chunk k's expert FFN runs (double buffering), on both
+  the dispatch and combine sides, for both dispatch modes, and — through
+  AD — on the backward pass (docs/a2a.md).
 
 Two dispatch modes (``MoECfg.dispatch``):
 
@@ -54,6 +59,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import ArchConfig, MoECfg
+from repro.core import halo
 from repro.sharding import MeshPlan
 
 
@@ -205,7 +211,7 @@ def _moe_ragged_local(xt, top_phys, top_w, w_up, w_gate, w_down,
 
 def _moe_ragged_sharded(xt, top_phys, top_w, wu_f, wg_f, wd_f,
                         activation: str, impl: str, moe: MoECfg,
-                        ep_size: int, capacity: int, a2a):
+                        ep_size: int, capacity: int, a2a, chunks: int = 1):
     """Dropless-style EP dispatch: sorted rows as the all-to-all payload,
     segment structure carried by a counts-exchange pre-pass.
 
@@ -266,7 +272,9 @@ def _moe_ragged_sharded(xt, top_phys, top_w, wu_f, wg_f, wd_f,
         .at[dest, lid].add(keep_s.astype(jnp.int32))
     )
 
-    recv_x = _transport_bf16(a2a, send_x).reshape(ep_size * S, d)
+    # Counts exchange up front (one tiny collective for ALL chunks): it
+    # carries the receiver-side segment structure, so every payload chunk's
+    # per-row expert ids can be reconstructed before its rows arrive.
     recv_counts = lax.all_to_all(
         send_counts, "ep", split_axis=0, concat_axis=0, tiled=True
     ).reshape(ep_size, E_l)
@@ -281,23 +289,36 @@ def _moe_ragged_sharded(xt, top_phys, top_w, wu_f, wg_f, wd_f,
         reps = jnp.concatenate([cnts, pad[None]])
         return jnp.repeat(ids_tmpl, reps, total_repeat_length=S)
 
-    recv_id = jax.vmap(chunk_ids)(recv_counts).reshape(ep_size * S)
+    recv_id = jax.vmap(chunk_ids)(recv_counts)  # (ep, S)
 
-    order2 = jnp.argsort(recv_id)  # sentinels sort to the tail
-    counts2 = jnp.concatenate(
-        [jnp.sum(recv_counts, axis=0), jnp.zeros((1,), jnp.int32)]
+    def get_chunk(start, size):
+        return send_x[:, start:start + size]
+
+    def compute(recv, start, size):
+        # Per-chunk receiver re-sort: slice the reconstructed ids to this
+        # row range, argsort within the chunk (sentinels to the tail), run
+        # the ragged grouped FFN over exactly the occupied rows, and
+        # inverse-scatter back to wire order.  Each row's output depends
+        # only on its own value and expert, so chunking is exact.
+        rid = recv_id[:, start:start + size].reshape(ep_size * size)
+        rx = recv.reshape(ep_size * size, d)
+        order_c = jnp.argsort(rid)
+        counts_c = jnp.zeros((E_l + 1,), jnp.int32).at[rid].add(1)
+        offsets_c = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32),
+             jnp.cumsum(counts_c[:E_l]).astype(jnp.int32)]
+        )
+        xr = jnp.take(rx, order_c, axis=0)
+        ys = _ragged_rows_ffn(xr, wu_f, wg_f, wd_f, offsets_c, activation,
+                              impl)
+        back = jnp.zeros((ep_size * size, d), ys.dtype).at[order_c].set(ys)
+        return back.reshape(ep_size, size, d)
+
+    outs = halo.overlapped_a2a(
+        partial(_transport_bf16, a2a), get_chunk, compute,
+        halo.chunk_slices(S, chunks),
     )
-    offsets2 = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32),
-         jnp.cumsum(counts2[:E_l]).astype(jnp.int32)]
-    )
-    xr = jnp.take(recv_x, order2, axis=0)
-    ys = _ragged_rows_ffn(xr, wu_f, wg_f, wd_f, offsets2, activation, impl)
-    back = (
-        jnp.zeros((ep_size * S, d), ys.dtype).at[order2].set(ys)
-        .reshape(ep_size, S, d)
-    )
-    y_buf = _transport_bf16(a2a, back)  # (ep, S, d)
+    y_buf = jnp.concatenate(outs, axis=1)  # (ep, S, d)
     vals = y_buf[dest, jnp.minimum(posd, S - 1)]
     vals = jnp.where(keep_s[:, None], vals, 0.0)
     vals = jnp.take(vals, inv, axis=0)  # back to flat (token, k) order
@@ -355,6 +376,56 @@ def _transport_bf16(a2a_fn, x):
     y = a2a_fn(x.astype(jnp.bfloat16))
     y = _checkpoint_name(y, "ep_a2a")
     return y.astype(orig)
+
+
+def _select_a2a(plan: MeshPlan):
+    """The ONE place the EP dispatch/combine collective is selected
+    (flat vs HALO hierarchical): both the capacity-path and ragged-path
+    transports call through here, so ``plan.hierarchical_a2a`` /
+    ``plan.a2a_chunks`` cannot half-apply.  Returns the per-chunk
+    collective; chunking itself is driven by ``halo.overlapped_a2a``."""
+    if plan.hierarchical_a2a:
+        return lambda t: halo.hierarchical_all_to_all(t, plan)
+    return halo.flat_all_to_all
+
+
+def _moe_capacity_sharded(buf, wu_f, wg_f, wd_f, activation: str, ffn_fn,
+                          ep_size: int, E_l: int, capacity: int, d: int,
+                          a2a, chunks: int):
+    """Capacity-mode EP dispatch -> grouped FFN -> combine, chunked along
+    the capacity dim and software-pipelined: chunk k+1's dispatch a2a is
+    issued while chunk k's expert GEMM runs (halo.overlapped_a2a), and each
+    chunk's combine a2a overlaps the next chunk's compute.  Every chunk is
+    a valid per-expert slot range, so per-row results are identical to the
+    monolithic transfer (chunks=1 degenerates to exactly it)."""
+    bufe = buf.reshape(ep_size, E_l, capacity, d)
+
+    def get_chunk(start, size):
+        return bufe[:, :, start:start + size].reshape(ep_size, E_l * size, d)
+
+    def compute(recv, start, size):
+        # recv[(i, e, c)] = source i's slot chunk for my expert e.
+        expert_in = (
+            recv.reshape(ep_size, E_l, size, d)
+            .transpose(1, 0, 2, 3)
+            .reshape(E_l, ep_size * size, d)
+        )
+        expert_out = ffn_fn(expert_in, wu_f, wg_f, wd_f, activation)
+        return (
+            expert_out.reshape(E_l, ep_size, size, d)
+            .transpose(1, 0, 2, 3)
+            .reshape(ep_size, E_l * size, d)
+        )
+
+    slices = halo.chunk_slices(capacity, chunks)
+    outs = halo.overlapped_a2a(
+        partial(_transport_bf16, a2a), get_chunk, compute, slices
+    )
+    y = jnp.concatenate(
+        [o.reshape(ep_size, E_l, sz, d) for o, (_, sz) in zip(outs, slices)],
+        axis=2,
+    )
+    return y.reshape(ep_size * E_l, capacity, d)
 
 
 def moe_ffn_local(
@@ -490,14 +561,10 @@ def moe_ffn(
         )
         wd_f = lax.all_gather(wd, gather_axes, axis=1, tiled=True)
 
-        if plan.hierarchical_a2a:
-            from repro.core import halo
-
-            a2a = lambda t: halo.hierarchical_all_to_all(t, plan)
-        else:
-            a2a = lambda t: lax.all_to_all(
-                t, "ep", split_axis=0, concat_axis=0, tiled=True
-            )
+        # Flat/halo/chunked selection lives in _select_a2a + the plan's
+        # a2a_chunks — shared by the capacity and ragged transports.
+        a2a = _select_a2a(plan)
+        chunks = max(int(getattr(plan, "a2a_chunks", 1) or 1), 1)
 
         if moe.dispatch == "ragged":
             # Sort-based dropless dispatch.  Train/prefill (token-sharded):
@@ -515,6 +582,7 @@ def moe_ffn(
                 y = _moe_ragged_sharded(
                     xt, top_phys, top_w, wu_f, wg_f, wd_f,
                     arch.ffn_activation, impl, moe, ep_size, capacity, a2a,
+                    chunks,
                 )
             else:
                 y = _moe_ragged_local(
@@ -535,27 +603,10 @@ def moe_ffn(
         buf = _scatter_to_buffers(xt, flat_e, pos, keep, E, capacity)
 
         if token_sharded and ep_size > 1:
-            recv = _transport_bf16(
-                a2a, buf.reshape(ep_size, E_l * capacity, d)
+            y_buf = _moe_capacity_sharded(
+                buf, wu_f, wg_f, wd_f, arch.ffn_activation, ffn_fn,
+                ep_size, E_l, capacity, d, a2a, chunks,
             )
-            # recv[(i, e, c)] = source i's slot for my expert e.
-            recv = recv.reshape(ep_size, E_l, capacity, d)
-            expert_in = recv.transpose(1, 0, 2, 3).reshape(
-                E_l, ep_size * capacity, d
-            )
-            expert_out = ffn_fn(
-                expert_in,
-                wu_f,
-                wg_f,
-                wd_f,
-                arch.ffn_activation,
-            )
-            back = (
-                expert_out.reshape(E_l, ep_size, capacity, d)
-                .transpose(1, 0, 2, 3)
-                .reshape(ep_size, E_l * capacity, d)
-            )
-            y_buf = _transport_bf16(a2a, back).reshape(E, capacity, d)
             vals = y_buf[flat_e, pos]
         else:
             # Decode / EP-disabled: compute only the local expert shard and

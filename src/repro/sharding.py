@@ -103,6 +103,11 @@ class MeshPlan:
     compute_dtype: str = "bfloat16"
     # Beyond-paper: schedule expert a2a hierarchically when EP spans pods
     hierarchical_a2a: bool = False
+    # Chunked double-buffered EP a2a: split the dispatch/combine payload
+    # into this many row chunks and overlap each chunk's transfer with the
+    # previous chunk's expert FFN (models.moe via halo.overlapped_a2a).
+    # 1 = monolithic transfer (bit-identical to the pre-chunking path).
+    a2a_chunks: int = 1
     # Beyond-paper: int8 pipeline hand-offs across the slow pod axis
     compress_p2p: bool = False
     # Dry-run-only workaround: the embedding-table gradient path under
@@ -126,6 +131,7 @@ class MeshPlan:
             f"vstages={self.vstages} needs schedule='interleaved_1f1b', "
             f"got {self.schedule!r}"
         )
+        assert self.a2a_chunks >= 1, self.a2a_chunks
         if not self.rules:
             self.rules = default_rules(self)
 
@@ -208,6 +214,7 @@ def make_plan(
     remat: str = "full",
     optimizer_dtype: str = "float32",
     hierarchical_a2a: bool = False,
+    a2a_chunks: int = 1,
 ) -> MeshPlan:
     """Bind an architecture to a production mesh.
 
@@ -247,6 +254,7 @@ def make_plan(
         remat=remat,
         optimizer_dtype=optimizer_dtype,
         hierarchical_a2a=hierarchical_a2a,
+        a2a_chunks=a2a_chunks,
     )
 
 

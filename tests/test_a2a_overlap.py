@@ -1,0 +1,194 @@
+"""Chunked double-buffered EP all-to-all: closed-form pricing, resource-model
+exposure, and the planner's (a2a_algo x a2a_chunks) knob.
+
+The overlap closed form (comm_model.overlapped_layer_time) is
+
+    T = c + (K-1) * max(c, p) + p,   c = dispatch+combine of 1/K the rows,
+                                     p = t_comp / K
+
+These tests pin its boundary behavior (K=1 == serial; latency tax makes
+pure chunking never free; a finite interior optimum K exists), that the
+resource model's exposed-a2a term collapses to the serial Eq-6 number
+bit-for-bit at the defaults, and that the planner enumerates and ranks the
+full algo x chunks grid end-to-end.
+"""
+
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import A2A_ALGOS, A2A_CHUNK_CANDIDATES
+from repro.core import comm_model as cm, planner, resource_model as rm
+from repro.core.platform import FRONTIER, TPU_V5E
+
+CASE = cm.A2ACase(n_ranks=16, row_bytes=1e6)
+
+
+def _setup(**kw):
+    base = dict(b=256, s=4096, PP=4, EP=16, DP=4, zero="world")
+    base.update(kw)
+    return rm.TrainSetup(**base)
+
+
+# ---------------------------------------------------------------------------
+# comm_model closed forms
+# ---------------------------------------------------------------------------
+
+
+def test_k1_reduces_to_serial():
+    for algo in A2A_ALGOS:
+        for t_comp in (0.0, 3e-3):
+            t = cm.overlapped_layer_time(CASE, FRONTIER, algo, 1, t_comp)
+            serial = 2.0 * cm.a2a_time(CASE, FRONTIER, algo) + t_comp
+            assert t == pytest.approx(serial)
+            assert cm.exposed_a2a_time(
+                CASE, FRONTIER, algo, 1, t_comp
+            ) == pytest.approx(serial - t_comp)
+
+
+def test_pure_chunking_is_never_free():
+    """With no compute to hide behind, K transfers of 1/K rows pay the
+    per-collective latency K times — strictly increasing in K."""
+    ts = [cm.chunked_a2a_time(CASE, FRONTIER, "flat", K)
+          for K in (1, 2, 4, 8)]
+    assert all(b > a for a, b in zip(ts, ts[1:]))
+    assert ts[0] == pytest.approx(cm.a2a_time(CASE, FRONTIER, "flat"))
+
+
+def test_overlap_shrinks_exposure_in_compute_rich_regime():
+    """When per-chunk compute dominates per-chunk transfer, the exposed
+    a2a falls toward the single fill chunk (~serial/K)."""
+    t_comp = 20.0 * cm.a2a_time(CASE, FRONTIER, "flat")
+    e1 = cm.exposed_a2a_time(CASE, FRONTIER, "flat", 1, t_comp)
+    e4 = cm.exposed_a2a_time(CASE, FRONTIER, "flat", 4, t_comp)
+    assert 0.0 < e4 < e1
+    assert cm.overlapped_layer_time(
+        CASE, FRONTIER, "flat", 4, t_comp
+    ) < cm.overlapped_layer_time(CASE, FRONTIER, "flat", 1, t_comp)
+    # and the layer can never beat the compute-only lower bound
+    assert cm.overlapped_layer_time(
+        CASE, FRONTIER, "flat", 4, t_comp
+    ) > t_comp
+
+
+def test_finite_interior_optimal_k():
+    """The latency tax vs fill-chunk amortization tradeoff yields an
+    interior argmin over K: more chunks stop helping at some point."""
+    t_comp = 4.0 * cm.a2a_time(CASE, FRONTIER, "flat")
+    ks = list(range(1, 257))
+    times = [cm.overlapped_layer_time(CASE, FRONTIER, "flat", K, t_comp)
+             for K in ks]
+    k_star = ks[times.index(min(times))]
+    assert 1 < k_star < 256
+    assert cm.best_a2a_config(
+        CASE, FRONTIER, t_comp, algos=("flat",), chunk_candidates=tuple(ks)
+    )["chunks"] == k_star
+
+
+def test_best_a2a_config_minimizes_grid():
+    t_comp = 1e-3
+    best = cm.best_a2a_config(CASE, FRONTIER, t_comp)
+    grid = [cm.overlapped_layer_time(CASE, FRONTIER, a, K, t_comp)
+            for a in A2A_ALGOS for K in A2A_CHUNK_CANDIDATES]
+    assert best["t_layer"] == pytest.approx(min(grid))
+    assert best["t_exposed"] == pytest.approx(best["t_layer"] - t_comp)
+
+
+# ---------------------------------------------------------------------------
+# resource_model exposure
+# ---------------------------------------------------------------------------
+
+
+def test_estimate_defaults_price_serial_a2a_exactly():
+    """flat x K=1 must reproduce the serial Eq-6 charge bit-for-bit — the
+    overlap path may not perturb existing estimates."""
+    m = rm.ModelShape.from_arch(get_arch("piper-m10b-e128"))
+    e = rm.estimate(m, _setup(), FRONTIER)
+    assert e.t_a2a_exposed == e.t_a2a
+    assert e.a2a_overlap_saving == 0.0
+    assert e.a2a_algo == "flat" and e.a2a_chunks == 1
+
+
+def test_estimate_chunked_overlap_saving():
+    m = rm.ModelShape.from_arch(get_arch("piper-m10b-e128"))
+    e1 = rm.estimate(m, _setup(), FRONTIER)
+    e8 = rm.estimate(m, _setup(a2a_chunks=8), FRONTIER)
+    assert 0.0 < e8.t_a2a_exposed < e8.t_a2a
+    assert e8.a2a_overlap_saving == pytest.approx(e8.t_a2a - e8.t_a2a_exposed)
+    assert e8.t_a2a == e1.t_a2a  # the serial Eq-6 reference is unchanged
+    assert e8.t_step < e1.t_step
+    assert e8.mfu > e1.mfu
+    # halo composes with chunking: EP=16 spans Frontier nodes, so the
+    # hierarchical per-chunk transfer is cheaper and exposure shrinks more
+    eh = rm.estimate(m, _setup(a2a_algo="halo", a2a_chunks=8), FRONTIER)
+    assert eh.t_a2a_exposed < e8.t_a2a_exposed
+
+
+def test_a2a_case_matches_eq6_bytes():
+    """The A2ACase handed to comm_model carries exactly the Eq-6 wire
+    bytes: row_bytes * (EP-1) == a2a_bytes_per_gpu."""
+    m = rm.ModelShape.from_arch(get_arch("piper-m10b-e128"))
+    t = _setup()
+    case = rm.a2a_case(m, t)
+    assert case.n_ranks == t.EP
+    assert case.row_bytes * (t.EP - 1) == pytest.approx(
+        rm.a2a_bytes_per_gpu(m, t)
+    )
+
+
+def test_moe_layer_compute_time_scaling():
+    """Forward expert-GEMM seconds per rank: grows with tokens (b*s),
+    shrinks as the DP*EP token split widens (the per-rank token count —
+    and with it the skinny-GEMM efficiency — moves too, so the scaling is
+    monotone rather than exactly linear)."""
+    m = rm.ModelShape.from_arch(get_arch("piper-m10b-e128"))
+    t = _setup()
+    p = rm.moe_layer_compute_time(m, t, FRONTIER)
+    assert p > 0
+    assert rm.moe_layer_compute_time(m, _setup(b=512), FRONTIER) > p
+    assert rm.moe_layer_compute_time(m, _setup(DP=8), FRONTIER) < p
+
+
+def test_setup_validates_a2a_fields():
+    with pytest.raises(AssertionError):
+        _setup(a2a_algo="nccl")
+    with pytest.raises(AssertionError):
+        _setup(a2a_chunks=0)
+
+
+# ---------------------------------------------------------------------------
+# planner knob
+# ---------------------------------------------------------------------------
+
+
+def test_planner_enumerates_full_a2a_grid_when_ep_spans_nodes():
+    arch = get_arch("piper-m10b-e128")
+    strategies = planner.valid_strategies(
+        arch, FRONTIER, 256, batch=256, seq=4096, zero="world"
+    )
+    spanning = [s for s in strategies if s.EP > FRONTIER.chips_per_node]
+    assert spanning
+    combos = {(s.a2a_algo, s.a2a_chunks) for s in spanning}
+    assert combos == {(a, K) for a in A2A_ALGOS
+                      for K in A2A_CHUNK_CANDIDATES}
+
+
+def test_planner_prunes_halo_inside_one_node():
+    """halo inside a single node is the flat collective plus extra latency
+    — the probe gate must drop it."""
+    arch = get_arch("piper-m10b-e128")
+    strategies = planner.valid_strategies(
+        arch, FRONTIER, 256, batch=256, seq=4096, zero="world"
+    )
+    local = [s for s in strategies if 1 < s.EP <= FRONTIER.chips_per_node]
+    assert local
+    assert all(s.a2a_algo == "flat" for s in local)
+
+
+def test_dense_arch_gets_default_a2a_only():
+    strategies = planner.valid_strategies(
+        get_arch("yi-9b"), TPU_V5E, 64, batch=64, seq=4096, zero="world"
+    )
+    assert strategies
+    assert all(
+        (s.a2a_algo, s.a2a_chunks) == ("flat", 1) for s in strategies
+    )

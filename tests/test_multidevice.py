@@ -9,6 +9,8 @@ asserts on the child's verdicts.  Covered:
 * MoE EP sharding == single-device oracle (fwd + grads)
 * sharded train step runs and matches single-device loss
 * compressed pipeline p2p stays close to exact
+* chunked double-buffered EP a2a == monolithic (loss + grads, both
+  dispatch modes, tail-chunk K, halo x chunks)
 """
 
 import json
@@ -62,3 +64,10 @@ def test_sharded_train_step(child_results):
 
 def test_compressed_p2p_close(child_results):
     assert child_results["compressed_p2p_close"]
+
+
+def test_a2a_chunked_matches_monolithic(child_results):
+    keys = [k for k in child_results if k.startswith("a2a_chunked_")]
+    assert len(keys) == 6, child_results  # 2 dispatch modes x 3 variants
+    for k in keys:
+        assert child_results[k], k

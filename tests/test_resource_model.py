@@ -283,6 +283,40 @@ def test_planner_ranks_zb_h1_above_plain_1f1b():
     assert checked, "no arch had both zb_h1 and 1f1b PP strategies"
 
 
+def test_planner_ranks_halo_above_flat_when_ep_spans_nodes():
+    """Acceptance pin: whenever an EP group spans more than one node level
+    of the Platform (EP > chips_per_node), the hierarchical a2a's cheaper
+    exposed communication must rank it above the flat strategy of the SAME
+    partition (all other knobs equal)."""
+    arch = get_arch("piper-m10b-e128")
+    ranked = planner.rank_strategies(
+        planner.valid_strategies(
+            arch, FRONTIER, 256, batch=256, seq=4096, zero="world"
+        )
+    )
+    spanning = [s for s in ranked if s.EP > FRONTIER.chips_per_node]
+    halo = [s for s in spanning if s.a2a_algo == "halo"]
+    flat = [s for s in spanning if s.a2a_algo == "flat"]
+    assert halo and flat
+
+    def partition(s):
+        return (s.PP, s.EP, s.DP, s.alpha, s.schedule, s.vstages,
+                s.dispatch, s.a2a_chunks)
+
+    pairs = 0
+    flat_by_part = {}
+    for f in flat:
+        flat_by_part.setdefault(partition(f), f)
+    for h in halo:
+        f = flat_by_part.get(partition(h))
+        if f is None:
+            continue
+        pairs += 1
+        assert ranked.index(h) < ranked.index(f), (h.describe(), f.describe())
+        assert h.estimate.t_a2a_exposed < f.estimate.t_a2a_exposed
+    assert pairs > 0
+
+
 # ---------------------------------------------------------------------------
 # Serving mode
 # ---------------------------------------------------------------------------
