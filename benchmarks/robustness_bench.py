@@ -1,0 +1,366 @@
+"""Fault-tolerance benchmark: checkpoint pipeline cost + recovery drills.
+
+Two halves:
+
+* **Checkpoint cost sweep** — wall-clocks save / verify / restore of
+  synthetic optimizer-shaped states across a size ladder, fits the
+  two-parameter write model ``t(B) = latency + B / bw`` from the sweep's
+  endpoints (the same closed form ``core.resource_model.
+  checkpoint_write_time`` prices from platform constants), and gates the
+  fit's prediction at the middle size to within 2x of the measurement
+  (``model_within_2x``).
+* **Recovery drills** — one timed end-to-end recovery per fault class:
+  crash mid-write (stale ``.tmp`` + fallback to the previous step),
+  bit-flip corruption (quarantine + fallback), transient data-source
+  errors (retry with backoff), and non-finite loss (skip-step ->
+  rollback -> re-train).  The gate is ``all_recovered``.
+
+Emits ``BENCH_robustness.json``:
+
+    PYTHONPATH=src python benchmarks/robustness_bench.py [--out F]
+    PYTHONPATH=src python benchmarks/robustness_bench.py --smoke \
+        --check-schema BENCH_robustness.json    # CI schema-rot gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_OUT = ROOT / "BENCH_robustness.json"
+
+# f32 element counts: 16 MB -> 256 MB of state (x3 for params + 2 moments)
+SIZES = (1 << 22, 1 << 24, 1 << 26)
+SIZES_SMOKE = (1 << 14, 1 << 16, 1 << 18)
+
+
+def _state(n_elems: int) -> dict:
+    """Optimizer-shaped synthetic state: params + two Adam moments, so the
+    on-disk bytes follow the resource model's 3-copies-of-params shape."""
+    base = np.arange(n_elems, dtype=np.float32)
+    return {
+        "params": {"w": base},
+        "m": {"w": base * 0.1},
+        "v": {"w": base * 0.01},
+    }
+
+
+def _abstract(state):
+    import jax
+
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
+    )
+
+
+def _time_once(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def measure_size(n_elems: int, repeats: int) -> dict:
+    from repro.checkpoint import checkpointing as ck
+
+    state = _state(n_elems)
+    nbytes = sum(a.nbytes for a in (state["params"]["w"],
+                                    state["m"]["w"], state["v"]["w"]))
+    saves, verifies, restores = [], [], []
+    with tempfile.TemporaryDirectory() as d:
+        for _ in range(repeats):
+            shutil.rmtree(Path(d) / "step_00000001", ignore_errors=True)
+            saves.append(_time_once(
+                lambda: ck.save_checkpoint(d, 1, state)
+            ))
+            path = Path(d) / "step_00000001"
+            verifies.append(_time_once(
+                lambda: ck.verify_checkpoint(path)
+            ))
+            restores.append(_time_once(
+                lambda: ck.restore_checkpoint(d, _abstract(state))
+            ))
+    return {
+        "n_elems": n_elems,
+        "state_bytes": nbytes,
+        "save_s": min(saves),
+        "verify_s": min(verifies),
+        "restore_s": min(restores),
+    }
+
+
+def fit_write_model(sweep: list) -> dict:
+    """Two-point ``t(B) = latency + B/bw`` fit from the sweep endpoints,
+    then judge the prediction at every interior point."""
+    lo, hi = sweep[0], sweep[-1]
+    bw = (hi["state_bytes"] - lo["state_bytes"]) / max(
+        hi["save_s"] - lo["save_s"], 1e-9
+    )
+    bw = max(bw, 1.0)
+    lat = max(lo["save_s"] - lo["state_bytes"] / bw, 0.0)
+    points = []
+    for row in sweep[1:-1]:
+        pred = lat + row["state_bytes"] / bw
+        ratio = pred / max(row["save_s"], 1e-9)
+        points.append({
+            "state_bytes": row["state_bytes"],
+            "measured_s": row["save_s"],
+            "model_s": pred,
+            "ratio": ratio,
+        })
+    within = all(0.5 <= p["ratio"] <= 2.0 for p in points)
+    return {
+        "bw_bytes_per_s": bw,
+        "latency_s": lat,
+        "interior_points": points,
+        "model_within_2x": bool(within),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Recovery drills — one per fault class, each timed end to end
+# ---------------------------------------------------------------------------
+
+
+def _drill_crash_mid_write() -> dict:
+    from repro.checkpoint import checkpointing as ck
+    from repro.runtime.faults import (
+        FaultInjector, FaultPlan, FaultSpec, SimulatedCrash,
+    )
+
+    state = _state(1 << 12)
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as d:
+        ck.save_checkpoint(d, 1, state)
+        inj = FaultInjector(
+            FaultPlan([FaultSpec("ckpt.crash_before_rename", step=2)]),
+            log_fn=lambda m: None,
+        )
+        crashed = False
+        try:
+            ck.save_checkpoint(d, 2, state, injector=inj)
+        except SimulatedCrash:
+            crashed = True
+        removed = ck.cleanup_stale_tmp(d)
+        _, step = ck.restore_checkpoint(d, _abstract(state),
+                                        log_fn=lambda m: None)
+        ok = crashed and removed == ["step_00000002.tmp"] and step == 1
+    return {"fault": "crash_mid_write", "recovered": bool(ok),
+            "recovery_s": time.perf_counter() - t0}
+
+
+def _drill_corrupt_fallback() -> dict:
+    from repro.checkpoint import checkpointing as ck
+
+    state = _state(1 << 12)
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as d:
+        ck.save_checkpoint(d, 1, state)
+        ck.save_checkpoint(d, 2, state)
+        npz = Path(d) / "step_00000002" / "arrays.npz"
+        blob = bytearray(npz.read_bytes())
+        off = blob.find(np.asarray(state["params"]["w"]).tobytes())
+        assert off > 0
+        blob[off] ^= 0xFF
+        npz.write_bytes(bytes(blob))
+        _, step = ck.restore_checkpoint(d, _abstract(state),
+                                        log_fn=lambda m: None)
+        quarantined = (Path(d) / "step_00000002.corrupt").is_dir()
+        ok = step == 1 and quarantined
+    return {"fault": "corrupt_fallback", "recovered": bool(ok),
+            "recovery_s": time.perf_counter() - t0}
+
+
+def _trainer_env():
+    import jax
+
+    from repro import training
+    from repro.configs import get_arch
+    from repro.data import SyntheticTokens
+    from repro.models.model import LanguageModel
+    from repro.optim import OptimizerConfig
+    from repro.sharding import single_device_plan
+
+    arch = get_arch("smollm-360m").reduced()
+    plan = single_device_plan(arch)
+    lm = LanguageModel(arch, plan)
+    opt = OptimizerConfig(lr=1e-3)
+    state = training.init_state(lm, jax.random.PRNGKey(0), opt)
+    data = SyntheticTokens(arch.vocab_size, 2, 32)
+    return plan, lm, opt, state, data
+
+
+def _run_trainer(injector, total: int, ckpt_dir: str, **cfg_kw) -> dict:
+    from repro.runtime import Trainer, TrainerConfig
+
+    plan, lm, opt, state, data = _trainer_env()
+    with plan.mesh:
+        tr = Trainer(
+            lm, opt,
+            TrainerConfig(total_steps=total, checkpoint_dir=ckpt_dir,
+                          checkpoint_every=4, log_every=1000, **cfg_kw),
+            log_fn=lambda m: None, injector=injector,
+        )
+        return tr.fit(state, data)
+
+
+def _drill_transient_data() -> dict:
+    from repro.runtime.faults import FaultInjector, FaultPlan, FaultSpec
+
+    inj = FaultInjector(
+        FaultPlan([FaultSpec("data.transient", step=3, count=2)]),
+        log_fn=lambda m: None,
+    )
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as d:
+        res = _run_trainer(inj, 6, d, data_backoff_s=0.001)
+        ok = (inj.fired("data.transient") == 2
+              and np.isfinite(float(res["metrics"]["loss"]))
+              and not res["anomalies"])
+    return {"fault": "transient_data", "recovered": bool(ok),
+            "recovery_s": time.perf_counter() - t0}
+
+
+def _drill_nonfinite_rollback() -> dict:
+    from repro.runtime.faults import FaultInjector, FaultPlan, FaultSpec
+
+    inj = FaultInjector(
+        FaultPlan([FaultSpec("train.nonfinite", step=6, count=3)]),
+        log_fn=lambda m: None,
+    )
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as d:
+        res = _run_trainer(inj, 10, d)
+        ok = (len(res["rollbacks"]) == 1
+              and res["rollbacks"][0]["to_step"] == 4
+              and np.isfinite(float(res["metrics"]["loss"])))
+    return {"fault": "nonfinite_rollback", "recovered": bool(ok),
+            "recovery_s": time.perf_counter() - t0}
+
+
+def run(sizes, repeats: int) -> dict:
+    from repro.configs import get_arch
+    from repro.core import resource_model as rm
+    from repro.core.platform import TPU_V5E
+
+    sweep = [measure_size(n, repeats) for n in sizes]
+    fit = fit_write_model(sweep)
+    drills = [
+        _drill_crash_mid_write(),
+        _drill_corrupt_fallback(),
+        _drill_transient_data(),
+        _drill_nonfinite_rollback(),
+    ]
+
+    # The planner-side pricing this bench backs: what the resource model
+    # claims for a real arch on a real platform (constants, not this host).
+    m = rm.ModelShape.from_arch(get_arch("granite-moe-3b-a800m"))
+    t = rm.TrainSetup(b=256, s=4096, PP=4, EP=4, DP=16, zero="world")
+    t_ckpt = rm.checkpoint_write_time(m, t, TPU_V5E)
+    mtbf = rm.job_mtbf(TPU_V5E, t.P)
+    tau = rm.young_daly_interval(t_ckpt, mtbf)
+    return {
+        "meta": {
+            "sizes": list(sizes),
+            "repeats": repeats,
+        },
+        "sweep": sweep,
+        "write_model": fit,
+        "recovery": drills,
+        "planner_model": {
+            "arch": "granite-moe-3b-a800m",
+            "platform": TPU_V5E.name,
+            "chips": t.P,
+            "ckpt_bytes": rm.checkpoint_bytes(m),
+            "t_ckpt_s": t_ckpt,
+            "job_mtbf_s": mtbf,
+            "young_daly_interval_s": tau,
+            "goodput_factor": rm.goodput_factor(
+                t_ckpt, mtbf, tau, TPU_V5E.restart_s + t_ckpt
+            ),
+        },
+        "summary": {
+            "model_within_2x": fit["model_within_2x"],
+            "all_recovered": all(d["recovered"] for d in drills),
+            "fitted_bw_bytes_per_s": fit["bw_bytes_per_s"],
+        },
+    }
+
+
+def rows(smoke: bool = True):
+    """benchmarks.run integration: (name, us_per_call, derived) rows."""
+    rec = run(SIZES_SMOKE if smoke else SIZES, repeats=1 if smoke else 3)
+    out = []
+    for s in rec["sweep"]:
+        mb = s["state_bytes"] / 2**20
+        out.append((
+            f"ckpt_save_{mb:.1f}MB",
+            s["save_s"] * 1e6,
+            f"verify={s['verify_s']*1e6:.0f}us "
+            f"restore={s['restore_s']*1e6:.0f}us",
+        ))
+    summ = rec["summary"]
+    out.append((
+        "robustness_recovery",
+        0.0,
+        f"recovered={sum(d['recovered'] for d in rec['recovery'])}/"
+        f"{len(rec['recovery'])} model_within_2x={summ['model_within_2x']}",
+    ))
+    return out
+
+
+def schema(node):
+    """Recursive key structure (dict keys; list element schema)."""
+    if isinstance(node, dict):
+        return {k: schema(v) for k, v in sorted(node.items())}
+    if isinstance(node, list):
+        return [schema(node[0])] if node else []
+    return "leaf"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="min-of-N repeats per size")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes — schema/CI mode")
+    ap.add_argument("--out", type=Path, default=None)
+    ap.add_argument("--check-schema", type=Path, default=None,
+                    help="compare the emitted JSON's key structure against "
+                         "this committed file; exit 1 on drift")
+    args = ap.parse_args()
+
+    if args.smoke:
+        rec = run(SIZES_SMOKE, repeats=1)
+    else:
+        rec = run(SIZES, repeats=args.repeats)
+
+    if args.check_schema:
+        import sys
+
+        committed = json.loads(args.check_schema.read_text())
+        if schema(committed) != schema(rec):
+            print(f"SCHEMA DRIFT: {args.check_schema} no longer matches "
+                  f"what this bench emits — regenerate and commit it.",
+                  file=sys.stderr)
+            sys.exit(1)
+        print(f"schema ok: {args.check_schema}")
+        return
+
+    out = args.out or DEFAULT_OUT
+    out.write_text(json.dumps(rec, indent=1) + "\n")
+    s = rec["summary"]
+    print(f"wrote {out}")
+    print(f"fitted write bw {s['fitted_bw_bytes_per_s']/2**20:.0f} MB/s; "
+          f"model within 2x: {s['model_within_2x']}; "
+          f"all faults recovered: {s['all_recovered']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ def main() -> None:
     functools.update_wrapper(sched_bench, pf.schedules)
 
     from benchmarks import a2a_overlap_bench as ab
+    from benchmarks import robustness_bench as rb
     from benchmarks import serving_bench as sb
 
     def serving():
@@ -34,6 +35,9 @@ def main() -> None:
 
     def a2a_overlap():
         return ab.rows(smoke=True)
+
+    def robustness():
+        return rb.rows(smoke=True)
 
     benches = [
         pf.table1_model_configs,
@@ -51,6 +55,7 @@ def main() -> None:
         pf.kernels,
         serving,
         a2a_overlap,
+        robustness,
     ]
     print("name,us_per_call,derived")
     failures = 0

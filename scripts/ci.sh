@@ -23,6 +23,11 @@ python -m pytest tests/test_kernels.py tests/test_moe_dispatch.py \
 # ragged decode parity suite (fast, single-device).
 python -m pytest tests/test_serving.py -q
 
+# Chaos stage: deterministic fault injection end to end — corrupt-checkpoint
+# quarantine/fallback, crash-mid-save, NaN skip->rollback oracle match, and
+# the subprocess SIGTERM-resume + multidevice resume-parity children.
+python -m pytest tests/test_faults.py -q
+
 # Bench schema-rot gates: the smoke benches must still emit the exact key
 # structure of the committed BENCH_*.json files (regenerate + commit them
 # whenever a bench schema intentionally changes).
@@ -30,6 +35,7 @@ python benchmarks/moe_gemm_bench.py --smoke --check-schema BENCH_moe_gemm.json
 python benchmarks/schedule_bench.py --smoke --check-schema BENCH_schedules.json
 python benchmarks/serving_bench.py --smoke --check-schema BENCH_serving.json
 python benchmarks/a2a_overlap_bench.py --smoke --check-schema BENCH_a2a_overlap.json
+python benchmarks/robustness_bench.py --smoke --check-schema BENCH_robustness.json
 
 # Zero-bubble acceptance gate on the committed schedule bench: zb_h1 rows
 # exist, beat 1f1b's bubble at EQUAL Eq-4 residual-slot count on every
@@ -63,6 +69,30 @@ h = s["headline"]
 print(f"a2a overlap gate ok: ep={h['ep']} {h['algo']} "
       f"K={h['best_measured_K']} -> {h['speedup_best_vs_K1']:.2f}x vs K=1 "
       f"({s['cells_with_chunked_win']}/{len(rec['sweep'])} cells win)")
+PY
+
+# Robustness acceptance gate on the committed bench: every recovery drill
+# recovered, the fitted write model predicts the interior sweep point
+# within 2x, and the resource model prices the Young-Daly cadence.
+python - <<'PY'
+import json
+rec = json.load(open("BENCH_robustness.json"))
+s = rec["summary"]
+assert s["all_recovered"] is True, (
+    "every fault-class recovery drill must recover -- regenerate the bench")
+assert s["model_within_2x"] is True, (
+    "fitted ckpt write model must predict the interior point within 2x")
+from repro.core import resource_model as rm
+from repro.core.platform import TPU_V5E
+from repro.configs import get_arch
+m = rm.ModelShape.from_arch(get_arch("granite-moe-3b-a800m"))
+t = rm.TrainSetup(b=256, s=4096, PP=4, EP=4, DP=16, zero="world")
+e = rm.estimate(m, t, TPU_V5E)
+assert e.t_ckpt > 0 and e.ckpt_every_steps >= 1
+assert 0.0 < e.goodput_factor <= 1.0 and e.mfu_effective <= e.mfu
+print(f"robustness gate ok: {len(rec['recovery'])} drills recovered, "
+      f"write model within 2x, Young-Daly ckpt@{e.ckpt_every_steps} steps "
+      f"goodput={e.goodput_factor:.4f}")
 PY
 
 exec python -m pytest -x -q "$@"

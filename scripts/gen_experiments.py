@@ -106,12 +106,14 @@ def main():
     serving = (ROOT / "docs" / "experiments_serving.md").read_text()
     schedules = (ROOT / "docs" / "experiments_schedules.md").read_text()
     a2a = (ROOT / "docs" / "experiments_a2a.md").read_text()
+    robustness = (ROOT / "docs" / "experiments_robustness.md").read_text()
     out = frame.format(
         dryrun=dryrun_section(records),
         roofline=roofline_section(records),
         serving=serving,
         schedules=schedules,
         a2a=a2a,
+        robustness=robustness,
         perf=perf,
     )
     (ROOT / "EXPERIMENTS.md").write_text(out)

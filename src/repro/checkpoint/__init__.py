@@ -1,5 +1,11 @@
 from repro.checkpoint.checkpointing import (  # noqa: F401
+    CheckpointCorruptError,
     CheckpointManager,
+    checkpoint_steps,
+    cleanup_stale_tmp,
+    latest_step,
+    quarantine_checkpoint,
     restore_checkpoint,
     save_checkpoint,
+    verify_checkpoint,
 )

@@ -1,13 +1,23 @@
-"""Checkpointing: atomic, async-capable, elastic-restore (no orbax here).
+"""Checkpointing: atomic, async-capable, elastic-restore, self-verifying.
 
 Layout:  <dir>/step_<N>/
-             manifest.msgpack   — treedef paths, shapes, dtypes, step, extras
+             manifest.msgpack   — treedef paths, shapes, dtypes, step,
+                                  extras, per-leaf CRC32s
+             manifest.crc32     — digest of the packed manifest itself
              arrays.npz         — one entry per leaf (path-keyed)
 
 * **Atomic**: written into ``step_<N>.tmp`` then renamed, so a crash mid-save
   never corrupts the latest checkpoint.
+* **Verified**: every leaf's CRC32 is recorded at save and re-checked at
+  restore (plus a digest over the manifest), so a bit-flipped or truncated
+  snapshot is *detected*, not silently restored.
+* **Fallback, never deletion**: a checkpoint that fails verification is
+  quarantined in place (renamed ``step_<N>.corrupt.*``, reason recorded) and
+  restore falls back to the newest intact one.  Nothing is silently deleted
+  — a corrupt snapshot is evidence, not garbage.
 * **Async**: ``CheckpointManager.save(..., blocking=False)`` copies to host
-  and writes on a background thread — training continues.
+  and writes on a background thread — training continues.  A failed async
+  write re-raises on the next ``wait()``/``save()`` instead of vanishing.
 * **Elastic**: arrays are stored unsharded (gathered); restore device_puts
   each leaf with the *target* sharding, so a checkpoint taken on one mesh
   restores onto any other mesh/topology — node-count changes included.
@@ -16,15 +26,27 @@ Layout:  <dir>/step_<N>/
 from __future__ import annotations
 
 import os
+import re
 import shutil
 import threading
+import zlib
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # avoid the runtime->checkpoint->runtime import cycle
+    from repro.runtime.faults import FaultInjector
+
+# A real checkpoint dir is exactly "step_<8 digits>": quarantined
+# (".corrupt") and in-flight (".tmp") dirs never match, so they are
+# invisible to latest_step / retention GC.
+_STEP_RE = re.compile(r"^step_(\d{8})$")
 
 
 def _flatten(tree) -> Dict[str, Any]:
@@ -35,7 +57,21 @@ def _flatten(tree) -> Dict[str, Any]:
     return flat
 
 
-def save_checkpoint(directory: str, step: int, state, extras: Optional[dict] = None):
+def _crc32(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+class CheckpointCorruptError(RuntimeError):
+    """An explicitly requested checkpoint failed integrity verification."""
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    state,
+    extras: Optional[dict] = None,
+    injector: Optional[FaultInjector] = None,
+):
     """Write state synchronously. Returns the checkpoint path."""
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
@@ -47,32 +83,121 @@ def save_checkpoint(directory: str, step: int, state, extras: Optional[dict] = N
 
     flat = _flatten(state)
     host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    if injector is not None:
+        injector.raise_if("ckpt.write_fail", step)
     np.savez(tmp / "arrays.npz", **host)
     manifest = {
         "step": step,
         "keys": list(host.keys()),
         "shapes": {k: list(v.shape) for k, v in host.items()},
         "dtypes": {k: str(v.dtype) for k, v in host.items()},
+        "crc32": {k: _crc32(v) for k, v in host.items()},
         "extras": extras or {},
     }
+    packed = msgpack.packb(manifest)
     with open(tmp / "manifest.msgpack", "wb") as f:
-        f.write(msgpack.packb(manifest))
+        f.write(packed)
+    (tmp / "manifest.crc32").write_text(str(zlib.crc32(packed)))
+    if injector is not None:
+        injector.raise_if("ckpt.crash_before_rename", step)
     if final.exists():
         shutil.rmtree(final)
     os.rename(tmp, final)
+    if injector is not None:
+        injector.raise_if("ckpt.crash_after_rename", step)
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def checkpoint_steps(directory: str) -> List[int]:
+    """Ascending step numbers of the (non-quarantined, non-tmp) checkpoints."""
     d = Path(directory)
     if not d.exists():
-        return None
-    steps = [
-        int(p.name.split("_")[1])
-        for p in d.iterdir()
-        if p.name.startswith("step_") and not p.name.endswith(".tmp")
-    ]
-    return max(steps) if steps else None
+        return []
+    out = []
+    for p in d.iterdir():
+        m = _STEP_RE.match(p.name)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = checkpoint_steps(directory)
+    return steps[-1] if steps else None
+
+
+def verify_checkpoint(path) -> Tuple[bool, str]:
+    """Integrity-check one checkpoint dir: manifest digest, per-leaf CRC32,
+    shape/dtype consistency.  Returns (ok, reason)."""
+    path = Path(path)
+    mf = path / "manifest.msgpack"
+    if not mf.exists():
+        return False, "missing manifest.msgpack"
+    packed = mf.read_bytes()
+    digest_file = path / "manifest.crc32"
+    if not digest_file.exists():
+        return False, "missing manifest.crc32 digest"
+    try:
+        expect_digest = int(digest_file.read_text().strip())
+    except ValueError:
+        return False, "unreadable manifest.crc32 digest"
+    if zlib.crc32(packed) != expect_digest:
+        return False, "manifest digest mismatch"
+    try:
+        manifest = msgpack.unpackb(packed)
+    except Exception as e:  # truncated/garbled msgpack
+        return False, f"manifest unpack failed: {e}"
+    crcs = manifest.get("crc32")
+    if crcs is None:
+        return False, "manifest has no per-leaf crc32 map"
+    try:
+        with np.load(path / "arrays.npz") as data:
+            names = set(data.files)
+            for key in manifest["keys"]:
+                if key not in names:
+                    return False, f"missing array {key!r}"
+                arr = data[key]
+                if list(arr.shape) != list(manifest["shapes"][key]):
+                    return False, f"shape mismatch for {key!r}"
+                if str(arr.dtype) != manifest["dtypes"][key]:
+                    return False, f"dtype mismatch for {key!r}"
+                if _crc32(arr) != crcs[key]:
+                    return False, f"crc32 mismatch for {key!r}"
+    except Exception as e:  # missing/truncated zip, bad entry
+        return False, f"arrays.npz unreadable: {e}"
+    return True, "ok"
+
+
+def quarantine_checkpoint(path, reason: str) -> Path:
+    """Rename a corrupt checkpoint out of the restore set — NEVER delete it.
+    The reason is recorded inside for the postmortem."""
+    path = Path(path)
+    dest = path.with_name(path.name + ".corrupt")
+    n = 0
+    while dest.exists():
+        n += 1
+        dest = path.with_name(f"{path.name}.corrupt.{n}")
+    os.rename(path, dest)
+    try:
+        (dest / "QUARANTINE_REASON").write_text(reason + "\n")
+    except OSError:
+        pass  # best effort — the rename is the quarantine
+    return dest
+
+
+def cleanup_stale_tmp(directory: str) -> List[str]:
+    """Remove ``step_*.tmp`` leftovers from a crash mid-write.  Safe by
+    construction: a ``.tmp`` dir is only ever live while a save is in
+    flight in THIS process (CheckpointManager serializes saves)."""
+    d = Path(directory)
+    if not d.exists():
+        return []
+    removed = []
+    for p in d.iterdir():
+        if p.is_dir() and p.name.endswith(".tmp") and _STEP_RE.match(p.name[:-4]):
+            shutil.rmtree(p, ignore_errors=True)
+            removed.append(p.name)
+    return removed
 
 
 def restore_checkpoint(
@@ -80,14 +205,46 @@ def restore_checkpoint(
     abstract_state,
     shardings=None,
     step: Optional[int] = None,
+    verify: bool = True,
+    log_fn: Callable[[str], None] = print,
 ):
     """Restore into the structure of ``abstract_state``; each leaf is
-    device_put with the matching entry of ``shardings`` (elastic reshard)."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint under {directory}")
-    path = Path(directory) / f"step_{step:08d}"
+    device_put with the matching entry of ``shardings`` (elastic reshard).
+
+    With ``verify`` (the default) every candidate is integrity-checked
+    first; a corrupt checkpoint is quarantined and restore falls back to
+    the next-newest intact one.  An *explicitly requested* ``step`` that
+    fails verification raises :class:`CheckpointCorruptError` (after
+    quarantining) instead of silently restoring something else.
+    """
+    explicit = step is not None
+    candidates = [step] if explicit else checkpoint_steps(directory)[::-1]
+    if not candidates:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    for s in candidates:
+        path = Path(directory) / f"step_{s:08d}"
+        if verify:
+            ok, reason = verify_checkpoint(path)
+            if not ok:
+                dest = quarantine_checkpoint(path, reason)
+                log_fn(
+                    f"[ckpt] step {s} failed verification ({reason}) — "
+                    f"quarantined to {dest.name}"
+                )
+                if explicit:
+                    raise CheckpointCorruptError(
+                        f"checkpoint step {s} corrupt: {reason} "
+                        f"(quarantined to {dest})"
+                    )
+                continue
+        return _load(path, abstract_state, shardings), s
+    raise FileNotFoundError(
+        f"no intact checkpoint under {directory} "
+        f"(all candidates failed verification)"
+    )
+
+
+def _load(path: Path, abstract_state, shardings):
     with np.load(path / "arrays.npz") as data:
         flat_abs = _flatten(abstract_state)
         flat_shard = _flatten(shardings) if shardings is not None else {}
@@ -103,26 +260,39 @@ def restore_checkpoint(
     # Rebuild the tree in abstract_state's structure.
     paths, treedef = jax.tree_util.tree_flatten_with_path(abstract_state)
     ordered = []
-    for path, _ in paths:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+    for path_, _ in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
         ordered.append(leaves[key])
-    return jax.tree_util.tree_unflatten(treedef, ordered), step
+    return jax.tree_util.tree_unflatten(treedef, ordered)
 
 
 class CheckpointManager:
-    """Periodic async checkpointing with retention."""
+    """Periodic async checkpointing with retention + error surfacing."""
 
-    def __init__(self, directory: str, keep: int = 3, every: int = 100):
+    def __init__(
+        self,
+        directory: str,
+        keep: int = 3,
+        every: int = 100,
+        injector: Optional[FaultInjector] = None,
+        log_fn: Callable[[str], None] = print,
+    ):
         self.directory = Path(directory)
         self.keep = keep
         self.every = every
+        self.injector = injector
+        self.log_fn = log_fn
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     def should_save(self, step: int) -> bool:
         return step > 0 and step % self.every == 0
 
     def save(self, step: int, state, extras=None, blocking: bool = True):
-        self.wait()
+        self.wait()  # serializes writes AND re-raises a prior async failure
+        stale = cleanup_stale_tmp(self.directory)
+        if stale:
+            self.log_fn(f"[ckpt] removed stale tmp dirs: {stale}")
         # Snapshot to host synchronously (cheap vs XLA step), write async.
         flat = _flatten(state)
         host_state = jax.tree_util.tree_unflatten(
@@ -131,28 +301,44 @@ class CheckpointManager:
         )
 
         def _write():
-            save_checkpoint(self.directory, step, host_state, extras)
+            save_checkpoint(
+                self.directory, step, host_state, extras, injector=self.injector
+            )
             self._gc()
 
         if blocking:
             _write()
         else:
-            self._thread = threading.Thread(target=_write, daemon=True)
+            def _write_captured():
+                # A daemon thread's exception otherwise evaporates — park it
+                # for wait()/save() to re-raise, so a failed write can never
+                # masquerade as a successful checkpoint.
+                try:
+                    _write()
+                except BaseException as e:  # noqa: BLE001
+                    self._error = e
+
+            self._thread = threading.Thread(target=_write_captured, daemon=True)
             self._thread.start()
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _gc(self):
-        steps = sorted(
-            int(p.name.split("_")[1])
-            for p in self.directory.iterdir()
-            if p.name.startswith("step_") and not p.name.endswith(".tmp")
-        )
+        steps = checkpoint_steps(self.directory)
         for s in steps[: -self.keep]:
             shutil.rmtree(self.directory / f"step_{s:08d}", ignore_errors=True)
 
     def restore_latest(self, abstract_state, shardings=None):
-        return restore_checkpoint(self.directory, abstract_state, shardings)
+        self.wait()  # a restore must see the last save (and its errors)
+        stale = cleanup_stale_tmp(self.directory)
+        if stale:
+            self.log_fn(f"[ckpt] removed stale tmp dirs: {stale}")
+        return restore_checkpoint(
+            self.directory, abstract_state, shardings, log_fn=self.log_fn
+        )

@@ -74,7 +74,9 @@ class Strategy:
             f"a2a_exp={e.t_a2a_exposed*1e3:.1f} "
             f"p2p={e.t_p2p*1e3:.1f} dp={e.t_dp_grad*1e3:.1f} "
             f"disp={e.t_dispatch*1e3:.1f} drop={e.drop_rate:.2f} "
-            f"bubble={e.bubble_fraction:.2f})"
+            f"bubble={e.bubble_fraction:.2f}) "
+            f"ckpt@{e.ckpt_every_steps}st goodput={e.goodput_factor*100:.2f}% "
+            f"mfu_eff={e.mfu_effective*100:5.1f}%"
         )
 
 

@@ -45,6 +45,11 @@ class Platform:
     )
     attn_eff: float = 0.55  # flash-attention fraction-of-peak
     link_bw: float = 0.0  # roofline "per-link" constant (defaults intra_node)
+    # Reliability / checkpoint pricing (Young–Daly inputs).
+    mtbf_chip_s: float = 5.4e8  # per-chip mean time between failures (s)
+    ckpt_write_bw: float = 2.5e8  # sustained ckpt bytes/s per chip (PFS/GCS)
+    ckpt_latency_s: float = 2.0  # fixed per-checkpoint overhead (barrier+open)
+    restart_s: float = 300.0  # scheduler requeue + init + restore overhead
 
     def __post_init__(self):
         if self.link_bw == 0.0:
@@ -76,6 +81,10 @@ FRONTIER = Platform(
     inter_group_bw=12.5e9,  # inter-group Dragonfly (oversubscribed)
     nics_per_node=4,
     nodes_per_group=4,  # Rosetta switch group (paper N_h = 4)
+    mtbf_chip_s=5.4e8,  # ~17 chip-years: O(10h) job MTBF at 16k GCDs
+    ckpt_write_bw=2.5e8,  # Lustre PFS, per-GCD share of aggregate
+    ckpt_latency_s=2.0,
+    restart_s=300.0,  # Slurm requeue + launch
 )
 
 # Our target: TPU v5e pod(s).
@@ -90,6 +99,10 @@ TPU_V5E = Platform(
     inter_group_bw=6.25e9,  # inter-pod DCI per chip (slow axis)
     nics_per_node=4,  # 4 ICI links (2-D torus: +-x, +-y)
     nodes_per_group=64,  # 256-chip pod = fast domain
+    mtbf_chip_s=2.6e8,  # preemptible-prone fleet: shorter effective MTBF
+    ckpt_write_bw=1e9,  # GCS per-chip sustained write share
+    ckpt_latency_s=2.0,
+    restart_s=120.0,  # pod re-provision + restore is faster than Slurm
 )
 
 PLATFORMS: Dict[str, Platform] = {p.name: p for p in (FRONTIER, TPU_V5E)}

@@ -588,6 +588,56 @@ def t_compute(m: ModelShape, t: TrainSetup, platform: Platform) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Reliability & checkpoint pricing (Young–Daly)
+# ---------------------------------------------------------------------------
+
+# Checkpoint bytes per parameter: fp32 master weights + fp32 Adam moments
+# (m, v) = 4 + 4 + 4.  The int32 step scalar is noise.
+CKPT_BYTES_PER_PARAM = 12.0
+
+
+def checkpoint_bytes(m: ModelShape) -> float:
+    """Global checkpoint size: full optimizer state (weights + moments)."""
+    return m.total_params() * CKPT_BYTES_PER_PARAM
+
+
+def checkpoint_write_time(
+    m: ModelShape, t: TrainSetup, platform: Platform
+) -> float:
+    """Seconds to persist one checkpoint: every chip writes its own shard
+    at its sustained per-chip filesystem share, plus a fixed barrier/open
+    latency.  Sharded writers make the transfer term scale 1/P."""
+    return platform.ckpt_latency_s + checkpoint_bytes(m) / (
+        platform.ckpt_write_bw * t.P
+    )
+
+
+def job_mtbf(platform: Platform, P: int) -> float:
+    """Job-level mean time between failures: P independent chips, each
+    with per-chip MTBF ``mtbf_chip_s`` — failures superpose, so the job
+    rate is P times the chip rate."""
+    return platform.mtbf_chip_s / max(P, 1)
+
+
+def young_daly_interval(t_ckpt: float, mtbf: float) -> float:
+    """Young–Daly optimal checkpoint interval  τ* = sqrt(2·t_ckpt·MTBF).
+
+    Minimizes expected waste  w(τ) = t_ckpt/τ + (τ/2 + t_recover)/MTBF:
+    checkpointing too often pays the write, too rarely pays half an
+    interval of lost work per failure."""
+    return math.sqrt(2.0 * t_ckpt * mtbf)
+
+
+def goodput_factor(
+    t_ckpt: float, mtbf: float, interval: float, t_recover: float
+) -> float:
+    """Fraction of wall-clock doing useful training at checkpoint interval
+    ``interval``: 1 − [write overhead + expected rework + restart]."""
+    waste = t_ckpt / interval + (interval / 2.0 + t_recover) / mtbf
+    return max(0.0, 1.0 - waste)
+
+
+# ---------------------------------------------------------------------------
 # Step time & MFU (Eq 12)
 # ---------------------------------------------------------------------------
 
@@ -621,6 +671,14 @@ class Estimate:
     a2a_overlap_saving: float = 0.0
     a2a_algo: str = DEFAULT_A2A
     a2a_chunks: int = 1
+    # Reliability pricing (Young–Daly): checkpoint write time, optimal
+    # interval (seconds / steps), and the availability-adjusted goodput.
+    # mfu_effective = mfu * goodput_factor is the metric long runs buy.
+    t_ckpt: float = 0.0
+    ckpt_interval_s: float = 0.0
+    ckpt_every_steps: int = 0
+    goodput_factor: float = 1.0
+    mfu_effective: float = 0.0
 
 
 def estimate(
@@ -719,6 +777,14 @@ def estimate(
     model_flops = flops_per_step(m, t)
     mfu = model_flops / (platform.peak_flops * t.P * t_step)
 
+    # Young–Daly checkpoint pricing: optimal interval from ckpt cost and
+    # job MTBF; goodput discounts MFU by write overhead + expected rework.
+    t_ckpt = checkpoint_write_time(m, t, platform)
+    mtbf = job_mtbf(platform, t.P)
+    tau = young_daly_interval(t_ckpt, mtbf)
+    t_recover = platform.restart_s + t_ckpt  # requeue + restore ≈ write
+    goodput = goodput_factor(t_ckpt, mtbf, tau, t_recover)
+
     mem0 = memory_pp(m, t, 0) if t.PP > 1 else memory_edp(m, t)
     return Estimate(
         t_compute=tc,
@@ -738,6 +804,11 @@ def estimate(
         a2a_overlap_saving=ta2a - ta2a_exposed,
         a2a_algo=t.a2a_algo,
         a2a_chunks=t.a2a_chunks,
+        t_ckpt=t_ckpt,
+        ckpt_interval_s=tau,
+        ckpt_every_steps=max(1, int(round(tau / t_step))),
+        goodput_factor=goodput,
+        mfu_effective=mfu * goodput,
     )
 
 

@@ -126,6 +126,37 @@ def _a2a_model_record(arch, shape, chips: int, plan) -> dict:
     }
 
 
+def _robustness_model_record(arch, shape, chips: int, plan) -> dict:
+    """Young–Daly checkpoint pricing for this cell: state bytes, write
+    time at the platform's sustained bandwidth, job MTBF, the optimal
+    interval in seconds and steps, and the availability-adjusted goodput
+    (repro.core.resource_model)."""
+    from repro.core import resource_model as rm
+    from repro.core.platform import TPU_V5E
+
+    if shape.kind != "train":
+        return {}
+    m = rm.ModelShape.from_arch(arch)
+    PP = max(plan.pp, 1)
+    EP = max(plan.ep, 1)
+    DP = max(chips // (PP * EP), 1)
+    t = rm.TrainSetup(
+        b=shape.global_batch, s=shape.seq_len, PP=PP, EP=EP, DP=DP,
+        zero="world",
+    )
+    est = rm.estimate(m, t, TPU_V5E)
+    return {
+        "ckpt_bytes": rm.checkpoint_bytes(m),
+        "t_ckpt_s": est.t_ckpt,
+        "job_mtbf_s": rm.job_mtbf(TPU_V5E, t.P),
+        "ckpt_interval_s": est.ckpt_interval_s,
+        "ckpt_every_steps": est.ckpt_every_steps,
+        "goodput_factor": est.goodput_factor,
+        "mfu": est.mfu,
+        "mfu_effective": est.mfu_effective,
+    }
+
+
 def choose_memory_policy(arch, shape, chips: int):
     """Planner-informed defaults so the full config fits 16 GB/chip."""
     params = arch.total_params()
@@ -241,6 +272,10 @@ def run_cell(
         # Ranked a2a_algo x a2a_chunks enumeration for this cell (the
         # planner's knob, priced by the overlap-aware resource model).
         record["a2a_model"] = _a2a_model_record(arch, shape, chips, plan)
+        # Young–Daly checkpoint pricing (interval + goodput) for the cell.
+        record["robustness_model"] = _robustness_model_record(
+            arch, shape, chips, plan
+        )
 
         with plan.mesh:
             if shape.kind == "train":

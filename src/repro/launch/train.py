@@ -37,7 +37,10 @@ def main():
                     help="virtual stages per pipeline stage (interleaved "
                          "schedules); default: the planner's choice, else 1")
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-every", type=int, default=None,
+                    help="checkpoint every N steps; default: the resource "
+                         "model's Young-Daly optimal interval (clamped to "
+                         "[1, steps/2]), else 50")
     ap.add_argument("--corpus", default=None, help="memmap token corpus path")
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
     ap.add_argument("--dispatch", default=None,
@@ -77,6 +80,22 @@ def main():
     if best is not None:
         print(f"[planner] production-strategy for {args.arch} @256xv5e:")
         print("          " + best.describe())
+
+    # Checkpoint cadence: an explicit --ckpt-every wins, else default to
+    # the resource model's Young-Daly optimal interval (sqrt(2*t_ckpt*MTBF)
+    # priced from state bytes + platform write bandwidth), clamped to the
+    # run length so short runs still checkpoint at least once.
+    if args.ckpt_every is None:
+        if best is not None:
+            e = best.estimate
+            hi = max(args.steps // 2, 1)
+            args.ckpt_every = min(max(e.ckpt_every_steps, 1), hi)
+            print(f"[planner] ckpt-every defaulted to {args.ckpt_every} "
+                  f"steps (Young-Daly: t_ckpt={e.t_ckpt:.1f}s "
+                  f"tau={e.ckpt_interval_s:.0f}s "
+                  f"goodput={e.goodput_factor*100:.2f}%)")
+        else:
+            args.ckpt_every = 50
 
     # The schedule (and its vstage depth) binds planner -> plan -> executor:
     # an explicit flag wins, else inherit the planner's ranked choice.  An

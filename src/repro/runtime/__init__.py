@@ -1,1 +1,9 @@
+from repro.runtime.faults import (  # noqa: F401
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    InjectedWriteError,
+    SimulatedCrash,
+    TransientDataError,
+)
 from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: F401

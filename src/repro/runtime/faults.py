@@ -1,0 +1,202 @@
+"""Deterministic fault injection for the fault-tolerant runtime.
+
+Long MoE runs live or die on their recovery paths — and recovery paths
+that are never executed rot.  This module makes every failure mode the
+runtime claims to survive *injectable on demand*, deterministically, so
+the chaos suite (tests/test_faults.py) and the robustness bench can drive
+each one and assert exact recovery behavior.
+
+A :class:`FaultPlan` is a list of :class:`FaultSpec` entries — (site,
+step, count, payload).  A spec *arms* its site starting at ``step`` and
+fires on the first ``count`` queries at-or-after it, then exhausts.
+Exhaustion (rather than a pure step predicate) is what makes recovery
+loops converge: after an anomaly rollback re-enters the loop at an
+earlier step, a consumed ``train.nonfinite`` spec does NOT re-fire when
+the run re-reaches the faulted step — exactly like a real transient.
+
+Injection sites (threaded through trainer / checkpoint manager / data
+path / serving engine):
+
+========================== ==================================================
+``ckpt.crash_before_rename`` process dies mid-checkpoint-write, BEFORE the
+                             atomic rename — the ``.tmp`` dir is left behind
+``ckpt.crash_after_rename``  process dies right after the rename — the new
+                             checkpoint is complete and must verify
+``ckpt.write_fail``          the array write itself raises (full disk, I/O
+                             error) — exercises the async-writer error path
+``data.transient``           the data source raises a retryable error —
+                             exercises the trainer's retry/backoff
+``train.nonfinite``          the step's loss/grads are scaled by ``payload``
+                             (default NaN) — exercises skip-step + rollback
+``train.slow_step``          sleep ``payload`` seconds inside the timed
+                             region — exercises the straggler monitor
+``train.sigterm``            a real SIGTERM is delivered to the process —
+                             exercises preemption (final ckpt + clean stop)
+``serve.stall``              the engine skips one whole scheduler iteration
+                             — burns per-request deadline budget
+========================== ==================================================
+
+Every firing is logged as ``{"site", "step", "ordinal", "payload"}`` on
+``FaultInjector.log`` and through ``log_fn``, so tests can assert not
+just *that* the run recovered but *what* it recovered from.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+SITES = (
+    "ckpt.crash_before_rename",
+    "ckpt.crash_after_rename",
+    "ckpt.write_fail",
+    "data.transient",
+    "train.nonfinite",
+    "train.slow_step",
+    "train.sigterm",
+    "serve.stall",
+)
+
+
+class SimulatedCrash(RuntimeError):
+    """The injected stand-in for the process dying mid-operation."""
+
+
+class TransientDataError(IOError):
+    """A retryable data-source failure (flaky filesystem / network read)."""
+
+
+class InjectedWriteError(IOError):
+    """An injected checkpoint-write failure (full disk, I/O error)."""
+
+
+_RAISES: Dict[str, type] = {
+    "ckpt.crash_before_rename": SimulatedCrash,
+    "ckpt.crash_after_rename": SimulatedCrash,
+    "ckpt.write_fail": InjectedWriteError,
+    "data.transient": TransientDataError,
+}
+
+
+@dataclass
+class FaultSpec:
+    """One planned fault: arm ``site`` at ``step``, fire ``count`` times.
+
+    ``payload`` carries the site-specific magnitude: the loss/grad scale
+    for ``train.nonfinite`` (NaN by default), seconds for
+    ``train.slow_step``; ignored elsewhere.
+    """
+
+    site: str
+    step: int
+    count: int = 1
+    payload: float = float("nan")
+
+    def __post_init__(self):
+        assert self.site in SITES, f"unknown fault site {self.site!r}"
+        assert self.step >= 0 and self.count >= 1
+
+
+@dataclass
+class FaultPlan:
+    """A deterministic, seed-stamped set of faults for one run."""
+
+    specs: List[FaultSpec] = field(default_factory=list)
+    seed: int = 0
+
+    @classmethod
+    def random(
+        cls,
+        seed: int,
+        total_steps: int,
+        sites: Sequence[str] = ("data.transient", "train.slow_step",
+                               "train.nonfinite"),
+        max_faults: int = 3,
+    ) -> "FaultPlan":
+        """Seed-driven chaos: same seed -> same plan, forever."""
+        import numpy as np
+
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, max_faults + 1))
+        specs = [
+            FaultSpec(
+                site=sites[int(rng.integers(0, len(sites)))],
+                step=int(rng.integers(0, max(total_steps, 1))),
+                payload=float("nan"),
+            )
+            for _ in range(n)
+        ]
+        for s in specs:
+            if s.site == "train.slow_step":
+                s.payload = 0.05
+        return cls(specs=specs, seed=seed)
+
+
+class FaultInjector:
+    """Runtime side of a :class:`FaultPlan`: query sites, consume specs.
+
+    A spec fires when its site is queried at ``step >= spec.step`` and it
+    has firings left; multiple specs per site are consumed in plan order.
+    An injector with no plan is a no-op (the production default — every
+    hook below costs one dict lookup).
+    """
+
+    def __init__(
+        self,
+        plan: Optional[FaultPlan] = None,
+        log_fn: Callable[[str], None] = print,
+    ):
+        self.plan = plan or FaultPlan()
+        self.log_fn = log_fn
+        self.log: List[Dict] = []
+        self._by_site: Dict[str, List[List]] = {}
+        for spec in self.plan.specs:
+            # mutable remaining-count per spec
+            self._by_site.setdefault(spec.site, []).append([spec, spec.count])
+
+    # -- core ----------------------------------------------------------------
+
+    def fire(self, site: str, step: int) -> Optional[FaultSpec]:
+        """Consume and return the first armed spec for ``site``, else None."""
+        for entry in self._by_site.get(site, ()):
+            spec, remaining = entry
+            if remaining > 0 and step >= spec.step:
+                entry[1] -= 1
+                rec = {
+                    "site": site,
+                    "step": step,
+                    "ordinal": len(self.log),
+                    "payload": spec.payload,
+                }
+                self.log.append(rec)
+                self.log_fn(f"[fault] {site} fired at step {step}")
+                return spec
+        return None
+
+    # -- site-flavored sugar -------------------------------------------------
+
+    def raise_if(self, site: str, step: int) -> None:
+        """Raise the site's exception class if an armed spec fires."""
+        if self.fire(site, step) is not None:
+            raise _RAISES[site](f"injected {site} at step {step}")
+
+    def sleep_if(self, site: str, step: int) -> float:
+        """Sleep the spec's payload seconds if armed; returns seconds slept."""
+        spec = self.fire(site, step)
+        if spec is None:
+            return 0.0
+        time.sleep(spec.payload)
+        return spec.payload
+
+    def payload_if(self, site: str, step: int) -> Optional[float]:
+        """Return the spec's payload if armed, else None."""
+        spec = self.fire(site, step)
+        return None if spec is None else spec.payload
+
+    # -- introspection (tests) -----------------------------------------------
+
+    def fired(self, site: Optional[str] = None) -> int:
+        if site is None:
+            return len(self.log)
+        return sum(1 for r in self.log if r["site"] == site)

@@ -19,10 +19,21 @@ Production concerns handled here (DESIGN.md §3):
 * **elastic scaling** — checkpoints are mesh-independent (see
   ``repro.checkpoint``): restarting on a larger/smaller mesh re-shards
   automatically; the trainer only needs the new plan.
+* **anomaly sentinel + rollback** — the jitted step refuses non-finite
+  (or, with ``gnorm_skip_cap``, spiking) updates and reports
+  ``metrics["skipped"]``; after ``anomaly_rollback_after`` consecutive
+  skips the trainer restores the last *intact* checkpoint and re-enters
+  the loop at the restored step.  The data stream being a pure function
+  of step makes the re-trained trajectory bit-for-bit the fault-free one.
+* **transient data errors** — ``batch_at``/``next`` failures retry with
+  exponential backoff before surfacing.
+* **fault injection** — every recovery path above is driveable through a
+  ``runtime.faults.FaultInjector`` (chaos suite + robustness bench).
 """
 
 from __future__ import annotations
 
+import os
 import signal
 import time
 from dataclasses import dataclass, field
@@ -35,6 +46,7 @@ from repro.checkpoint import CheckpointManager
 from repro.core import migration as mig
 from repro.models.model import LanguageModel
 from repro.optim import OptimizerConfig
+from repro.runtime.faults import FaultInjector, TransientDataError
 from repro import training
 
 
@@ -51,6 +63,13 @@ class TrainerConfig:
     migrate_every: int = 20
     migrate_threshold: float = 1.3  # max/mean group load
     migrate_max_swaps: int = 100
+    # anomaly sentinel -> skip-step -> rollback
+    gnorm_skip_cap: float = 0.0  # >0: also skip when grad_norm exceeds this
+    anomaly_rollback_after: int = 3  # K consecutive skips trigger rollback
+    max_rollbacks: int = 3  # bounded retry budget for rollbacks
+    # transient data-source errors
+    data_retries: int = 3
+    data_backoff_s: float = 0.05  # doubles per retry
 
 
 class Trainer:
@@ -60,19 +79,28 @@ class Trainer:
         opt_cfg: OptimizerConfig,
         cfg: TrainerConfig,
         log_fn: Callable[[str], None] = print,
+        injector: Optional[FaultInjector] = None,
     ):
         self.lm = lm
         self.cfg = cfg
         self.opt_cfg = opt_cfg
         self.log = log_fn
+        self.injector = (
+            injector if injector is not None else FaultInjector(log_fn=log_fn)
+        )
         self.train_step = jax.jit(
-            training.make_train_step(lm, opt_cfg),
+            training.make_train_step(
+                lm, opt_cfg,
+                gnorm_skip_cap=cfg.gnorm_skip_cap
+                if cfg.gnorm_skip_cap > 0 else None,
+            ),
             donate_argnums=(0,),
         )
         self.ckpt = (
             CheckpointManager(
                 cfg.checkpoint_dir, keep=cfg.checkpoint_keep,
-                every=cfg.checkpoint_every,
+                every=cfg.checkpoint_every, injector=self.injector,
+                log_fn=log_fn,
             )
             if cfg.checkpoint_dir
             else None
@@ -86,6 +114,8 @@ class Trainer:
         self.step_times: List[float] = []
         self.stragglers: List[int] = []
         self.migrations: List[Dict[str, Any]] = []
+        self.anomalies: List[Dict[str, Any]] = []
+        self.rollbacks: List[Dict[str, Any]] = []
         self._stop = False
 
     # -- fault handling ------------------------------------------------------
@@ -182,6 +212,73 @@ class Trainer:
             "step": state["step"],
         }
 
+    # -- recovery helpers ------------------------------------------------------
+
+    def _abstract_and_shardings(self, state):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
+        )
+        # The PLAN's state shardings: restored leaves must land on-device
+        # with the mesh layout the step expects — not replicated, and not
+        # committed to whatever single device a fresh eager init sat on.
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(self.lm.plan.mesh, s),
+            training.state_specs(self.lm),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        return abstract, shardings
+
+    def _next_batch(self, data, data_it, indexed: bool, step: int):
+        """Fetch the step's batch, retrying transient data-source errors
+        with exponential backoff before surfacing them."""
+        delay = self.cfg.data_backoff_s
+        for attempt in range(self.cfg.data_retries + 1):
+            try:
+                self.injector.raise_if("data.transient", step)
+                return data.batch_at(step) if indexed else next(data_it)
+            except (TransientDataError, OSError) as e:
+                if attempt >= self.cfg.data_retries:
+                    raise
+                self.log(
+                    f"[data] transient error at step {step}: {e} "
+                    f"(retry {attempt + 1}/{self.cfg.data_retries} "
+                    f"in {delay * 1e3:.0f} ms)"
+                )
+                time.sleep(delay)
+                delay *= 2
+
+    def _rollback(self, state, step: int):
+        """Restore the newest intact checkpoint and return (state, step) to
+        re-enter the loop at.  Exact resume: the data stream is a pure
+        function of step, so the re-trained steps match the fault-free
+        trajectory bit-for-bit."""
+        if self.ckpt is None:
+            raise RuntimeError(
+                f"step {step}: {self.cfg.anomaly_rollback_after} consecutive "
+                f"anomalous steps and no checkpoint_dir to roll back to"
+            )
+        if len(self.rollbacks) >= self.cfg.max_rollbacks:
+            raise RuntimeError(
+                f"step {step}: rollback budget exhausted "
+                f"({self.cfg.max_rollbacks}) — anomalies persist"
+            )
+        abstract, shardings = self._abstract_and_shardings(state)
+        try:
+            new_state, ck_step = self.ckpt.restore_latest(abstract, shardings)
+        except FileNotFoundError as e:
+            raise RuntimeError(
+                f"step {step}: anomaly rollback requested but no intact "
+                f"checkpoint exists"
+            ) from e
+        self.rollbacks.append({"at_step": step, "to_step": ck_step})
+        self.log(
+            f"[rollback] step={step}: {self.cfg.anomaly_rollback_after} "
+            f"consecutive anomalies -> restored step {ck_step}"
+        )
+        return new_state, ck_step
+
     # -- main loop -------------------------------------------------------------
 
     def fit(self, state, data: Iterator) -> Dict[str, Any]:
@@ -199,10 +296,8 @@ class Trainer:
         start_step = int(jax.device_get(state["step"]))
         if self.ckpt is not None:
             try:
-                abstract = jax.tree.map(
-                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
-                )
-                state, ck_step = self.ckpt.restore_latest(abstract)
+                abstract, shardings = self._abstract_and_shardings(state)
+                state, ck_step = self.ckpt.restore_latest(abstract, shardings)
                 start_step = ck_step
                 self.log(f"[trainer] resumed from step {ck_step}")
             except FileNotFoundError:
@@ -215,13 +310,25 @@ class Trainer:
         indexed = hasattr(data, "batch_at")
         data_it = None if indexed else iter(data)
         step = start_step
-        for step in range(start_step, self.cfg.total_steps):
+        anomaly_streak = 0
+        while step < self.cfg.total_steps:
+            # Simulated preemption: deliver a REAL signal so the installed
+            # handler (final checkpoint + stop) is what gets exercised.
+            if self.injector.fire("train.sigterm", step) is not None:
+                os.kill(os.getpid(), signal.SIGTERM)
             if self._stop:
                 break
-            batch = data.batch_at(step) if indexed else next(data_it)
+            batch = self._next_batch(data, data_it, indexed, step)
+            scale = self.injector.payload_if("train.nonfinite", step)
+            if scale is not None:
+                batch = {**batch, "fault_scale": np.float32(scale)}
             t0 = time.perf_counter()
+            # Slow-step injection sleeps inside the timed window so the
+            # straggler monitor sees it like a real slow host.
+            self.injector.sleep_if("train.slow_step", step)
             state, metrics = self.train_step(state, batch)
             loss = float(jax.device_get(metrics["loss"]))
+            skipped = bool(jax.device_get(metrics.get("skipped", 0)))
             dt = time.perf_counter() - t0
             self.step_times.append(dt)
             # Straggler detection on the step-time EMA.
@@ -233,6 +340,27 @@ class Trainer:
                         f"[straggler] step={step} took {dt*1e3:.0f}ms "
                         f"(ema {ema*1e3:.0f}ms)"
                     )
+            if skipped:
+                # The sentinel refused the update (state unchanged): count
+                # the streak, roll back to the last good checkpoint once it
+                # crosses the budget, and re-enter AT the restored step.
+                gnorm = float(jax.device_get(metrics["grad_norm"]))
+                anomaly_streak += 1
+                self.anomalies.append(
+                    {"step": step, "loss": loss, "grad_norm": gnorm}
+                )
+                self.log(
+                    f"[sentinel] step={step} anomalous update skipped "
+                    f"(loss={loss:.4g} gnorm={gnorm:.4g}) "
+                    f"[{anomaly_streak}/{self.cfg.anomaly_rollback_after}]"
+                )
+                if anomaly_streak >= self.cfg.anomaly_rollback_after:
+                    state, step = self._rollback(state, step)
+                    anomaly_streak = 0
+                    continue
+                step += 1
+                continue
+            anomaly_streak = 0
             if self.load_stats is not None and "expert_load" in metrics:
                 loads = np.asarray(jax.device_get(metrics["expert_load"]))
                 # (reps, n_moe_pos, E) -> stack order (pos-major, rep)
@@ -248,12 +376,16 @@ class Trainer:
                 )
             if self.ckpt is not None and self.ckpt.should_save(step + 1):
                 self.ckpt.save(step + 1, state, blocking=False)
+            step += 1
+        last_step = max(step - 1, start_step)
         if self.ckpt is not None:
-            self.ckpt.save(step + 1, state, blocking=True)
+            self.ckpt.save(step, state, blocking=True)
         return {
             "state": state,
             "metrics": metrics,
             "stragglers": self.stragglers,
             "migrations": self.migrations,
-            "last_step": step,
+            "anomalies": self.anomalies,
+            "rollbacks": self.rollbacks,
+            "last_step": last_step,
         }

@@ -10,10 +10,11 @@ with their training counterparts (``repro.core.resource_model`` /
 ``repro.core.planner``); ``repro.launch.serve`` is the CLI entry point.
 """
 
-from repro.serving.engine import Engine, Request, ServeConfig
+from repro.serving.engine import AbortInfo, Engine, Request, ServeConfig
 from repro.serving.kv_cache import BlockPool, PagedLayout
 
 __all__ = [
+    "AbortInfo",
     "BlockPool",
     "Engine",
     "PagedLayout",

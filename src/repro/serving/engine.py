@@ -22,6 +22,13 @@ Scheduling policy (deterministic; the trace test pins it):
   token, the *youngest* running sequence is evicted back to the FRONT of
   the queue (prompt + generated so far), freeing its pages — LIFO
   preemption + FIFO re-admission keeps the oldest work progressing.
+* **Graceful degradation**: a request may carry a ``deadline_step``;
+  once the engine can prove the deadline is infeasible (remaining tokens
+  exceed remaining steps) the request is SHED with a structured
+  :class:`AbortInfo` rather than burning pool pages on a doomed answer.
+  ``admit_reserve_blocks`` adds admission backpressure: new work is held
+  in the queue while the pool is too close to exhaustion to let running
+  sequences finish without preemption churn.
 
 The engine is intentionally host-driven: all device work happens in two
 jitted functions (``LanguageModel.prefill_paged`` / ``decode_step_paged``)
@@ -39,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.faults import FaultInjector
 from repro.serving.kv_cache import BlockPool, PagedLayout
 
 
@@ -48,11 +56,24 @@ class Request:
     tokens: np.ndarray  # (prompt_len,) int32
     max_new_tokens: int
     eos_id: Optional[int] = None
+    # Engine-step number by which the request must FINISH; None = no SLO.
+    deadline_step: Optional[int] = None
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens, np.int32)
         assert self.tokens.ndim == 1 and self.tokens.size >= 1
         assert self.max_new_tokens >= 1
+
+
+@dataclass(frozen=True)
+class AbortInfo:
+    """Structured record of a shed request (graceful degradation)."""
+
+    rid: int
+    step: int  # engine step at which it was shed
+    reason: str  # e.g. "deadline"
+    detail: str
+    generated: List[int]  # tokens produced before the abort (partial answer)
 
 
 @dataclass(frozen=True)
@@ -67,6 +88,9 @@ class ServeConfig:
     prefill_tokens_per_step: int = 512  # admission token budget per step
     cache_dtype: str = "float32"  # "bfloat16" on real accelerators
     max_steps: int = 10_000  # run() safety valve
+    # Admission backpressure: keep this many free pages per sequence that
+    # would be running post-admission; 0 disables (pure FIFO-fit).
+    admit_reserve_blocks: int = 0
 
     def layout(self) -> PagedLayout:
         return PagedLayout(
@@ -102,10 +126,17 @@ def _bucket(n: int, lo: int = 8) -> int:
 class Engine:
     """Continuous-batching engine over one LanguageModel + parameter set."""
 
-    def __init__(self, lm, params, cfg: ServeConfig = ServeConfig()):
+    def __init__(
+        self,
+        lm,
+        params,
+        cfg: ServeConfig = ServeConfig(),
+        injector: Optional[FaultInjector] = None,
+    ):
         self.lm = lm
         self.params = params
         self.cfg = cfg
+        self.injector = injector if injector is not None else FaultInjector()
         layout = cfg.layout()
         self.pool = BlockPool(layout)
         self.cache = lm.init_paged_cache(
@@ -114,6 +145,8 @@ class Engine:
         self.queue: Deque[Request] = deque()
         self.running: Dict[int, _SeqState] = {}  # slot -> state
         self.finished: Dict[int, List[int]] = {}
+        self.aborted: Dict[int, AbortInfo] = {}  # rid -> shed record
+        self.backpressure_steps = 0  # admissions deferred by the reserve
         # Tokens generated before a preemption (the re-queued request
         # carries them in its prompt; outputs must still report them).
         self._gen_prefix: Dict[int, List[int]] = {}
@@ -159,9 +192,78 @@ class Engine:
 
     def step(self) -> None:
         self.step_no += 1
+        # Injected scheduler stall: the whole iteration is lost (as when
+        # the host is wedged behind a slow collective) — deadline budget
+        # burns, nothing progresses.
+        if self.injector.fire("serve.stall", self.step_no) is not None:
+            self.trace.append(("stall", self.step_no))
+            return
+        self._shed_expired()
         self._admit_and_prefill()
         self._decode_once()
         self.pool.check_invariants()
+
+    # -- graceful degradation -------------------------------------------------
+
+    def _shed_expired(self) -> None:
+        """Shed every request whose deadline is provably infeasible.
+
+        A running sequence gains one token per step, so it finishes at
+        ``step_no + remaining - 1``.  A queued request admitted THIS step
+        gets two tokens now (prefill + decode) and one per later step —
+        earliest finish ``step_no + max(max_new_tokens - 2, 0)``.  Either
+        landing past the deadline means the tokens would be wasted work;
+        shed now, with the partial answer in the abort record.
+        """
+        for slot in sorted(self.running):
+            st = self.running[slot]
+            dl = st.req.deadline_step
+            if dl is None:
+                continue
+            remaining = st.req.max_new_tokens - len(st.generated)
+            finish = self.step_no + remaining - 1
+            if finish > dl:
+                self._abort_running(
+                    slot,
+                    "deadline",
+                    f"running: {remaining} tokens left, earliest finish "
+                    f"step {finish} > deadline {dl}",
+                )
+        kept: Deque[Request] = deque()
+        while self.queue:
+            req = self.queue.popleft()
+            dl = req.deadline_step
+            if dl is not None:
+                finish = self.step_no + max(req.max_new_tokens - 2, 0)
+                if finish > dl:
+                    self._record_abort(
+                        req,
+                        self._gen_prefix.pop(req.rid, []),
+                        "deadline",
+                        f"queued: earliest finish step {finish} > "
+                        f"deadline {dl}",
+                    )
+                    continue
+            kept.append(req)
+        self.queue = kept
+
+    def _abort_running(self, slot: int, reason: str, detail: str) -> None:
+        st = self.running.pop(slot)
+        self.pool.release(slot)
+        gen = self._gen_prefix.pop(st.req.rid, []) + list(st.generated)
+        self._record_abort(st.req, gen, reason, detail)
+
+    def _record_abort(
+        self, req: Request, generated: List[int], reason: str, detail: str
+    ) -> None:
+        self.aborted[req.rid] = AbortInfo(
+            rid=req.rid,
+            step=self.step_no,
+            reason=reason,
+            detail=detail,
+            generated=generated,
+        )
+        self.trace.append(("abort", self.step_no, req.rid, reason))
 
     # -- admission + prefill -------------------------------------------------
 
@@ -180,6 +282,17 @@ class Engine:
                     break  # budget partially spent; head keeps priority
             if not self.pool.can_admit(plen, req.max_new_tokens):
                 break  # strict FIFO: never skip the head (no starvation)
+            if self.cfg.admit_reserve_blocks > 0:
+                # Backpressure: admitting must leave headroom for every
+                # post-admission running sequence to keep decoding without
+                # immediate preemption churn.
+                need = self.pool.layout.blocks_for(plen)
+                reserve = self.cfg.admit_reserve_blocks * (
+                    len(self.running) + 1
+                )
+                if self.pool.free_blocks - need < reserve:
+                    self.backpressure_steps += 1
+                    break
             self.queue.popleft()
             slot = self.pool.admit(plen)
             st = _SeqState(req=req, slot=slot, admitted_at=self.step_no)
@@ -282,6 +395,7 @@ class Engine:
                 tokens=merged,
                 max_new_tokens=remaining,
                 eos_id=st.req.eos_id,
+                deadline_step=st.req.deadline_step,
             )
         )
         self.trace.append(("preempt", self.step_no, st.req.rid))

@@ -111,7 +111,26 @@ def batch_specs(lm: LanguageModel, shape: ShapeSpec) -> Dict[str, Any]:
 # ---------------------------------------------------------------------------
 
 
-def make_train_step(lm: LanguageModel, opt_cfg: OptimizerConfig):
+def make_train_step(
+    lm: LanguageModel,
+    opt_cfg: OptimizerConfig,
+    gnorm_skip_cap: Optional[float] = None,
+):
+    """Build the jitted train step.
+
+    The step carries its own **anomaly sentinel**: a non-finite loss or
+    grad norm (or, with ``gnorm_skip_cap``, a grad-norm spike above the
+    cap) selects the OLD state instead of the update — a skip-step.  The
+    guard must live *inside* the jit because the trainer donates the input
+    state (``donate_argnums=(0,)``): by the time the host could inspect
+    the loss, the pre-step buffers are gone.  ``metrics["skipped"]``
+    reports the decision to the trainer's rollback counter.
+
+    An optional scalar ``batch["fault_scale"]`` (runtime.faults
+    ``train.nonfinite``) multiplies the loss AND grads after they are
+    computed — on both the AD and the schedule-executor paths — so the
+    chaos suite can force an anomalous step deterministically.
+    """
     compute_dtype = DTYPES[lm.plan.compute_dtype]
     pipelined = lm.plan.pp_axis is not None and lm.plan.pp > 1
 
@@ -124,6 +143,11 @@ def make_train_step(lm: LanguageModel, opt_cfg: OptimizerConfig):
         )
 
     def train_step(state, batch):
+        # The injected fault scale is step metadata, not model input — pop
+        # it before either loss path (the pipeline executor would otherwise
+        # try to microbatch a scalar).
+        batch = dict(batch)
+        fault_scale = batch.pop("fault_scale", None)
         if pipelined:
             # Schedule-driven executor: the pipeline computes its own
             # backward in the bound schedule's op order (1F1B executes with
@@ -139,6 +163,15 @@ def make_train_step(lm: LanguageModel, opt_cfg: OptimizerConfig):
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True, allow_int=True
             )(state["params"])
+        if fault_scale is not None:
+            loss = loss * fault_scale
+            grads = jax.tree.map(
+                lambda g: g * fault_scale
+                if hasattr(g, "dtype") and jnp.issubdtype(g.dtype, jnp.floating)
+                else g,
+                grads,
+            )
+            metrics = {**metrics, "loss": loss}
         new_params, new_opt, opt_metrics = adamw_update(
             opt_cfg, state["params"], grads, {k: state[k] for k in ("m", "v", "step")}
         )
@@ -146,6 +179,14 @@ def make_train_step(lm: LanguageModel, opt_cfg: OptimizerConfig):
         if metrics.get("expert_load") is None:
             metrics.pop("expert_load", None)
         new_state = {"params": new_params, **new_opt}
+        # Anomaly sentinel: a poisoned update must not reach the state.
+        ok = jnp.isfinite(loss) & jnp.isfinite(opt_metrics["grad_norm"])
+        if gnorm_skip_cap is not None:
+            ok = ok & (opt_metrics["grad_norm"] < gnorm_skip_cap)
+        new_state = jax.tree.map(
+            lambda new, old: jnp.where(ok, new, old), new_state, state
+        )
+        metrics["skipped"] = jnp.logical_not(ok).astype(jnp.int32)
         return new_state, metrics
 
     return train_step

@@ -1,0 +1,145 @@
+"""Child process for test_faults.py (8 host devices).
+
+Covers the two recovery claims that need a real process / real mesh:
+
+* **SIGTERM preemption**: an injected SIGTERM mid-run triggers the final
+  checkpoint + clean stop; a restarted trainer resumes and reproduces the
+  fault-free loss trajectory bit-for-bit.
+* **Multi-device resume parity**: restoring through the CheckpointManager
+  threads the LIVE state's shardings — restored leaves land with the
+  plan's layout (not replicated), and the resumed run matches the
+  uninterrupted oracle.
+"""
+
+import dataclasses
+import json
+import tempfile
+
+import jax
+import numpy as np
+
+from repro import training
+from repro.configs import get_arch
+from repro.data import SyntheticTokens
+from repro.models.model import LanguageModel
+from repro.optim import OptimizerConfig
+from repro.runtime import Trainer, TrainerConfig
+from repro.runtime.faults import FaultInjector, FaultPlan, FaultSpec
+from repro.sharding import host_mesh, make_plan, single_device_plan
+
+RESULTS = {}
+
+
+def quiet(_msg):
+    pass
+
+
+def check_sigterm_resume():
+    """Injected SIGTERM -> final ckpt -> restart reproduces the fault-free
+    trajectory exactly (single device, deterministic CPU XLA)."""
+    arch = get_arch("smollm-360m").reduced()
+    plan = single_device_plan(arch)
+    opt = OptimizerConfig(lr=1e-3)
+    data = SyntheticTokens(arch.vocab_size, 2, 32)
+    total = 14
+
+    def run(ckpt_dir, injector=None, steps=total):
+        with plan.mesh:
+            lm = LanguageModel(arch, plan)
+            state = training.init_state(lm, jax.random.PRNGKey(0), opt)
+            tr = Trainer(
+                lm, opt,
+                TrainerConfig(
+                    total_steps=steps, checkpoint_dir=ckpt_dir,
+                    checkpoint_every=4, log_every=1000,
+                ),
+                log_fn=quiet, injector=injector,
+            )
+            return tr.fit(state, data)
+
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        oracle = run(d1)
+        inj = FaultInjector(
+            FaultPlan([FaultSpec("train.sigterm", step=9)]), log_fn=quiet
+        )
+        preempted = run(d2, injector=inj)
+        RESULTS["sigterm_fired"] = inj.fired("train.sigterm") == 1
+        RESULTS["sigterm_stopped_early"] = (
+            preempted["last_step"] < total - 1
+        )
+        resumed = run(d2)  # restart: resumes from the preemption ckpt
+        RESULTS["sigterm_resume_bitexact"] = float(
+            resumed["metrics"]["loss"]
+        ) == float(oracle["metrics"]["loss"])
+
+
+def check_multidevice_resume_parity():
+    """Resume on a (2,4) mesh: restored leaves carry the live state's
+    shardings and the resumed loss matches the uninterrupted oracle."""
+    arch = get_arch("granite-moe-3b-a800m").reduced()
+    arch = arch.replace(
+        moe=dataclasses.replace(arch.moe, capacity_factor=8.0,
+                                aux_loss_coef=0.0)
+    )
+    mesh = host_mesh((2, 4), ("data", "model"))
+    plan = make_plan(mesh, arch)
+    opt = OptimizerConfig(lr=1e-3)
+    data = SyntheticTokens(arch.vocab_size, 8, 32)
+    total = 6
+
+    def make(ckpt_dir, steps):
+        lm = LanguageModel(arch, plan)
+        state = training.init_state(lm, jax.random.PRNGKey(0), opt)
+        tr = Trainer(
+            lm, opt,
+            TrainerConfig(
+                total_steps=steps, checkpoint_dir=ckpt_dir,
+                checkpoint_every=3, log_every=1000,
+            ),
+            log_fn=quiet,
+        )
+        return lm, state, tr
+
+    with plan.mesh, tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        _, state, tr = make(d1, total)
+        oracle = tr.fit(state, data)
+
+        _, state, tr = make(d2, 3)
+        tr.fit(state, data)  # first leg: ckpt at step 3
+
+        # Direct restore check: leaves land with the PLAN's layout, and
+        # at least one of them is actually sharded (the parity would be
+        # vacuous on an all-replicated plan).
+        _, state2, tr2 = make(d2, total)
+        abstract, plan_shardings = tr2._abstract_and_shardings(state2)
+        restored, ck_step = tr2.ckpt.restore_latest(abstract, plan_shardings)
+        flat_r = jax.tree.leaves(restored)
+        flat_s = jax.tree.leaves(plan_shardings)
+        RESULTS["resume_ckpt_step"] = ck_step == 3
+        RESULTS["resume_shardings_match"] = all(
+            r.sharding == s for r, s in zip(flat_r, flat_s)
+        )
+        RESULTS["resume_any_leaf_sharded"] = any(
+            not r.sharding.is_fully_replicated for r in flat_r
+        )
+
+        # End-to-end: the resumed run's final loss matches the oracle.
+        # Restored leaves enter step 3 via device_put layouts while the
+        # oracle's flowed out of step 2's jit — cross-layout fp32
+        # reduction-order noise is ~3e-4 here (same bound as the other
+        # multi-device oracles); bit-for-bit resume is asserted on the
+        # single-device paths.
+        resumed = tr2.fit(state2, data)
+        RESULTS["resume_loss_match"] = (
+            abs(float(resumed["metrics"]["loss"])
+                - float(oracle["metrics"]["loss"])) < 2e-3
+        )
+
+
+if __name__ == "__main__":
+    assert len(jax.devices()) == 8, jax.devices()
+    check_sigterm_resume()
+    check_multidevice_resume_parity()
+    print("RESULTS " + json.dumps({k: bool(v) for k, v in RESULTS.items()}))

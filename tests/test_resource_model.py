@@ -432,3 +432,59 @@ def test_counts_exchange_priced():
     )
     assert rm.dispatch_costs(m, t_cap).counts_bytes_per_layer == 0.0
     assert rm.dispatch_costs(m, t_r1).counts_bytes_per_layer == 0.0
+
+
+# ---------------------------------------------------------------------------
+# MTBF-aware checkpoint pricing (Young-Daly)
+# ---------------------------------------------------------------------------
+
+
+def test_young_daly_closed_form():
+    m = rm.ModelShape.from_arch(get_arch("granite-moe-3b-a800m"))
+    t = _setup(PP=4, EP=4, DP=16, zero="world")
+    t_ckpt = rm.checkpoint_write_time(m, t, FRONTIER)
+    mtbf = rm.job_mtbf(FRONTIER, t.P)
+    tau = rm.young_daly_interval(t_ckpt, mtbf)
+    assert tau == pytest.approx(np.sqrt(2.0 * t_ckpt * mtbf))
+    # write time = fixed latency + bytes over aggregate bandwidth
+    assert t_ckpt == pytest.approx(
+        FRONTIER.ckpt_latency_s
+        + rm.checkpoint_bytes(m) / (FRONTIER.ckpt_write_bw * t.P)
+    )
+    assert rm.checkpoint_bytes(m) == pytest.approx(
+        m.total_params() * rm.CKPT_BYTES_PER_PARAM
+    )
+
+
+def test_young_daly_monotone_in_scale():
+    """More chips -> shorter job MTBF -> checkpoint more often, and the
+    availability-adjusted goodput factor shrinks."""
+    m = rm.ModelShape.from_arch(get_arch("piper-super-545b"))
+    taus, goodputs = [], []
+    for dp in (8, 32, 128):
+        t = _setup(PP=8, EP=32, DP=dp, zero="world")
+        t_ckpt = rm.checkpoint_write_time(m, t, FRONTIER)
+        mtbf = rm.job_mtbf(FRONTIER, t.P)
+        tau = rm.young_daly_interval(t_ckpt, mtbf)
+        taus.append(tau)
+        goodputs.append(
+            rm.goodput_factor(t_ckpt, mtbf, tau,
+                              FRONTIER.restart_s + t_ckpt)
+        )
+    assert taus[0] > taus[1] > taus[2]
+    assert goodputs[0] > goodputs[1] > goodputs[2]
+    assert all(0.0 < g <= 1.0 for g in goodputs)
+
+
+def test_estimate_surfaces_checkpoint_plan():
+    """estimate() prices the checkpoint cadence end to end: interval,
+    steps, goodput, and the availability-adjusted MFU."""
+    m = rm.ModelShape.from_arch(get_arch("granite-moe-3b-a800m"))
+    t = _setup(PP=4, EP=4, DP=16, zero="world")
+    e = rm.estimate(m, t, FRONTIER)
+    assert e.t_ckpt > 0 and e.ckpt_interval_s > 0
+    assert e.ckpt_every_steps >= 1
+    assert e.ckpt_every_steps == max(1, int(round(e.ckpt_interval_s / e.t_step)))
+    assert 0.0 < e.goodput_factor <= 1.0
+    assert e.mfu_effective == pytest.approx(e.mfu * e.goodput_factor)
+    assert e.mfu_effective < e.mfu  # finite MTBF always costs something

@@ -344,6 +344,83 @@ def test_engine_preemption_transparent():
 
 
 # ---------------------------------------------------------------------------
+# Graceful degradation: deadlines, stalls, backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_engine_deadline_shed_and_met():
+    """An infeasible deadline is shed with a structured abort record; a
+    feasible one completes untouched.  Shed ≠ deleted: the abort carries
+    rid, step, reason and any partial tokens."""
+    arch, plan, lm, params = serving_setup("ragged")
+    cfg = ServeConfig(max_seqs=2, block_size=4, num_blocks=32,
+                      max_blocks_per_seq=8)
+    rng = np.random.default_rng(7)
+    reqs = [
+        Request(rid=0, tokens=rng.integers(0, arch.vocab_size, size=5),
+                max_new_tokens=4, deadline_step=10),  # feasible
+        Request(rid=1, tokens=rng.integers(0, arch.vocab_size, size=5),
+                max_new_tokens=6, deadline_step=2),  # provably infeasible
+    ]
+    with plan.mesh:
+        eng = Engine(lm, params, cfg)
+        out = eng.run(reqs)
+    assert sorted(out) == [0] and len(out[0]) == 4
+    assert 1 in eng.aborted
+    ab = eng.aborted[1]
+    assert ab.reason == "deadline" and ab.generated == []
+    assert ("abort", ab.step, 1, "deadline") in eng.trace
+    # a no-deadline engine run is untouched by the feature (default None)
+    assert eng.backpressure_steps == 0
+
+
+def test_engine_stall_burns_deadline_running_shed():
+    """Injected scheduler stalls burn a running request's deadline budget;
+    once infeasible it is shed mid-flight with its partial tokens."""
+    from repro.runtime.faults import FaultInjector, FaultPlan, FaultSpec
+
+    arch, plan, lm, params = serving_setup("ragged")
+    cfg = ServeConfig(max_seqs=2, block_size=4, num_blocks=32,
+                      max_blocks_per_seq=8)
+    rng = np.random.default_rng(8)
+    req = Request(rid=0, tokens=rng.integers(0, arch.vocab_size, size=5),
+                  max_new_tokens=5, deadline_step=6)  # feasible un-stalled
+    inj = FaultInjector(
+        FaultPlan([FaultSpec("serve.stall", step=2, count=3)]),
+        log_fn=lambda m: None,
+    )
+    with plan.mesh:
+        eng = Engine(lm, params, cfg, injector=inj)
+        out = eng.run([req])
+    assert out == {}  # never finished
+    assert inj.fired("serve.stall") == 3
+    assert [e for e in eng.trace if e[0] == "stall"] == [
+        ("stall", 2), ("stall", 3), ("stall", 4)
+    ]
+    ab = eng.aborted[0]
+    assert ab.reason == "deadline"
+    # prefill+decode at step 1 produced 2 tokens before the stalls
+    assert len(ab.generated) == 2
+    eng.pool.check_invariants()
+    assert eng.pool.free_blocks == cfg.num_blocks
+
+
+def test_engine_backpressure_defers_admission():
+    """With admit_reserve_blocks the tight pool holds new work in the
+    queue instead of admitting into certain preemption churn — outputs
+    still match the unconstrained run (default 0 keeps pure FIFO-fit)."""
+    roomy = ServeConfig(max_seqs=2, block_size=4, num_blocks=64,
+                        max_blocks_per_seq=8)
+    tight_bp = ServeConfig(max_seqs=2, block_size=4, num_blocks=7,
+                           max_blocks_per_seq=8, admit_reserve_blocks=2)
+    _, out_roomy = _run_engine("ragged", roomy, n=3, seed=1, max_new=6)
+    eng, out_bp = _run_engine("ragged", tight_bp, n=3, seed=1, max_new=6)
+    assert eng.backpressure_steps > 0
+    assert out_bp == out_roomy
+    eng.pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
 # Decode metric sanity (ep=1; the ep>1 invariance is multidevice)
 # ---------------------------------------------------------------------------
 
