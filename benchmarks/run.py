@@ -27,6 +27,7 @@ def main() -> None:
     functools.update_wrapper(sched_bench, pf.schedules)
 
     from benchmarks import a2a_overlap_bench as ab
+    from benchmarks import migration_bench as mb
     from benchmarks import robustness_bench as rb
     from benchmarks import serving_bench as sb
 
@@ -38,6 +39,9 @@ def main() -> None:
 
     def robustness():
         return rb.rows(smoke=True)
+
+    def migration():
+        return mb.rows(smoke=True)
 
     benches = [
         pf.table1_model_configs,
@@ -56,6 +60,7 @@ def main() -> None:
         serving,
         a2a_overlap,
         robustness,
+        migration,
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -36,6 +36,7 @@ python benchmarks/schedule_bench.py --smoke --check-schema BENCH_schedules.json
 python benchmarks/serving_bench.py --smoke --check-schema BENCH_serving.json
 python benchmarks/a2a_overlap_bench.py --smoke --check-schema BENCH_a2a_overlap.json
 python benchmarks/robustness_bench.py --smoke --check-schema BENCH_robustness.json
+python benchmarks/migration_bench.py --smoke --check-schema BENCH_migration.json
 
 # Zero-bubble acceptance gate on the committed schedule bench: zb_h1 rows
 # exist, beat 1f1b's bubble at EQUAL Eq-4 residual-slot count on every
@@ -93,6 +94,28 @@ assert 0.0 < e.goodput_factor <= 1.0 and e.mfu_effective <= e.mfu
 print(f"robustness gate ok: {len(rec['recovery'])} drills recovered, "
       f"write model within 2x, Young-Daly ckpt@{e.ckpt_every_steps} steps "
       f"goodput={e.goodput_factor:.4f}")
+PY
+
+# Migration acceptance gate on the committed bench: the rebalanced run must
+# recover >= 50% of the skew-induced modeled step-time loss (net of the
+# Table-IV transfer costs), and hot-expert replication must land below the
+# swap-only floor max(load_e)/fair_share — the blind spot the replication
+# planner exists to close.  Replication numerics parity itself is pinned by
+# tests/test_multidevice.py::test_replication_is_function_preserving.
+python - <<'PY'
+import json
+rec = json.load(open("BENCH_migration.json"))
+s = rec["summary"]
+assert s["recovery_ge_half"] is True and s["modeled_recovery_frac"] >= 0.5, (
+    f"rebalanced run must recover >= 50% of the modeled skew loss "
+    f"(got {s['modeled_recovery_frac']:.2f}) -- regenerate the bench")
+assert s["replication_beats_swap_floor"] is True, (
+    "replication must beat the swap-only imbalance floor")
+assert s["rebalance_beats_static"] is True
+m = rec["modeled"]
+print(f"migration gate ok: recovery={s['modeled_recovery_frac']:.2f}, "
+      f"imb floor {m['swap_floor']:.2f} -> "
+      f"{rec['modes']['replicated']['final_imbalance']:.2f} with replicas")
 PY
 
 exec python -m pytest -x -q "$@"

@@ -107,6 +107,7 @@ def main():
     schedules = (ROOT / "docs" / "experiments_schedules.md").read_text()
     a2a = (ROOT / "docs" / "experiments_a2a.md").read_text()
     robustness = (ROOT / "docs" / "experiments_robustness.md").read_text()
+    migration = (ROOT / "docs" / "experiments_migration.md").read_text()
     out = frame.format(
         dryrun=dryrun_section(records),
         roofline=roofline_section(records),
@@ -114,6 +115,7 @@ def main():
         schedules=schedules,
         a2a=a2a,
         robustness=robustness,
+        migration=migration,
         perf=perf,
     )
     (ROOT / "EXPERIMENTS.md").write_text(out)

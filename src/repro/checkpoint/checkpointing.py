@@ -126,6 +126,16 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def read_extras(directory: str, step: int) -> dict:
+    """The manifest ``extras`` dict of one checkpoint step (e.g. the
+    trainer's LoadStats snapshot).  Extras live inside the msgpack manifest,
+    so they are covered by the same whole-manifest digest the restore path
+    verifies; callers restoring state should verify first (restore does)."""
+    path = Path(directory) / f"step_{step:08d}" / "manifest.msgpack"
+    manifest = msgpack.unpackb(path.read_bytes())
+    return manifest.get("extras") or {}
+
+
 def verify_checkpoint(path) -> Tuple[bool, str]:
     """Integrity-check one checkpoint dir: manifest digest, per-leaf CRC32,
     shape/dtype consistency.  Returns (ok, reason)."""
@@ -342,3 +352,7 @@ class CheckpointManager:
         return restore_checkpoint(
             self.directory, abstract_state, shardings, log_fn=self.log_fn
         )
+
+    def extras_for(self, step: int) -> dict:
+        """Manifest extras of an already-restored (hence verified) step."""
+        return read_extras(self.directory, step)

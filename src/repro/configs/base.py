@@ -72,9 +72,15 @@ class MoECfg:
     # capacity-mode wire size, but budgets rows per *rank* instead of per
     # expert, which strictly dominates per-expert capacity on kept tokens.
     dispatch: str = DEFAULT_DISPATCH
+    # Hot-expert replication channels: >0 adds a (max_replicas,) int32
+    # "replicas" routing leaf (sentinel num_experts = free channel).  A
+    # replicated expert's rows compute source-locally on every EP rank —
+    # off the a2a wire — splitting its load across groups by token origin.
+    max_replicas: int = 0
 
     def __post_init__(self):
         assert self.dispatch in DISPATCH_MODES, self.dispatch
+        assert self.max_replicas >= 0, self.max_replicas
 
 
 @dataclass(frozen=True)

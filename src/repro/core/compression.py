@@ -8,9 +8,12 @@ production mesh, and activations tolerate 8-bit transport well.  An
 error-feedback variant is provided for gradient streams.
 
 GSPMD-inserted collectives (DP gradient reductions) cannot be intercepted
-from model code; compression applies to the collectives this framework emits
-explicitly (pipeline P2P, migration transfers).  Scope documented in
-DESIGN.md.
+from model code; compression applies to the collectives this framework
+emits explicitly — today that is pipeline P2P only.  Expert migration
+(core/migration.py) relabels slots host-side and *prices* its transfers
+via the resource model rather than streaming bytes through this module;
+int8 weight streaming for cross-host migration is future work (ROADMAP
+direction 4).  Scope documented in DESIGN.md.
 """
 
 from __future__ import annotations

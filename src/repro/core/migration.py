@@ -13,6 +13,13 @@ Components:
   with a single gather over the expert dim, which GSPMD lowers to the
   intra-group all-to-all the paper describes; the routing table
   (``assignment``) is updated so the model function is preserved exactly.
+* :func:`plan_replication` — the escape hatch for the regime Algorithm 2
+  cannot reach: swapping whole experts can never push the max group load
+  below ``max_e load_e / fair_share``, so once one expert is hotter than a
+  group's fair share the hill climb bottoms out.  Hot experts get a
+  *replica channel*: their rows compute source-locally on every EP rank
+  (off the a2a wire), splitting their load across groups by token origin.
+  Channels are released with hysteresis when the skew subsides.
 * :func:`migration_cost` — Table IV: worst-case per-GPU message size
   ``48 * E * d_model * d_ffn / G`` bytes and its latency at the measured
   intra-node bandwidth.
@@ -54,21 +61,83 @@ class LoadStats:
         self.ema = self.decay * self.ema + (1 - self.decay) * loads
         self.steps += 1
 
-    def group_loads(self, assignment: np.ndarray, ep: int) -> np.ndarray:
-        """(num_layers, ep) total load per physical EP group."""
+    def group_loads(
+        self,
+        assignment: np.ndarray,
+        ep: int,
+        replicas: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """(num_layers, ep) total load per physical EP group.
+
+        ``replicas``: optional (num_layers, R) replica channel table
+        (sentinel E = free channel).  A replicated expert computes
+        source-locally on every rank, so its load spreads uniformly over
+        the ep groups instead of landing on its home group.
+        """
         E = self.num_experts
         e_l = E // ep
         groups = np.asarray(assignment) // e_l  # (num_layers, E)
         out = np.zeros((self.num_layers, ep))
         for layer in range(self.num_layers):
-            np.add.at(out[layer], groups[layer], self.ema[layer])
+            ema = self.ema[layer]
+            if replicas is not None:
+                rep = np.asarray(replicas[layer])
+                rep = rep[(rep >= 0) & (rep < E)]
+                if rep.size:
+                    is_rep = np.zeros(E, dtype=bool)
+                    is_rep[rep] = True
+                    out[layer] += ema[is_rep].sum() / ep
+                    ema = np.where(is_rep, 0.0, ema)
+            np.add.at(out[layer], groups[layer], ema)
         return out
 
-    def imbalance(self, assignment: np.ndarray, ep: int) -> float:
+    def imbalance(
+        self,
+        assignment: np.ndarray,
+        ep: int,
+        replicas: Optional[np.ndarray] = None,
+    ) -> float:
         """max/mean group load over layers — the migration trigger metric."""
-        g = self.group_loads(assignment, ep)
+        g = self.group_loads(assignment, ep, replicas)
         mean = g.mean(axis=1) + 1e-9
         return float((g.max(axis=1) / mean).max())
+
+    # -- checkpoint round-trip (satellite: EMA must survive restarts) -------
+
+    def to_state(self) -> Dict:
+        """Msgpack-able snapshot for the checkpoint manifest's ``extras``.
+
+        The EMA is float64; shipping it as raw bytes avoids the device_put
+        path (which would silently downcast to float32 under x64-disabled
+        JAX) and makes the restart round-trip bit-exact.  Integrity is
+        covered by the manifest digest like every other checkpoint field.
+        """
+        return {
+            "ema": self.ema.astype(np.float64).tobytes(),
+            "shape": list(self.ema.shape),
+            "decay": float(self.decay),
+            "steps": int(self.steps),
+        }
+
+    def load_state(self, state: Dict) -> None:
+        """Restore in place from :meth:`to_state` (bit-exact)."""
+        shape = tuple(state["shape"])
+        ema = np.frombuffer(state["ema"], dtype=np.float64).reshape(shape)
+        if shape != (self.num_layers, self.num_experts):
+            raise ValueError(
+                f"LoadStats shape mismatch: checkpoint {shape} vs "
+                f"({self.num_layers}, {self.num_experts})"
+            )
+        self.ema = ema.copy()
+        self.decay = float(state["decay"])
+        self.steps = int(state["steps"])
+
+    @classmethod
+    def from_state(cls, state: Dict) -> "LoadStats":
+        shape = tuple(state["shape"])
+        obj = cls(num_layers=int(shape[0]), num_experts=int(shape[1]))
+        obj.load_state(state)
+        return obj
 
 
 # ---------------------------------------------------------------------------
@@ -134,6 +203,107 @@ def rebalance_assignment(
 
 
 # ---------------------------------------------------------------------------
+# Hot-expert replication (beyond Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+def swap_floor(loads: np.ndarray, ep: int) -> float:
+    """The imbalance no swap-only rebalancer can beat: whole-expert moves
+    cannot split one expert's load, so ``max_e load_e / fair_share`` lower
+    bounds max/mean group load."""
+    loads = np.asarray(loads, dtype=np.float64)
+    fair = loads.sum() / ep
+    if fair <= 0:
+        return 1.0
+    return max(float(loads.max() / fair), 1.0)
+
+
+def plan_replication(
+    loads: np.ndarray,  # (E,) EMA loads for one layer (logical experts)
+    replicas: np.ndarray,  # (R,) current channel table (sentinel E = free)
+    ep: int,
+    hot_factor: float = 1.0,
+    release_factor: float = 0.8,
+) -> np.ndarray:
+    """Assign/release replica channels for one layer.
+
+    An expert is *hot* when its EMA load exceeds ``hot_factor`` times the
+    per-group fair share — exactly the regime where
+    :func:`hill_climb_rebalance` bottoms out (see :func:`swap_floor`).
+    Held channels are released only once the expert cools below
+    ``release_factor * hot_factor * fair`` (hysteresis, so a channel does
+    not flap around the threshold).  Returns the new (R,) table.
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    E = len(loads)
+    out = np.asarray(replicas, dtype=np.int64).copy()
+    R = len(out)
+    fair = loads.sum() / ep
+    if fair <= 0:
+        return np.full(R, E, dtype=np.int32)
+    # Release cooled (or invalid) experts.
+    for r in range(R):
+        e = int(out[r])
+        if e < 0 or e >= E or loads[e] <= release_factor * hot_factor * fair:
+            out[r] = E
+    held = {int(e) for e in out if 0 <= e < E}
+    # Hand free channels to the hottest over-fair experts.
+    free = [r for r in range(R) if out[r] == E]
+    for e in np.argsort(-loads):
+        if not free:
+            break
+        if loads[e] <= hot_factor * fair:
+            break
+        if int(e) in held:
+            continue
+        out[free.pop(0)] = int(e)
+        held.add(int(e))
+    return out.astype(np.int32)
+
+
+def plan_layer(
+    loads: np.ndarray,  # (E,) EMA loads for one layer
+    assignment: np.ndarray,  # (E,) current logical->physical slot
+    replicas: Optional[np.ndarray],  # (R,) channel table or None
+    ep: int,
+    max_iters: int = 100,
+) -> Tuple[np.ndarray, Optional[np.ndarray], np.ndarray, int]:
+    """One full per-layer planning pass: replication first (a replicated
+    expert leaves the swap problem — its load splits over every group),
+    then Algorithm 2 swaps on the residual loads.
+
+    Returns (new_assignment, new_replicas, perm, swaps) with
+    ``perm = permutation_for(assignment, new_assignment)``.
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    E = len(loads)
+    new_reps = None
+    resid = loads.copy()
+    if replicas is not None and len(replicas) > 0:
+        new_reps = plan_replication(loads, replicas, ep)
+        active = new_reps[new_reps < E]
+        resid[active] = 0.0
+    new_assign, swaps = rebalance_assignment(
+        resid, assignment, ep, max_iters=max_iters
+    )
+    perm = permutation_for(assignment, new_assign)
+    return new_assign, new_reps, perm, swaps
+
+
+def replication_bytes(
+    n_new: int, d_model: int, d_ffn: int, ep: int,
+    n_mat: int = 3, bytes_per_param: int = 2,
+) -> float:
+    """Wire bytes to broadcast ``n_new`` newly-replicated experts' weights
+    to the other ``ep - 1`` groups (the psum materialization each step is
+    priced by the resource model; this is the one-off placement cost
+    analogue of Table IV)."""
+    return float(
+        bytes_per_param * n_mat * n_new * d_model * d_ffn * max(ep - 1, 0)
+    )
+
+
+# ---------------------------------------------------------------------------
 # Executor
 # ---------------------------------------------------------------------------
 
@@ -161,7 +331,7 @@ def moved_experts(old_assign: np.ndarray, new_assign: np.ndarray, ep: int, E: in
 EXPERT_PARAM_KEYS = ("w_up", "w_gate", "w_down")
 
 
-def apply_migration_to_tree(tree, perm_by_layer, rep_axis: bool = True):
+def apply_migration_to_tree(tree, perm_by_layer):
     """Permute every expert-indexed leaf of one MoE block's param tree.
 
     tree: {"w_router": (reps, d, E)?, "w_up": (reps, E, d, f), ...,

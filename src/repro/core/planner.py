@@ -77,6 +77,13 @@ class Strategy:
             f"bubble={e.bubble_fraction:.2f}) "
             f"ckpt@{e.ckpt_every_steps}st goodput={e.goodput_factor*100:.2f}% "
             f"mfu_eff={e.mfu_effective*100:5.1f}%"
+            + (
+                f" migrate={e.t_migrate*1e3:.1f}ms"
+                f"->imb={e.imbalance_post:.2f}"
+                f" gain={e.migrate_gain_per_step*1e3:.1f}ms/st"
+                if e.imbalance_post
+                else ""
+            )
         )
 
 
@@ -123,6 +130,7 @@ def valid_strategies(
     overlap_fraction: float = 0.0,
     zero: str = "dp",
     imbalance: float = 1.0,
+    imbalance_post: Optional[float] = None,
 ) -> List[Strategy]:
     """All (PP, EP, DP, policy) tuples satisfying the paper's constraints:
 
@@ -209,6 +217,7 @@ def valid_strategies(
                                     est = rm.estimate(
                                         shape, t, platform,
                                         overlap_fraction=overlap_fraction,
+                                        imbalance_post=imbalance_post,
                                     )
                                     if not est.mem_ok:  # Eq 11
                                         continue

@@ -50,10 +50,15 @@ class Platform:
     ckpt_write_bw: float = 2.5e8  # sustained ckpt bytes/s per chip (PFS/GCS)
     ckpt_latency_s: float = 2.0  # fixed per-checkpoint overhead (barrier+open)
     restart_s: float = 300.0  # scheduler requeue + init + restore overhead
+    # Expert-migration link (paper Table IV prices rebalance transfers at
+    # the 50 GB/s intra-node fabric; defaults to intra_node_bw).
+    migration_bw: float = 0.0
 
     def __post_init__(self):
         if self.link_bw == 0.0:
             object.__setattr__(self, "link_bw", self.intra_node_bw)
+        if self.migration_bw == 0.0:
+            object.__setattr__(self, "migration_bw", self.intra_node_bw)
 
     @property
     def fast_domain(self) -> int:

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 from repro.configs.base import (
     A2A_ALGOS,
@@ -150,6 +150,11 @@ class TrainSetup:
     # serial Eq-6 pricing exactly.
     a2a_algo: str = DEFAULT_A2A
     a2a_chunks: int = 1
+    # Hot-expert replica channels currently live (models.moe max_replicas
+    # slots holding an expert id): each channel's weights are psum-selected
+    # over the EP groups at use time — forward broadcast plus the grad-sum
+    # transpose — so replicas trade per-step broadcast bytes for balance.
+    replicas: int = 0
 
     def __post_init__(self):
         assert self.a2a_algo in A2A_ALGOS, self.a2a_algo
@@ -638,6 +643,35 @@ def goodput_factor(
 
 
 # ---------------------------------------------------------------------------
+# Expert-migration pricing (paper Table IV at Platform bandwidths)
+# ---------------------------------------------------------------------------
+
+
+def migration_time(
+    m: ModelShape, t: TrainSetup, platform: Platform
+) -> Tuple[float, float]:
+    """What one full expert rebalance costs on this platform: Table IV's
+    worst-case per-chip message (n_mat matrices x bytes_per_param, experts
+    sharded over the EP groups) for every hosted MoE layer, shipped over
+    the migration link.  Returns (bytes, seconds) — the hysteresis gate
+    compares the seconds against ``migrate_gain_per_step * migrate_every``.
+    """
+    if not (m.E and m.L_moe):
+        return 0.0, 0.0
+    from repro.core.migration import migration_cost
+
+    size, sec = migration_cost(
+        m.E, m.d_model, m.d_ffn_moe,
+        G=max(t.EP, 1),
+        bandwidth=platform.migration_bw,
+        n_mat=m.n_mat,
+        bytes_per_param=t.bytes_per_param,
+    )
+    layers = m.L_moe / t.PP  # stages permute their own layers concurrently
+    return size * layers, sec * layers
+
+
+# ---------------------------------------------------------------------------
 # Step time & MFU (Eq 12)
 # ---------------------------------------------------------------------------
 
@@ -679,11 +713,23 @@ class Estimate:
     ckpt_every_steps: int = 0
     goodput_factor: float = 1.0
     mfu_effective: float = 0.0
+    # Expert-migration pricing (Table IV at Platform bandwidths): what one
+    # rebalance transfer costs here and — when the caller supplies the
+    # post-rebalance imbalance — the per-step time it buys back.  The
+    # trainer's hysteresis gate migrates iff
+    # migrate_gain_per_step * migrate_every > t_migrate.
+    t_migrate: float = 0.0
+    migrate_bytes: float = 0.0
+    imbalance_post: float = 0.0
+    migrate_gain_per_step: float = 0.0
+    # Per-step replica weight-broadcast tax (TrainSetup.replicas channels).
+    t_replicate: float = 0.0
 
 
 def estimate(
     m: ModelShape, t: TrainSetup, platform: Platform,
     overlap_fraction: float = 0.0,
+    imbalance_post: Optional[float] = None,
 ) -> Estimate:
     """Paper Eq 12: MFU = hardware-eff x compute-fraction, with the pipeline
     bubble (PP-1)/M and exposed (non-overlapped) communication."""
@@ -768,7 +814,28 @@ def estimate(
         bubble = frac / (1.0 - frac)
     else:
         bubble = 0.0
-    exposed = (ta2a_exposed + tp2p + tdp) * (1.0 - overlap_fraction)
+
+    # Hot-expert replica weight broadcast: each live channel's n_mat
+    # matrices are psum-selected over the EP groups at use time (forward
+    # broadcast + the grad-sum transpose), once per hosted MoE layer, in
+    # the activation dtype.  replicas == 0 prices to exactly zero.
+    if m.E and t.replicas > 0 and t.EP > 1:
+        rep_bw = (
+            platform.intra_node_bw
+            if t.EP <= platform.fast_domain
+            else platform.inter_node_bw
+        )
+        rep_bytes = (
+            2.0 * t.replicas * m.expert_params * t.bytes_act
+            * 2.0 * (t.EP - 1) / t.EP  # ring psum, fwd + bwd transpose
+        )
+        trep = rep_bytes * (m.L_moe / t.PP) / rep_bw
+    else:
+        trep = 0.0
+
+    exposed = (
+        (ta2a_exposed + tp2p + tdp + trep) * (1.0 - overlap_fraction)
+    )
     t_step = (
         (tc * t.imbalance + t_disp + exposed) * (1 + bubble)
         + t.step_overhead
@@ -784,6 +851,22 @@ def estimate(
     tau = young_daly_interval(t_ckpt, mtbf)
     t_recover = platform.restart_s + t_ckpt  # requeue + restore ≈ write
     goodput = goodput_factor(t_ckpt, mtbf, tau, t_recover)
+
+    # Table IV migration pricing: one rebalance transfer on this platform,
+    # and — when the controller supplies the post-rebalance imbalance — a
+    # depth-1 re-estimate of the step at that skew to get the modeled
+    # per-step recovery the transfer would buy.
+    mig_bytes, t_mig = migration_time(m, t, platform)
+    if imbalance_post is not None:
+        post = estimate(
+            m, replace(t, imbalance=imbalance_post), platform,
+            overlap_fraction,
+        )
+        imb_post = float(imbalance_post)
+        mig_gain = t_step - post.t_step
+    else:
+        imb_post = 0.0
+        mig_gain = 0.0
 
     mem0 = memory_pp(m, t, 0) if t.PP > 1 else memory_edp(m, t)
     return Estimate(
@@ -809,6 +892,11 @@ def estimate(
         ckpt_every_steps=max(1, int(round(tau / t_step))),
         goodput_factor=goodput,
         mfu_effective=mfu * goodput,
+        t_migrate=t_mig,
+        migrate_bytes=mig_bytes,
+        imbalance_post=imb_post,
+        migrate_gain_per_step=mig_gain,
+        t_replicate=trep,
     )
 
 

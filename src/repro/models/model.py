@@ -85,6 +85,12 @@ def _moe_tree(a: ArchConfig) -> Dict[str, ParamMeta]:
         # logical expert -> physical slot routing table (expert migration)
         "assignment": ParamMeta((E,), (None,), init="arange", dtype="int32"),
     }
+    if m.max_replicas > 0:
+        # Hot-expert replica channels: logical id per channel, sentinel E =
+        # free.  Replicated rows compute source-locally on each EP rank.
+        t["replicas"] = ParamMeta(
+            (m.max_replicas,), (None,), init="fill", fan_in=E, dtype="int32"
+        )
     if a.ffn_activation == "swiglu":
         t["w_gate"] = ParamMeta((E, d, f), ("expert", None, "expert_ffn"), fan_in=d)
     if m.num_shared_experts > 0:
@@ -167,6 +173,8 @@ def _is_meta(x) -> bool:
 
 def _init_leaf(meta: ParamMeta, key, dtype):
     if meta.dtype == "int32":
+        if meta.init == "fill":  # constant sentinel (fan_in holds the value)
+            return jnp.full(meta.shape, meta.fan_in, dtype=jnp.int32)
         assert meta.init == "arange"
         return jnp.broadcast_to(
             jnp.arange(meta.shape[-1], dtype=jnp.int32), meta.shape
@@ -675,13 +683,18 @@ class LanguageModel:
         logits = self._head(params, xt)[:, 0]
         return logits, new_cache
 
-    def decode_step_paged(self, params, cache, block_table, lengths, batch):
+    def decode_step_paged(
+        self, params, cache, block_table, lengths, batch, *,
+        return_loads: bool = False,
+    ):
         """One continuous-batching decode step over all sequence slots.
 
         batch: {"tokens": (b, 1)}; lengths: (b,) per-sequence cache fills
         (positions of the new tokens); block_table: (b, nb).  Inactive
         slots (sentinel table rows) write nothing and produce garbage
-        logits the engine ignores.  Returns (logits (b, vp), new_cache).
+        logits the engine ignores.  Returns (logits (b, vp), new_cache),
+        plus per-layer logical expert counts (reps, n_moe_pos, E) when
+        ``return_loads`` (the serving rebalancer's load feed).
         """
         a = self.arch
         x = self._embed(params, batch)
@@ -691,6 +704,7 @@ class LanguageModel:
             rep_params, rep_pages = xs
             h = carry
             new_pages = []
+            loads = []
             for pos, blk in enumerate(a.block_pattern):
                 pc = {
                     "k_pages": rep_pages[pos]["k"],
@@ -698,7 +712,7 @@ class LanguageModel:
                     "block_table": block_table,
                     "lengths": lengths,
                 }
-                h, _, nc = transformer.apply_block(
+                h, mets, nc = transformer.apply_block(
                     blk,
                     rep_params[pos],
                     h,
@@ -709,15 +723,24 @@ class LanguageModel:
                     cache=pc,
                     token_sharded=False,
                 )
+                if mets and return_loads:
+                    loads.append(mets["expert_load"])
                 new_pages.append(
                     {"k": nc["k_pages"], "v": nc["v_pages"]}
                 )
-            return h, tuple(new_pages)
+            ys = tuple(new_pages)
+            if return_loads:
+                ys = (ys, jnp.stack(loads))  # (n_moe_pos, E)
+            return h, ys
 
-        x, new_cache = lax.scan(body, x, (params["blocks"], cache))
+        x, ys = lax.scan(body, x, (params["blocks"], cache))
+        if return_loads:
+            new_cache, loads = ys
         x = rms_norm(x, params["final_norm"], a.norm_eps)
         logits = self._head(params, x)[:, 0]
-        return logits, new_cache
+        if return_loads:
+            return logits, new_cache, loads
+        return logits, ys
 
     def prefill(self, params, batch):
         """Forward over a prompt, emitting (last-position logits, cache)."""

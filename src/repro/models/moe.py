@@ -211,7 +211,8 @@ def _moe_ragged_local(xt, top_phys, top_w, w_up, w_gate, w_down,
 
 def _moe_ragged_sharded(xt, top_phys, top_w, wu_f, wg_f, wd_f,
                         activation: str, impl: str, moe: MoECfg,
-                        ep_size: int, capacity: int, a2a, chunks: int = 1):
+                        ep_size: int, capacity: int, a2a, chunks: int = 1,
+                        skip=None):
     """Dropless-style EP dispatch: sorted rows as the all-to-all payload,
     segment structure carried by a counts-exchange pre-pass.
 
@@ -254,10 +255,19 @@ def _moe_ragged_sharded(xt, top_phys, top_w, wu_f, wg_f, wd_f,
 
     S = E_l * capacity  # per-destination row budget == capacity wire size
     dest = sorted_e // E_l  # nondecreasing
-    dcounts = jnp.zeros((ep_size,), jnp.int32).at[dest].add(1)
+    # Replica rows compute source-locally — they leave the wire entirely.
+    # Positions are ranked among the VALID rows only so the kept rows pack
+    # contiguously per destination (the counts-exchange reconstruction
+    # requires [c_0 rows of expert 0, c_1 of expert 1, ...] with no holes).
+    valid = (
+        ~skip[order] if skip is not None
+        else jnp.ones((Tk,), bool)
+    )
+    validi = valid.astype(jnp.int32)
+    dcounts = jnp.zeros((ep_size,), jnp.int32).at[dest].add(validi)
     dstart = jnp.cumsum(dcounts) - dcounts
-    pos = jnp.arange(Tk, dtype=jnp.int32) - dstart[dest]
-    keep_s = pos < S  # rank-budget overflow (sorted order)
+    pos = jnp.cumsum(validi) - 1 - dstart[dest]
+    keep_s = valid & (pos < S)  # rank-budget overflow (sorted order)
     posd = jnp.where(keep_s, pos, S)  # out-of-range => scatter-dropped
     send_x = (
         jnp.zeros((ep_size, S, d), xt.dtype)
@@ -327,7 +337,7 @@ def _moe_ragged_sharded(xt, top_phys, top_w, wu_f, wg_f, wd_f,
 
 def _moe_ragged_decode(xt, top_phys, top_w, wu_f, wg_f, wd_f,
                        activation: str, impl: str, moe: MoECfg,
-                       ep_size: int):
+                       ep_size: int, skip=None):
     """Ragged weight-parallel decode (token_sharded=False): tokens are
     replicated over the "ep" axis; each rank locally sorts the replicated
     rows by LOCAL expert id (rows routed to other ranks' experts get the
@@ -347,6 +357,8 @@ def _moe_ragged_decode(xt, top_phys, top_w, wu_f, wg_f, wd_f,
     g = lax.axis_index("ep") if ep_size > 1 else 0
     lid = flat_e - g * E_l
     local = (lid >= 0) & (lid < E_l)
+    if skip is not None:
+        local = local & ~skip  # replica rows: handled by the replica path
     lid = jnp.where(local, lid, E_l).astype(jnp.int32)  # sentinel tail
     order = jnp.argsort(lid)  # stable: local rows first, by expert
     counts = jnp.zeros((E_l + 1,), jnp.int32).at[lid].add(1)
@@ -364,6 +376,90 @@ def _moe_ragged_decode(xt, top_phys, top_w, wu_f, wg_f, wd_f,
         vals = lax.psum(vals, "ep")
     keep = jnp.ones_like(flat_e, dtype=bool)  # dropless
     return _combine_expert_outputs(vals, flat_w, keep, T, k, d)
+
+
+# -- hot-expert replication (migration planner escape hatch) ----------------
+#
+# A replicated expert's rows never hit the a2a wire: every EP rank
+# materializes the replica channels' weights (owner-masked select from its
+# ZeRO-gathered shard + psum over "ep" — the psum of a single nonzero
+# contribution is exact) and computes its OWN tokens' replica rows locally,
+# so the hot expert's load splits across groups by token origin.  The
+# weights stay ONE logical param leaf: the psum/gather transposes sum every
+# rank's replica grads back into it automatically.  Replication is
+# function-preserving — paths that ignore the table (local / pipeline
+# interior) remain exact.
+
+
+def _replica_rows(top_i, replicas, E: int):
+    """Per flat (token, k) row: routed-to-a-replica mask and the replica
+    channel id (sentinel R for non-replica rows).  ``replicas``: (R,)
+    logical expert ids, sentinel E = free channel."""
+    R = replicas.shape[0]
+    # Size-(E+1) tables so the sentinel E lands on a discarded row.
+    is_rep = (
+        jnp.zeros((E + 1,), bool).at[replicas].set(True, mode="drop")[:E]
+    )
+    chan = (
+        jnp.full((E + 1,), R, jnp.int32)
+        .at[replicas].set(jnp.arange(R, dtype=jnp.int32), mode="drop")[:E]
+    )
+    flat_i = top_i.reshape(-1)
+    rep_row = is_rep[flat_i]
+    rchan = jnp.where(rep_row, chan[flat_i], R)
+    return rep_row, rchan.astype(jnp.int32)
+
+
+def _replica_weights(replicas, assignment, wu_f, wg_f, wd_f, E: int,
+                     E_l: int, ep_size: int):
+    """Materialize the R replica channels' expert weights on every EP rank.
+
+    Each active channel's weights live in exactly one rank's gathered
+    shard (its home physical slot under ``assignment``); an owner-masked
+    select + psum("ep") broadcasts them.  AD: the psum transposes to a
+    psum of the per-rank replica-weight cotangents, masked back onto the
+    owner's shard row — replica grads sum into the one logical leaf.
+    """
+    R = replicas.shape[0]
+    active = replicas < E
+    slot = assignment[jnp.clip(replicas, 0, E - 1)]
+    g = lax.axis_index("ep") if ep_size > 1 else 0
+    owner = slot // E_l
+    lrow = slot - owner * E_l
+    mine = active & (owner == g)
+
+    def bcast(w):
+        sel = jnp.where(mine[:, None, None], w[lrow], jnp.zeros_like(w[lrow]))
+        return lax.psum(sel, "ep") if ep_size > 1 else sel
+
+    wu_r = bcast(wu_f)
+    wg_r = bcast(wg_f) if wg_f is not None else None
+    wd_r = bcast(wd_f)
+    return wu_r, wg_r, wd_r
+
+
+def _replica_ffn(xt, rchan, top_k: int, wu_r, wg_r, wd_r, R: int,
+                 activation: str, impl: str, wire_bf16: bool):
+    """Ragged FFN over the (token, k) rows routed to replica channels.
+
+    Rows carrying the sentinel R sort to the never-computed tail and come
+    back zero.  ``wire_bf16`` mirrors ``_transport_bf16``'s double cast so
+    replica-local rows match bit-for-bit what the a2a path would have
+    computed for them (token-sharded paths only; decode has no wire cast).
+    Returns (Tk, d) with zeros in non-replica rows.
+    """
+    order = jnp.argsort(rchan)
+    counts = jnp.zeros((R + 1,), jnp.int32).at[rchan].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts[:R]).astype(jnp.int32)]
+    )
+    xs = jnp.take(xt, order // top_k, axis=0)
+    if wire_bf16:
+        xs = xs.astype(jnp.bfloat16).astype(xt.dtype)
+    ys = _ragged_rows_ffn(xs, wu_r, wg_r, wd_r, offsets, activation, impl)
+    if wire_bf16:
+        ys = ys.astype(jnp.bfloat16).astype(xt.dtype)
+    return jnp.zeros((rchan.shape[0], xt.shape[1]), ys.dtype).at[order].set(ys)
 
 
 def _transport_bf16(a2a_fn, x):
@@ -539,7 +635,7 @@ def moe_ffn(
     # tests pin (metrics must be invariant to the mesh factoring).
     metric_axes = axes if token_sharded else (dp_spec or ())
 
-    def body(wr, wu, wg, wd, assignment, xl):
+    def body(wr, wu, wg, wd, assignment, replicas, xl):
         b_l, s_l, d = xl.shape
         T = b_l * s_l
         xt = xl.reshape(T, d)
@@ -566,6 +662,42 @@ def moe_ffn(
         a2a = _select_a2a(plan)
         chunks = max(int(getattr(plan, "a2a_chunks", 1) or 1), 1)
 
+        # Hot-expert replication: replica rows leave the main dispatch and
+        # compute source-locally.  Only meaningful under EP — with one
+        # group there is nothing to split, so the table is ignored.
+        R = replicas.shape[0]
+        have_rep = R > 0 and ep_size > 1
+        rep_row = None
+        y_rep = None
+        if have_rep:
+            rep_row, rchan = _replica_rows(top_i, replicas, E)
+            wu_r, wg_r, wd_r = _replica_weights(
+                replicas, assignment, wu_f, wg_f, wd_f, E, E_l, ep_size
+            )
+            if token_sharded:
+                vals_rep = _replica_ffn(
+                    xt, rchan, moe.top_k, wu_r, wg_r, wd_r, R,
+                    arch.ffn_activation, impl, wire_bf16=True,
+                )
+            else:
+                # Decode: tokens are replicated over "ep" — round-robin row
+                # ownership so each row is computed exactly once, then psum.
+                g = lax.axis_index("ep")
+                own = (
+                    jnp.arange(rchan.shape[0], dtype=jnp.int32) % ep_size
+                ) == g
+                rchan_own = jnp.where(own, rchan, R)
+                vals_rep = _replica_ffn(
+                    xt, rchan_own, moe.top_k, wu_r, wg_r, wd_r, R,
+                    arch.ffn_activation, impl, wire_bf16=False,
+                )
+                vals_rep = lax.psum(vals_rep, "ep")
+            # Disjoint supports (rep_row vs keep) make the two combines an
+            # exact split of the oracle's single combine.
+            y_rep = _combine_expert_outputs(
+                vals_rep, top_w.reshape(-1), rep_row, T, moe.top_k, d
+            )
+
         if moe.dispatch == "ragged":
             # Sort-based dropless dispatch.  Train/prefill (token-sharded):
             # with EP the a2a payload is the sorted rows + a counts-exchange
@@ -576,19 +708,21 @@ def moe_ffn(
             if not token_sharded:
                 y = _moe_ragged_decode(
                     xt, top_phys, top_w, wu_f, wg_f, wd_f,
-                    arch.ffn_activation, impl, moe, ep_size,
+                    arch.ffn_activation, impl, moe, ep_size, skip=rep_row,
                 )
             elif ep_size > 1:
                 y = _moe_ragged_sharded(
                     xt, top_phys, top_w, wu_f, wg_f, wd_f,
                     arch.ffn_activation, impl, moe, ep_size, capacity, a2a,
-                    chunks,
+                    chunks, skip=rep_row,
                 )
             else:
                 y = _moe_ragged_local(
                     xt, top_phys, top_w, wu_f, wg_f, wd_f,
                     arch.ffn_activation, impl, E, moe.top_k,
                 )
+            if y_rep is not None:
+                y = y + y_rep
             y = y.reshape(b_l, s_l, d)
             metrics = {
                 "moe_aux_loss": aux,
@@ -600,6 +734,10 @@ def moe_ffn(
         # Capacity dispatch (decode default: replicated tokens +
         # psum("ep") combine over the static per-expert slot layout).
         flat_e, pos, keep, flat_w = _dispatch_indices(top_phys, top_w, E, capacity)
+        if rep_row is not None:
+            # Replica rows leave the buffers (slots stay consumed, so the
+            # surviving rows' positions match the unreplicated run).
+            keep = keep & ~rep_row
         buf = _scatter_to_buffers(xt, flat_e, pos, keep, E, capacity)
 
         if token_sharded and ep_size > 1:
@@ -623,6 +761,8 @@ def moe_ffn(
                 vals = lax.psum(vals, "ep")
 
         y = _combine_expert_outputs(vals, flat_w, keep, T, moe.top_k, d)
+        if y_rep is not None:
+            y = y + y_rep
         y = y.reshape(b_l, s_l, d)
         metrics = {
             "moe_aux_loss": aux,
@@ -632,18 +772,25 @@ def moe_ffn(
         return y, metrics
 
     wg = params.get("w_gate")
+    replicas = params.get("replicas")
+    if replicas is None:
+        replicas = jnp.zeros((0,), jnp.int32)
     in_specs = (
         wr_spec,
         wu_spec,
         wu_spec if wg is not None else P(),
         wd_spec,
         P(None),
+        P(None),
         x_spec,
     )
     out_specs = (x_spec, {"moe_aux_loss": P(), "moe_z_loss": P(), "expert_load": P()})
 
-    def wrapped(wr, wu, wg_, wd, assignment, xl):
-        return body(wr, wu, wg_ if wg is not None else None, wd, assignment, xl)
+    def wrapped(wr, wu, wg_, wd, assignment, replicas_, xl):
+        return body(
+            wr, wu, wg_ if wg is not None else None, wd, assignment,
+            replicas_, xl,
+        )
 
     # Manual over every non-pipeline axis.  When nested inside the pipeline
     # executor's shard_map (manual over pp_axis), the context mesh must be
@@ -670,6 +817,7 @@ def moe_ffn(
         wg if wg is not None else jnp.zeros((), x.dtype),
         params["w_down"],
         params["assignment"],
+        replicas,
         x,
     )
 

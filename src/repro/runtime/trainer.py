@@ -11,11 +11,17 @@ Production concerns handled here (DESIGN.md §3):
   orchestrator can cordon slow hosts.  (On real multi-host TPU deployments
   this feeds the controller that re-slices the job; here it is also what the
   elastic-restart test hooks into.)
-* **expert migration** — the paper §VI controller: router load EMAs are
-  folded in every step from the training metrics; when group imbalance
-  exceeds ``migrate_threshold`` the Alg-2 rebalancer emits a new assignment
-  and the expert tensors are permuted in place (a single intra-EP-group
-  collective).
+* **expert migration** — the paper §VI controller, closed-loop: router load
+  EMAs are folded in every step from the training metrics; when group
+  imbalance exceeds ``migrate_threshold`` the controller plans hot-expert
+  replication (``migration.plan_layer``) plus Alg-2 swaps on the residual,
+  prices the transfer against the modeled step-time recovery
+  (``resource_model.estimate`` with ``imbalance_post``; opt-in via
+  ``TrainerConfig.platform``), and only then permutes the expert tensors —
+  params and both Adam moments in one pass — re-placing the migrated state
+  on the plan's shardings so the jitted step neither recompiles nor
+  gathers off-plan leaves.  The load EMA itself is checkpointed (manifest
+  ``extras``) so restarts and rollbacks resume the controller bit-exact.
 * **elastic scaling** — checkpoints are mesh-independent (see
   ``repro.checkpoint``): restarting on a larger/smaller mesh re-shards
   automatically; the trainer only needs the new plan.
@@ -63,6 +69,11 @@ class TrainerConfig:
     migrate_every: int = 20
     migrate_threshold: float = 1.3  # max/mean group load
     migrate_max_swaps: int = 100
+    # Model-priced hysteresis (opt-in): name a core.platform entry and the
+    # controller migrates only when the modeled per-step recovery amortized
+    # over ``migrate_every`` steps clears the Table-IV transfer cost.
+    # None keeps the pure threshold trigger (back-compat).
+    platform: Optional[str] = None
     # anomaly sentinel -> skip-step -> rollback
     gnorm_skip_cap: float = 0.0  # >0: also skip when grad_norm exceeds this
     anomaly_rollback_after: int = 3  # K consecutive skips trigger rollback
@@ -111,6 +122,9 @@ class Trainer:
             if arch.moe
             else None
         )
+        # (b, s) of the running batch — captured in fit() for the pricing
+        # gate's TrainSetup; None until the first batch arrives.
+        self._batch_shape: Optional[tuple] = None
         self.step_times: List[float] = []
         self.stragglers: List[int] = []
         self.migrations: List[Dict[str, Any]] = []
@@ -133,6 +147,43 @@ class Trainer:
 
     # -- expert migration ------------------------------------------------------
 
+    def _price_migration(self, imb: float, imb_post: float, n_replicas: int):
+        """Model-priced hysteresis: estimate the current and post-rebalance
+        step times on ``cfg.platform`` and return the pricing record.  The
+        gate applies the plan iff the per-step recovery amortized over
+        ``migrate_every`` steps clears the Table-IV transfer cost."""
+        from repro.core import resource_model as rm
+        from repro.core.platform import get_platform
+
+        plan = self.lm.plan
+        b, s = self._batch_shape
+        setup = rm.TrainSetup(
+            b=b,
+            s=s,
+            PP=max(plan.pp, 1),
+            EP=max(plan.ep, 1),
+            DP=max(
+                plan.mesh.devices.size // (max(plan.pp, 1) * max(plan.ep, 1)),
+                1,
+            ),
+            dispatch=self.lm.arch.moe.dispatch,
+            imbalance=imb,
+            replicas=n_replicas,
+        )
+        est = rm.estimate(
+            rm.ModelShape.from_arch(self.lm.arch),
+            setup,
+            get_platform(self.cfg.platform),
+            imbalance_post=imb_post,
+        )
+        gain = est.migrate_gain_per_step * self.cfg.migrate_every
+        return {
+            "t_migrate": est.t_migrate,
+            "gain_per_step": est.migrate_gain_per_step,
+            "amortized_gain": gain,
+            "worth_it": gain > est.t_migrate,
+        }
+
     def _maybe_migrate(self, state, step: int):
         if self.load_stats is None or step % self.cfg.migrate_every:
             return state
@@ -143,76 +194,173 @@ class Trainer:
         moe_positions = [
             i for i, (_, f) in enumerate(arch.block_pattern) if f == "moe"
         ]
-        # Assignments live per pattern-position, stacked over reps.
+        # Assignments (and replica tables, when the arch carries channels)
+        # live per pattern-position, stacked over reps into the LoadStats
+        # row order: (position-major, rep).
         assign_all = np.concatenate(
             [np.asarray(params["blocks"][i]["ffn"]["assignment"]) for i in moe_positions]
-        )  # (num_moe_layers, E) in (position-major, rep) order
-        imb = self.load_stats.imbalance(assign_all, plan.ep)
+        )  # (num_moe_layers, E)
+        have_reps = bool(
+            arch.moe.max_replicas > 0
+            and "replicas" in params["blocks"][moe_positions[0]]["ffn"]
+        )
+        reps_all = (
+            np.concatenate(
+                [np.asarray(params["blocks"][i]["ffn"]["replicas"]) for i in moe_positions]
+            )
+            if have_reps
+            else None
+        )
+        imb = self.load_stats.imbalance(assign_all, plan.ep, replicas=reps_all)
         if imb < self.cfg.migrate_threshold:
             return state
+        # -- plan (cheap, host-side numpy) first: replication for experts no
+        # swap can balance, Alg-2 swaps on the residual.  The plan gives the
+        # post-rebalance imbalance the pricing gate needs BEFORE any tensor
+        # is touched.
         t0 = time.perf_counter()
-        new_blocks = list(params["blocks"])
         ema = self.load_stats.ema  # (num_moe_layers, E) in stack order
+        E = arch.moe.num_experts
+        plans: Dict[int, Dict[str, np.ndarray]] = {}
         total_swaps = 0
         row = 0
         for pos in moe_positions:
-            ffn = dict(new_blocks[pos]["ffn"])
-            old_assign = np.asarray(ffn["assignment"])  # (reps, E)
+            old_assign = np.asarray(params["blocks"][pos]["ffn"]["assignment"])
+            old_reps = (
+                np.asarray(params["blocks"][pos]["ffn"]["replicas"])
+                if have_reps
+                else None
+            )
             reps = old_assign.shape[0]
             new_assign = np.empty_like(old_assign)
+            new_reps = np.empty_like(old_reps) if have_reps else None
             perms = np.empty_like(old_assign)
             for r in range(reps):
-                na, swaps = mig.rebalance_assignment(
-                    ema[row], old_assign[r], plan.ep,
-                    max_iters=self.cfg.migrate_max_swaps,
+                na, nr, perm, swaps = mig.plan_layer(
+                    ema[row], old_assign[r],
+                    old_reps[r] if have_reps else None,
+                    plan.ep, max_iters=self.cfg.migrate_max_swaps,
                 )
                 total_swaps += swaps
                 new_assign[r] = na
-                perms[r] = mig.permutation_for(old_assign[r], na)
+                perms[r] = perm
+                if have_reps:
+                    new_reps[r] = nr
                 row += 1
-            new_ffn = mig.apply_migration_to_tree(ffn, perms)
-            import jax.numpy as jnp
+            plans[pos] = {
+                "assignment": new_assign, "perms": perms, "replicas": new_reps
+            }
+        new_assign_all = np.concatenate(
+            [plans[i]["assignment"] for i in moe_positions]
+        )
+        new_reps_all = (
+            np.concatenate([plans[i]["replicas"] for i in moe_positions])
+            if have_reps
+            else None
+        )
+        imb_post = self.load_stats.imbalance(
+            new_assign_all, plan.ep, replicas=new_reps_all
+        )
+        n_replicas = (
+            int((new_reps_all < E).sum(axis=1).max()) if have_reps else 0
+        )
+        record: Dict[str, Any] = {
+            "step": step,
+            "imbalance": imb,
+            "imbalance_post": imb_post,
+            "swaps": total_swaps,
+            "replicas": n_replicas,
+        }
+        # -- priced hysteresis gate (opt-in via cfg.platform) ---------------
+        if self.cfg.platform is not None and self._batch_shape is not None:
+            record.update(self._price_migration(imb, imb_post, n_replicas))
+            if not record["worth_it"]:
+                record["applied"] = False
+                self.migrations.append(record)
+                self.log(
+                    f"[migrate] step={step} imbalance={imb:.2f}->"
+                    f"{imb_post:.2f} deferred: amortized gain "
+                    f"{record['amortized_gain']*1e3:.1f}ms < transfer "
+                    f"{record['t_migrate']*1e3:.1f}ms"
+                )
+                return state
+        # -- apply: ONE permutation pass over params and both Adam moment
+        # trees (they must move with their weights or the optimizer
+        # mismatches history), then the routing tables.
+        import jax.numpy as jnp
 
-            new_ffn["assignment"] = jnp.asarray(new_assign)
-            blk = dict(new_blocks[pos])
-            blk["ffn"] = new_ffn
-            new_blocks[pos] = blk
-        # Moments for expert tensors migrate with the weights.
-        new_m_blocks, new_v_blocks = list(state["m"]["blocks"]), list(state["v"]["blocks"])
-        row = 0
+        new_blocks = list(params["blocks"])
+        new_m_blocks = list(state["m"]["blocks"])
+        new_v_blocks = list(state["v"]["blocks"])
         for pos in moe_positions:
-            old_assign = np.asarray(params["blocks"][pos]["ffn"]["assignment"])
-            reps = old_assign.shape[0]
-            perms = np.stack(
-                [
-                    mig.permutation_for(
-                        old_assign[r],
-                        np.asarray(new_blocks[pos]["ffn"]["assignment"])[r],
-                    )
-                    for r in range(reps)
-                ]
+            perms = plans[pos]["perms"]
+            new_ffn = mig.apply_migration_to_tree(
+                dict(new_blocks[pos]["ffn"]), perms
             )
+            new_ffn["assignment"] = jnp.asarray(plans[pos]["assignment"])
+            if have_reps:
+                new_ffn["replicas"] = jnp.asarray(
+                    plans[pos]["replicas"], dtype=jnp.int32
+                )
+            new_blocks[pos] = {**new_blocks[pos], "ffn": new_ffn}
             for tree_blocks in (new_m_blocks, new_v_blocks):
                 blk = dict(tree_blocks[pos])
-                blk["ffn"] = mig.apply_migration_to_tree(dict(blk["ffn"]), perms)
+                blk["ffn"] = mig.apply_migration_to_tree(
+                    dict(blk["ffn"]), perms
+                )
                 tree_blocks[pos] = blk
-            row += reps
-        dt = time.perf_counter() - t0
-        self.migrations.append(
-            {"step": step, "imbalance": imb, "swaps": total_swaps, "seconds": dt}
-        )
-        self.log(
-            f"[migrate] step={step} imbalance={imb:.2f} swaps={total_swaps} "
-            f"({dt*1e3:.0f} ms)"
-        )
-        return {
+        new_state = {
             "params": {**params, "blocks": tuple(new_blocks)},
             "m": {**state["m"], "blocks": tuple(new_m_blocks)},
             "v": {**state["v"], "blocks": tuple(new_v_blocks)},
             "step": state["step"],
         }
+        # Re-place the migrated leaves on the shardings the incoming state
+        # actually carries (the jitted step's compiled output layouts —
+        # the plan's specs after compiler canonicalization): the eager
+        # permute above commits results wherever jax.numpy left them, and
+        # feeding off-plan leaves back into the step would either
+        # recompile or silently gather.
+        live_shardings = jax.tree.map(lambda x: x.sharding, state)
+        new_state = jax.device_put(new_state, live_shardings)
+        dt = time.perf_counter() - t0
+        record.update({"seconds": dt, "applied": True})
+        self.migrations.append(record)
+        self.log(
+            f"[migrate] step={step} imbalance={imb:.2f}->{imb_post:.2f} "
+            f"swaps={total_swaps} replicas={n_replicas} ({dt*1e3:.0f} ms)"
+        )
+        return new_state
 
     # -- recovery helpers ------------------------------------------------------
+
+    def _ckpt_extras(self) -> Optional[Dict[str, Any]]:
+        """Controller state riding along with every checkpoint: the router
+        load EMA (manifest ``extras``, digest-verified like every leaf).
+        Without it a restart forgets the measured skew and the next
+        migration window re-triggers — or misses — on a cold EMA."""
+        if self.load_stats is None:
+            return None
+        return {"load_stats": self.load_stats.to_state()}
+
+    def _restore_load_stats(self, ck_step: int) -> None:
+        """Reset the controller to the restored checkpoint's snapshot —
+        bit-exact when the checkpoint carried one, cold otherwise (older
+        checkpoints predate the extras field)."""
+        if self.load_stats is None or self.ckpt is None:
+            return
+        try:
+            extras = self.ckpt.extras_for(ck_step)
+        except (FileNotFoundError, OSError):
+            extras = {}
+        if extras and "load_stats" in extras:
+            self.load_stats.load_state(extras["load_stats"])
+        else:
+            arch = self.lm.arch
+            self.load_stats = mig.LoadStats(
+                arch.num_moe_layers, arch.moe.num_experts,
+                decay=self.load_stats.decay,
+            )
 
     def _abstract_and_shardings(self, state):
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -273,6 +421,10 @@ class Trainer:
                 f"checkpoint exists"
             ) from e
         self.rollbacks.append({"at_step": step, "to_step": ck_step})
+        # The load EMA rolls back WITH the weights: keeping the post-fault
+        # EMA against pre-fault expert tensors would mis-trigger the next
+        # migration window on loads those weights never produced.
+        self._restore_load_stats(ck_step)
         self.log(
             f"[rollback] step={step}: {self.cfg.anomaly_rollback_after} "
             f"consecutive anomalies -> restored step {ck_step}"
@@ -299,6 +451,7 @@ class Trainer:
                 abstract, shardings = self._abstract_and_shardings(state)
                 state, ck_step = self.ckpt.restore_latest(abstract, shardings)
                 start_step = ck_step
+                self._restore_load_stats(ck_step)
                 self.log(f"[trainer] resumed from step {ck_step}")
             except FileNotFoundError:
                 pass
@@ -319,6 +472,9 @@ class Trainer:
             if self._stop:
                 break
             batch = self._next_batch(data, data_it, indexed, step)
+            if self._batch_shape is None:
+                tok = batch["tokens"]
+                self._batch_shape = (int(tok.shape[0]), int(tok.shape[1]))
             scale = self.injector.payload_if("train.nonfinite", step)
             if scale is not None:
                 batch = {**batch, "fault_scale": np.float32(scale)}
@@ -375,11 +531,14 @@ class Trainer:
                     f"({dt*1e3:.0f} ms/step)"
                 )
             if self.ckpt is not None and self.ckpt.should_save(step + 1):
-                self.ckpt.save(step + 1, state, blocking=False)
+                self.ckpt.save(
+                    step + 1, state, blocking=False,
+                    extras=self._ckpt_extras(),
+                )
             step += 1
         last_step = max(step - 1, start_step)
         if self.ckpt is not None:
-            self.ckpt.save(step, state, blocking=True)
+            self.ckpt.save(step, state, blocking=True, extras=self._ckpt_extras())
         return {
             "state": state,
             "metrics": metrics,

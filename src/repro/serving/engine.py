@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import migration as mig
 from repro.runtime.faults import FaultInjector
 from repro.serving.kv_cache import BlockPool, PagedLayout
 
@@ -91,6 +92,16 @@ class ServeConfig:
     # Admission backpressure: keep this many free pages per sequence that
     # would be running post-admission; 0 disables (pure FIFO-fit).
     admit_reserve_blocks: int = 0
+    # Expert rebalance between engine steps (MoE archs under EP sharding):
+    # decode dispatch counts feed a LoadStats EMA; every
+    # ``rebalance_every`` decode steps the trainer's planner (replication
+    # for experts no swap can balance + Alg-2 swaps on the residual)
+    # re-places the serving weights when imbalance exceeds the threshold.
+    # 0 disables the monitor entirely (no extra decode output).
+    rebalance_every: int = 0
+    rebalance_threshold: float = 1.3
+    rebalance_max_swaps: int = 100
+    rebalance_decay: float = 0.8  # serving EMA tracks traffic shifts faster
 
     def layout(self) -> PagedLayout:
         return PagedLayout(
@@ -154,7 +165,22 @@ class Engine:
         self.step_no = 0
         self.decode_steps = 0
         self.decoded_tokens = 0
-        self._decode = jax.jit(lm.decode_step_paged)
+        # Decode-time load monitor: only armed for MoE archs with the
+        # rebalancer enabled — the extra per-step loads output is not
+        # materialized otherwise.
+        arch = getattr(lm, "arch", None)
+        self.load_stats = (
+            mig.LoadStats(
+                arch.num_moe_layers, arch.moe.num_experts,
+                decay=cfg.rebalance_decay,
+            )
+            if cfg.rebalance_every > 0 and arch is not None and arch.moe
+            else None
+        )
+        self.rebalances: List[Dict] = []
+        self._decode = jax.jit(
+            lm.decode_step_paged, static_argnames=("return_loads",)
+        )
         # One wrapper serves every bucket: jit caches per input shape, and
         # the power-of-two padding in _bucket is what bounds that cache.
         self._prefill = jax.jit(lm.prefill_paged)
@@ -201,6 +227,7 @@ class Engine:
         self._shed_expired()
         self._admit_and_prefill()
         self._decode_once()
+        self._maybe_rebalance()
         self.pool.check_invariants()
 
     # -- graceful degradation -------------------------------------------------
@@ -342,10 +369,21 @@ class Engine:
             toks[slot, 0] = st.generated[-1]
             lens[slot] = fills[slot]
         bt = jnp.asarray(self.pool.block_table)
-        logits, self.cache = self._decode(
-            self.params, self.cache, bt, jnp.asarray(lens),
-            {"tokens": jnp.asarray(toks)},
-        )
+        if self.load_stats is not None:
+            logits, self.cache, loads = self._decode(
+                self.params, self.cache, bt, jnp.asarray(lens),
+                {"tokens": jnp.asarray(toks)}, return_loads=True,
+            )
+            # (reps, n_moe_pos, E) -> LoadStats row order (pos-major, rep)
+            l = np.asarray(jax.device_get(loads))
+            self.load_stats.update(
+                np.concatenate([l[:, i, :] for i in range(l.shape[1])])
+            )
+        else:
+            logits, self.cache = self._decode(
+                self.params, self.cache, bt, jnp.asarray(lens),
+                {"tokens": jnp.asarray(toks)},
+            )
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         active = sorted(self.running)
         self.decode_steps += 1
@@ -357,6 +395,100 @@ class Engine:
             st = self.running[slot]
             st.generated.append(int(nxt[slot]))
             self._retire_if_done(st)
+
+    # -- expert rebalance ----------------------------------------------------
+
+    def _maybe_rebalance(self) -> None:
+        """Re-place serving experts between engine steps when decode
+        traffic skews: the trainer's planner (hot-expert replication +
+        Alg-2 swaps) over the decode-fed LoadStats EMA, applied to the
+        serving params only — no optimizer state exists here — and
+        re-placed on the live leaf shardings so the jitted decode step
+        neither recompiles nor gathers."""
+        cfg = self.cfg
+        if (
+            self.load_stats is None
+            or self.decode_steps == 0
+            or self.decode_steps % cfg.rebalance_every
+        ):
+            return
+        arch = self.lm.arch
+        plan = getattr(self.lm, "plan", None)
+        ep = plan.ep if plan is not None else 1
+        if ep <= 1:
+            return
+        params = self.params
+        moe_positions = [
+            i for i, (_, f) in enumerate(arch.block_pattern) if f == "moe"
+        ]
+        assign_all = np.concatenate(
+            [np.asarray(params["blocks"][i]["ffn"]["assignment"]) for i in moe_positions]
+        )
+        have_reps = bool(
+            arch.moe.max_replicas > 0
+            and "replicas" in params["blocks"][moe_positions[0]]["ffn"]
+        )
+        reps_all = (
+            np.concatenate(
+                [np.asarray(params["blocks"][i]["ffn"]["replicas"]) for i in moe_positions]
+            )
+            if have_reps
+            else None
+        )
+        imb = self.load_stats.imbalance(assign_all, ep, replicas=reps_all)
+        if imb < cfg.rebalance_threshold:
+            return
+        E = arch.moe.num_experts
+        ema = self.load_stats.ema
+        new_blocks = list(params["blocks"])
+        total_swaps = 0
+        n_replicas = 0
+        row = 0
+        for pos in moe_positions:
+            ffn = dict(new_blocks[pos]["ffn"])
+            old_assign = np.asarray(ffn["assignment"])
+            old_reps = np.asarray(ffn["replicas"]) if have_reps else None
+            reps = old_assign.shape[0]
+            new_assign = np.empty_like(old_assign)
+            new_reps = np.empty_like(old_reps) if have_reps else None
+            perms = np.empty_like(old_assign)
+            for r in range(reps):
+                na, nr, perm, swaps = mig.plan_layer(
+                    ema[row], old_assign[r],
+                    old_reps[r] if have_reps else None,
+                    ep, max_iters=cfg.rebalance_max_swaps,
+                )
+                total_swaps += swaps
+                new_assign[r] = na
+                perms[r] = perm
+                if have_reps:
+                    new_reps[r] = nr
+                    n_replicas = max(n_replicas, int((nr < E).sum()))
+                row += 1
+            new_ffn = mig.apply_migration_to_tree(ffn, perms)
+            new_ffn["assignment"] = jnp.asarray(new_assign)
+            if have_reps:
+                new_ffn["replicas"] = jnp.asarray(new_reps, dtype=jnp.int32)
+            new_blocks[pos] = {**new_blocks[pos], "ffn": new_ffn}
+        new_params = {**params, "blocks": tuple(new_blocks)}
+        if all(
+            hasattr(leaf, "sharding") for leaf in jax.tree.leaves(params)
+        ):
+            live = jax.tree.map(lambda x: x.sharding, params)
+            new_params = jax.device_put(new_params, live)
+        self.params = new_params
+        self.rebalances.append(
+            {
+                "step": self.step_no,
+                "decode_steps": self.decode_steps,
+                "imbalance": imb,
+                "swaps": total_swaps,
+                "replicas": n_replicas,
+            }
+        )
+        self.trace.append(
+            ("rebalance", self.step_no, total_swaps, n_replicas)
+        )
 
     # -- lifecycle helpers ---------------------------------------------------
 

@@ -138,8 +138,77 @@ def check_multidevice_resume_parity():
         )
 
 
+def check_load_stats_survive_sigterm():
+    """Migration telemetry is part of the recovery contract: the router-load
+    EMA rides the checkpoint manifest's extras, so a SIGTERM restart must
+    restore it BIT-exactly (float64 via raw bytes — a device_put round-trip
+    would downcast under x64-disabled JAX), and the resumed run's final EMA
+    must match the uninterrupted oracle's byte-for-byte."""
+    arch = get_arch("granite-moe-3b-a800m").reduced()
+    arch = arch.replace(
+        moe=dataclasses.replace(arch.moe, capacity_factor=8.0,
+                                aux_loss_coef=0.0)
+    )
+    plan = single_device_plan(arch)
+    opt = OptimizerConfig(lr=1e-3)
+    data = SyntheticTokens(arch.vocab_size, 2, 32)
+    total = 14
+
+    def run(ckpt_dir, injector=None, steps=total):
+        with plan.mesh:
+            lm = LanguageModel(arch, plan)
+            state = training.init_state(lm, jax.random.PRNGKey(0), opt)
+            tr = Trainer(
+                lm, opt,
+                TrainerConfig(
+                    total_steps=steps, checkpoint_dir=ckpt_dir,
+                    checkpoint_every=4, log_every=1000,
+                ),
+                log_fn=quiet, injector=injector,
+            )
+            return tr, tr.fit(state, data)
+
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        tr_oracle, _ = run(d1)
+        inj = FaultInjector(
+            FaultPlan([FaultSpec("train.sigterm", step=9)]), log_fn=quiet
+        )
+        tr_pre, preempted = run(d2, injector=inj)
+        ema_at_stop = tr_pre.load_stats.ema.copy()
+        steps_at_stop = tr_pre.load_stats.steps
+        RESULTS["load_stats_saved_nonzero"] = (
+            steps_at_stop > 0 and float(np.abs(ema_at_stop).sum()) > 0
+        )
+
+        # Restore-only: the fresh trainer's EMA must equal the preempted
+        # one's bit-for-bit before any new step runs.
+        with plan.mesh:
+            lm = LanguageModel(arch, plan)
+            tr_res = Trainer(
+                lm, opt,
+                TrainerConfig(total_steps=total, checkpoint_dir=d2,
+                              checkpoint_every=4, log_every=1000),
+                log_fn=quiet,
+            )
+            tr_res._restore_load_stats(preempted["last_step"] + 1)
+        RESULTS["load_stats_restore_bitexact"] = (
+            tr_res.load_stats.steps == steps_at_stop
+            and tr_res.load_stats.ema.tobytes() == ema_at_stop.tobytes()
+        )
+
+        # End-to-end: resume and finish — final EMA matches the oracle's.
+        tr_fin, _ = run(d2)
+        RESULTS["load_stats_resume_matches_oracle"] = (
+            tr_fin.load_stats.steps == tr_oracle.load_stats.steps
+            and tr_fin.load_stats.ema.tobytes()
+            == tr_oracle.load_stats.ema.tobytes()
+        )
+
+
 if __name__ == "__main__":
     assert len(jax.devices()) == 8, jax.devices()
     check_sigterm_resume()
     check_multidevice_resume_parity()
+    check_load_stats_survive_sigterm()
     print("RESULTS " + json.dumps({k: bool(v) for k, v in RESULTS.items()}))

@@ -382,3 +382,12 @@ def test_multidevice_resume_sharding_parity(child_results):
     assert child_results["resume_any_leaf_sharded"]
     assert child_results["resume_shardings_match"]
     assert child_results["resume_loss_match"]
+
+
+def test_load_stats_survive_sigterm_bitexact(child_results):
+    """The router-load EMA rides the checkpoint extras: a SIGTERM restart
+    restores it byte-for-byte (raw float64 bytes, no device round-trip)
+    and the resumed run's final EMA matches the uninterrupted oracle."""
+    assert child_results["load_stats_saved_nonzero"]
+    assert child_results["load_stats_restore_bitexact"]
+    assert child_results["load_stats_resume_matches_oracle"]

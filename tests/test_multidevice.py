@@ -71,3 +71,24 @@ def test_a2a_chunked_matches_monolithic(child_results):
     assert len(keys) == 6, child_results  # 2 dispatch modes x 3 variants
     for k in keys:
         assert child_results[k], k
+
+
+def test_replication_is_function_preserving(child_results):
+    """A live replica table (hot experts pinned to extra slots, weights
+    psum-broadcast, grads summed by the psum transpose into one logical
+    leaf) matches the sentinel-table oracle on loss, every gradient, and
+    the decode path, for both dispatch modes on the real EP mesh."""
+    for mode in ("ragged", "capacity"):
+        assert child_results[f"replication_{mode}_train_parity"], mode
+        assert child_results[f"replication_{mode}_decode_parity"], mode
+
+
+def test_migration_is_exact_and_recompile_free(child_results):
+    """The trainer's expert migration applies ONE permutation pass to
+    params and both Adam moments (bit-equal to a manual replay), keeps the
+    jitted step's compile cache untouched, and leaves the loss trajectory
+    bit-identical to a run with the permutation baked in at init."""
+    assert child_results["migration_applied"]
+    assert child_results["migration_moments_exact"]
+    assert child_results["migration_no_recompile"]
+    assert child_results["migration_trajectory_bitexact"]

@@ -488,3 +488,83 @@ def test_estimate_surfaces_checkpoint_plan():
     assert 0.0 < e.goodput_factor <= 1.0
     assert e.mfu_effective == pytest.approx(e.mfu * e.goodput_factor)
     assert e.mfu_effective < e.mfu  # finite MTBF always costs something
+
+
+# ---------------------------------------------------------------------------
+# Expert-migration pricing (Table IV link) and replica broadcast tax
+# ---------------------------------------------------------------------------
+
+
+def test_estimate_default_path_unchanged_by_migration_fields():
+    """Omitting imbalance_post keeps estimate() bit-identical to before the
+    migration link existed: the new fields are pure additions."""
+    m = rm.ModelShape.from_arch(get_arch("granite-moe-3b-a800m"))
+    t = _setup(PP=2, EP=4, DP=8)
+    e0 = rm.estimate(m, t, FRONTIER)
+    e1 = rm.estimate(m, t, FRONTIER, imbalance_post=None)
+    assert e0.t_step == e1.t_step
+    assert e0.imbalance_post == 0.0
+    assert e0.migrate_gain_per_step == 0.0
+    assert e0.t_replicate == 0.0  # no replicas configured
+    assert e0.t_migrate > 0  # the price is always quoted for MoE shapes
+
+
+def test_migration_time_scales_with_layers_and_bandwidth():
+    m = rm.ModelShape.from_arch(get_arch("granite-moe-3b-a800m"))
+    t = _setup(PP=1, EP=8)
+    size, sec = rm.migration_time(m, t, FRONTIER)
+    assert size > 0 and sec > 0
+    # PP partitions the layer sweep: stages permute concurrently.
+    _, sec_pp = rm.migration_time(m, _setup(PP=2, EP=8), FRONTIER)
+    assert sec_pp == pytest.approx(sec / 2)
+    # Dense shapes have nothing to migrate.
+    dense = rm.ModelShape.from_arch(get_arch("smollm-360m"))
+    assert rm.migration_time(dense, t, FRONTIER) == (0.0, 0.0)
+
+
+def test_estimate_prices_rebalance_gain():
+    """imbalance_post quotes the modeled recovery: a skewed setup that
+    rebalances toward 1.0 gains step time, and the gain amortized over a
+    migration window can clear the transfer cost."""
+    m = rm.ModelShape.from_arch(get_arch("granite-moe-3b-a800m"))
+    t = _setup(PP=2, EP=8, DP=8, imbalance=1.6)
+    e = rm.estimate(m, t, FRONTIER, imbalance_post=1.05)
+    assert e.imbalance_post == 1.05
+    assert e.migrate_gain_per_step > 0
+    assert e.t_migrate > 0
+    # The skewed step is exactly the balanced step plus the quoted gain.
+    balanced = rm.estimate(
+        m, _setup(PP=2, EP=8, DP=8, imbalance=1.05), FRONTIER
+    )
+    assert e.t_step - balanced.t_step == pytest.approx(e.migrate_gain_per_step)
+
+
+def test_replica_broadcast_tax():
+    """Replica channels pay a per-step psum-broadcast of the replicated
+    experts' weights; zero replicas costs nothing (bit-identical)."""
+    m = rm.ModelShape.from_arch(get_arch("granite-moe-3b-a800m"))
+    t0 = _setup(PP=2, EP=8, DP=8)
+    t2 = _setup(PP=2, EP=8, DP=8, replicas=2)
+    e0 = rm.estimate(m, t0, FRONTIER)
+    e2 = rm.estimate(m, t2, FRONTIER)
+    assert e0.t_replicate == 0.0
+    assert e2.t_replicate > 0.0
+    assert e2.t_step >= e0.t_step
+    # More channels, more tax.
+    e4 = rm.estimate(m, _setup(PP=2, EP=8, DP=8, replicas=4), FRONTIER)
+    assert e4.t_replicate == pytest.approx(2 * e2.t_replicate)
+
+
+def test_planner_describe_surfaces_migration():
+    """Strategy.describe() renders the migration quote only when a
+    post-rebalance imbalance was priced."""
+    arch = get_arch("granite-moe-3b-a800m")
+    plain = planner.valid_strategies(
+        arch, FRONTIER, 64, batch=256, seq=4096
+    )
+    priced = planner.valid_strategies(
+        arch, FRONTIER, 64, batch=256, seq=4096, imbalance_post=1.05,
+    )
+    assert plain and priced
+    assert all("migrate=" not in st.describe() for st in plain)
+    assert any("migrate=" in st.describe() for st in priced)

@@ -57,3 +57,14 @@ def test_paged_decode_on_ep_mesh(child_results):
     """The paged serving decode step runs the sharded MoE decode on a real
     EP mesh and matches the uncached forward."""
     assert child_results["paged_decode_ep_mesh_parity"]
+
+
+def test_serving_rebalance_between_steps(child_results):
+    """The engine's decode-time load monitor triggers online expert
+    rebalancing (swaps and/or replica channels) between engine steps, the
+    static engine stays untouched, and the generated tokens are unchanged
+    — the rebalance is invisible to the served requests."""
+    assert child_results["serving_rebalance_fired"]
+    assert child_results["serving_rebalance_acted"]
+    assert child_results["serving_rebalance_static_engine_untouched"]
+    assert child_results["serving_rebalance_outputs_match"]
