@@ -28,6 +28,7 @@ def main() -> None:
 
     from benchmarks import a2a_overlap_bench as ab
     from benchmarks import migration_bench as mb
+    from benchmarks import obs_bench as ob
     from benchmarks import robustness_bench as rb
     from benchmarks import serving_bench as sb
 
@@ -42,6 +43,9 @@ def main() -> None:
 
     def migration():
         return mb.rows(smoke=True)
+
+    def observability():
+        return ob.rows(smoke=True)
 
     benches = [
         pf.table1_model_configs,
@@ -61,6 +65,7 @@ def main() -> None:
         a2a_overlap,
         robustness,
         migration,
+        observability,
     ]
     print("name,us_per_call,derived")
     failures = 0

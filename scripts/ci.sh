@@ -37,6 +37,7 @@ python benchmarks/serving_bench.py --smoke --check-schema BENCH_serving.json
 python benchmarks/a2a_overlap_bench.py --smoke --check-schema BENCH_a2a_overlap.json
 python benchmarks/robustness_bench.py --smoke --check-schema BENCH_robustness.json
 python benchmarks/migration_bench.py --smoke --check-schema BENCH_migration.json
+python benchmarks/obs_bench.py --smoke --check-schema BENCH_observability.json
 
 # Zero-bubble acceptance gate on the committed schedule bench: zb_h1 rows
 # exist, beat 1f1b's bubble at EQUAL Eq-4 residual-slot count on every
@@ -116,6 +117,25 @@ m = rec["modeled"]
 print(f"migration gate ok: recovery={s['modeled_recovery_frac']:.2f}, "
       f"imb floor {m['swap_floor']:.2f} -> "
       f"{rec['modes']['replicated']['final_imbalance']:.2f} with replicas")
+PY
+
+# Observability acceptance gate on the committed bench: telemetry overhead
+# (sinks on: ring + JSONL) stays within 2% of the uninstrumented step time,
+# and the drift report covers every required phase (step, a2a, ckpt,
+# decode) with a finite measured/modeled ratio.
+python - <<'PY'
+import json
+rec = json.load(open("BENCH_observability.json"))
+s = rec["summary"]
+budget = rec["meta"]["overhead_budget_frac"]
+assert s["overhead_within_budget"] is True and s["overhead_frac"] <= budget, (
+    f"telemetry overhead {s['overhead_frac']:.4f} exceeds the "
+    f"{budget:.0%} step-time budget -- regenerate the bench")
+assert s["all_required_ratios_finite"] is True and s["phases_covered"] >= 4, (
+    f"drift report must cover step/a2a/ckpt/decode with finite ratios "
+    f"(got {s['covered']}) -- regenerate the bench")
+print(f"obs gate ok: overhead {s['overhead_frac']*100:.2f}% <= "
+      f"{budget:.0%}, drift phases {s['covered']}")
 PY
 
 exec python -m pytest -x -q "$@"

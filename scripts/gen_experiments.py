@@ -108,6 +108,7 @@ def main():
     a2a = (ROOT / "docs" / "experiments_a2a.md").read_text()
     robustness = (ROOT / "docs" / "experiments_robustness.md").read_text()
     migration = (ROOT / "docs" / "experiments_migration.md").read_text()
+    observability = (ROOT / "docs" / "experiments_obs.md").read_text()
     out = frame.format(
         dryrun=dryrun_section(records),
         roofline=roofline_section(records),
@@ -116,6 +117,7 @@ def main():
         a2a=a2a,
         robustness=robustness,
         migration=migration,
+        observability=observability,
         perf=perf,
     )
     (ROOT / "EXPERIMENTS.md").write_text(out)

@@ -38,6 +38,8 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
+from repro import obs
+
 from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:  # avoid the runtime->checkpoint->runtime import cycle
@@ -81,30 +83,36 @@ def save_checkpoint(
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
 
-    flat = _flatten(state)
-    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    if injector is not None:
-        injector.raise_if("ckpt.write_fail", step)
-    np.savez(tmp / "arrays.npz", **host)
-    manifest = {
-        "step": step,
-        "keys": list(host.keys()),
-        "shapes": {k: list(v.shape) for k, v in host.items()},
-        "dtypes": {k: str(v.dtype) for k, v in host.items()},
-        "crc32": {k: _crc32(v) for k, v in host.items()},
-        "extras": extras or {},
-    }
-    packed = msgpack.packb(manifest)
-    with open(tmp / "manifest.msgpack", "wb") as f:
-        f.write(packed)
-    (tmp / "manifest.crc32").write_text(str(zlib.crc32(packed)))
-    if injector is not None:
-        injector.raise_if("ckpt.crash_before_rename", step)
-    if final.exists():
-        shutil.rmtree(final)
-    os.rename(tmp, final)
-    if injector is not None:
-        injector.raise_if("ckpt.crash_after_rename", step)
+    # The span is emitted even when an injected fault raises mid-write
+    # (exception-safe exit records an ``error`` attr) — and it may fire
+    # from the CheckpointManager's async writer thread, which the
+    # telemetry core's thread-local span stack + locked sinks support.
+    with obs.span("ckpt.save", step=step) as sp:
+        flat = _flatten(state)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        sp.set(bytes=int(sum(v.nbytes for v in host.values())))
+        if injector is not None:
+            injector.raise_if("ckpt.write_fail", step)
+        np.savez(tmp / "arrays.npz", **host)
+        manifest = {
+            "step": step,
+            "keys": list(host.keys()),
+            "shapes": {k: list(v.shape) for k, v in host.items()},
+            "dtypes": {k: str(v.dtype) for k, v in host.items()},
+            "crc32": {k: _crc32(v) for k, v in host.items()},
+            "extras": extras or {},
+        }
+        packed = msgpack.packb(manifest)
+        with open(tmp / "manifest.msgpack", "wb") as f:
+            f.write(packed)
+        (tmp / "manifest.crc32").write_text(str(zlib.crc32(packed)))
+        if injector is not None:
+            injector.raise_if("ckpt.crash_before_rename", step)
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        if injector is not None:
+            injector.raise_if("ckpt.crash_after_rename", step)
     return final
 
 
@@ -234,7 +242,8 @@ def restore_checkpoint(
     for s in candidates:
         path = Path(directory) / f"step_{s:08d}"
         if verify:
-            ok, reason = verify_checkpoint(path)
+            with obs.span("ckpt.verify", step=s):
+                ok, reason = verify_checkpoint(path)
             if not ok:
                 dest = quarantine_checkpoint(path, reason)
                 log_fn(
@@ -247,7 +256,9 @@ def restore_checkpoint(
                         f"(quarantined to {dest})"
                     )
                 continue
-        return _load(path, abstract_state, shardings), s
+        with obs.span("ckpt.restore", step=s):
+            restored = _load(path, abstract_state, shardings)
+        return restored, s
     raise FileNotFoundError(
         f"no intact checkpoint under {directory} "
         f"(all candidates failed verification)"

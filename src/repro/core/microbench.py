@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 
 def _time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     for _ in range(warmup):
@@ -195,4 +197,12 @@ def measure_a2a_overlap(
         ep, rows, d, d_ff, algo=algo, chunks=chunks, g1=g1, part=part
     )
     with mesh:
-        return _time_fn(f, *args, iters=iters, warmup=warmup)
+        t = _time_fn(f, *args, iters=iters, warmup=warmup)
+    # One span per measurement (not per iter): duration = steady-state
+    # seconds/call, the number the drift tracker compares against the comm
+    # model.  Recorded post-hoc so the timed loop itself stays unobserved.
+    obs.get_telemetry().record_span(
+        "a2a.layer", t, ep=ep, rows=rows, d=d, d_ff=d_ff, algo=algo,
+        chunks=chunks, part=part,
+    )
+    return t

@@ -35,6 +35,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 
 # ---------------------------------------------------------------------------
 # Load statistics (extended router, paper §VI-A)
@@ -277,16 +279,18 @@ def plan_layer(
     """
     loads = np.asarray(loads, dtype=np.float64)
     E = len(loads)
-    new_reps = None
-    resid = loads.copy()
-    if replicas is not None and len(replicas) > 0:
-        new_reps = plan_replication(loads, replicas, ep)
-        active = new_reps[new_reps < E]
-        resid[active] = 0.0
-    new_assign, swaps = rebalance_assignment(
-        resid, assignment, ep, max_iters=max_iters
-    )
-    perm = permutation_for(assignment, new_assign)
+    with obs.span("migration.plan_layer", E=E, ep=ep) as sp:
+        new_reps = None
+        resid = loads.copy()
+        if replicas is not None and len(replicas) > 0:
+            new_reps = plan_replication(loads, replicas, ep)
+            active = new_reps[new_reps < E]
+            resid[active] = 0.0
+        new_assign, swaps = rebalance_assignment(
+            resid, assignment, ep, max_iters=max_iters
+        )
+        perm = permutation_for(assignment, new_assign)
+        sp.set(swaps=swaps)
     return new_assign, new_reps, perm, swaps
 
 

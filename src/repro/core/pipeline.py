@@ -75,7 +75,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import compat
+from repro import compat, obs
 from repro.configs.base import ArchConfig
 from repro.core import schedules as sched_lib
 from repro.core.schedules import OP_B, OP_BI, OP_BW, OP_F
@@ -624,8 +624,19 @@ def pipelined_step(
     assert b % M == 0, (b, M)
     b_mu = b // M
 
-    sched = sched_lib.build(sched_name, PP, M, V)
-    tt = sched_lib.tick_tables(sched)
+    # Host-side schedule construction happens at jit-trace time only — the
+    # span fires once per compile, so its presence in the event stream
+    # doubles as a retrace detector.
+    with obs.span(
+        "pipeline.build_schedule", schedule=sched_name, PP=PP, M=M, V=V
+    ):
+        sched = sched_lib.build(sched_name, PP, M, V)
+        tt = sched_lib.tick_tables(sched)
+    obs.instant(
+        "pipeline.schedule", schedule=sched_name, PP=PP, M=M, V=V,
+        num_ticks=sched.num_ticks, slots=sched.num_slots,
+        wslots=sched.num_wslots,
+    )
     T = sched.num_ticks
     K = sched.num_slots
     # Split-backward (zero-bubble) schedules defer weight grads through a

@@ -1132,3 +1132,32 @@ def serve_estimate(
         t_compute=t_comp,
         t_comm=t_comm,
     )
+
+
+# ---------------------------------------------------------------------------
+# Drift-tracking phase views (obs.drift): the subset of an estimate that a
+# live run can actually time, keyed by the phase names the telemetry spans
+# use.  Keep these in sync with obs.drift.SPAN_PHASES.
+# ---------------------------------------------------------------------------
+
+
+def modeled_phases(e: Estimate) -> dict:
+    """Per-phase modeled seconds for a *training* run."""
+    return {
+        "step": e.t_step,
+        "a2a": e.t_a2a_exposed,
+        "p2p": e.t_p2p,
+        "ckpt": e.t_ckpt,
+        "compute": e.t_compute,
+        "dp_grad": e.t_dp_grad,
+    }
+
+
+def modeled_serve_phases(se: ServeEstimate) -> dict:
+    """Per-phase modeled seconds for a *serving* run."""
+    return {
+        "decode": se.t_decode,
+        "prefill": se.ttft,
+        "weights": se.t_weights,
+        "kv": se.t_kv,
+    }

@@ -29,6 +29,8 @@ import time
 import traceback
 from pathlib import Path
 
+from repro import obs
+
 RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
 
 # v5e per-chip HBM; memory policy below keeps every cell under this.
@@ -326,7 +328,11 @@ def run_cell(
                     params, cache, batch, jax.ShapeDtypeStruct((), jnp.int32)
                 )
             t_lower = time.time()
-            compiled = lowered.compile()
+            obs.get_telemetry().record_span(
+                "dryrun.lower", t_lower - t_start, cell=cell, kind=shape.kind
+            )
+            with obs.span("dryrun.compile", cell=cell, kind=shape.kind):
+                compiled = lowered.compile()
             t_compile = time.time()
 
         ma = compiled.memory_analysis()
@@ -477,7 +483,16 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--jobs", type=int, default=3)
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write lower/compile telemetry spans as JSONL "
+                         "(in-process cells only; --all fans out to "
+                         "subprocesses)")
     args = ap.parse_args()
+
+    if args.metrics_out:
+        obs.configure(
+            enabled=True, sinks=[obs.JsonlSink(args.metrics_out)]
+        )
 
     if args.all:
         _run_all(args.jobs, args.force)
@@ -497,6 +512,7 @@ def main():
         tag=args.tag,
     )
     status = rec.get("status")
+    obs.get_telemetry().close()
     print(json.dumps({k: v for k, v in rec.items()
                       if k not in ("traceback",)}, indent=1)[:2000])
     if status == "error":

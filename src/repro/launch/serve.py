@@ -45,6 +45,11 @@ def main():
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--num-blocks", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the engine's structured event stream as "
+                         "JSONL here; a Chrome trace_event view lands next "
+                         "to it as <path>.trace.json and a decode drift "
+                         "report prints at end of run")
     args = ap.parse_args()
 
     import dataclasses
@@ -115,6 +120,12 @@ def main():
     with plan.mesh:
         params = init_params(arch, jax.random.PRNGKey(args.seed))
         engine = Engine(lm, params, cfg)
+        if args.metrics_out:
+            # Tee the engine's always-on event stream (the same one its
+            # deterministic tuple trace is a view of) to a JSONL log.
+            from repro import obs
+
+            engine.telemetry.sinks.append(obs.JsonlSink(args.metrics_out))
         reqs = [
             Request(
                 rid=i,
@@ -133,6 +144,9 @@ def main():
               f"{engine.decode_steps} decode steps, {n_preempt} preemptions")
         for rid in sorted(out)[:4]:
             print(f"  req {rid} (prompt {lengths[rid]:2d}): {out[rid]}")
+
+        if args.metrics_out:
+            _telemetry_reports(args, arch, engine, max_seqs)
 
         # -- decode parity probe vs the uncached forward -------------------
         # Replay request 0's sequence through the paged prefill + decode
@@ -189,6 +203,37 @@ def main():
         if arch.moe is not None:
             assert err <= 1e-5, f"ragged decode parity violated: {err}"
             print("[parity] ragged OK (<= 1e-5)")
+
+
+def _telemetry_reports(args, arch, engine, max_seqs):
+    """End-of-run observability artifacts for a serving run: decode/prefill
+    drift vs the serving resource model at this run's shape, plus a Chrome
+    trace_event view of the engine's event stream."""
+    from repro import obs
+    from repro.core import resource_model as rm
+    from repro.core.platform import TPU_V5E
+
+    events = engine.trace_ring.events()
+    setup = rm.ServeSetup(
+        batch=max_seqs,
+        context=args.context,
+        prefill_len=args.prefill_len,
+        **({"dispatch": arch.moe.dispatch} if arch.moe else {}),
+    )
+    se = rm.serve_estimate(rm.ModelShape.from_arch(arch), setup, TPU_V5E)
+    tracker = obs.DriftTracker(rm.modeled_serve_phases(se))
+    n = tracker.observe_events(events)
+    print(tracker.format_report(
+        f"drift {args.arch} serving: host-measured vs TPU-v5e model "
+        f"(structural when run on CPU)"
+    ))
+    trace_path = args.metrics_out + ".trace.json"
+    obs.write_chrome_trace(
+        trace_path, events, process_name=f"serve {args.arch}"
+    )
+    print(f"[obs] {len(events)} events ({n} drift spans) -> "
+          f"{args.metrics_out}; chrome trace: {trace_path}")
+    engine.telemetry.close()
 
 
 if __name__ == "__main__":

@@ -54,12 +54,18 @@ def main():
                          "(1 = monolithic); default: the planner's choice")
     ap.add_argument("--migrate-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write telemetry events as JSONL here; a Chrome "
+                         "trace_event view (openable in Perfetto, with "
+                         "per-stage pipeline lanes when PP>1) lands next "
+                         "to it as <path>.trace.json and a model-vs-"
+                         "measured drift report prints at end of run")
     args = ap.parse_args()
 
     import jax
     import numpy as np
 
-    from repro import training
+    from repro import obs, training
     from repro.configs import get_arch
     from repro.core import planner
     from repro.core.platform import TPU_V5E
@@ -68,6 +74,16 @@ def main():
     from repro.optim import OptimizerConfig
     from repro.runtime import Trainer, TrainerConfig
     from repro.sharding import host_mesh, make_plan, single_device_plan
+
+    # Telemetry: --metrics-out turns the (otherwise zero-cost) spans across
+    # trainer/pipeline/checkpointing on, teeing every event to a JSONL log
+    # and an in-memory ring the end-of-run reports read back.
+    ring = None
+    if args.metrics_out:
+        ring = obs.RingBufferSink()
+        obs.configure(
+            enabled=True, sinks=[ring, obs.JsonlSink(args.metrics_out)]
+        )
 
     arch = get_arch(args.arch)
     if args.reduced:
@@ -204,6 +220,68 @@ def main():
               f"loss={float(out['metrics']['loss']):.4f} "
               f"migrations={len(out['migrations'])} "
               f"stragglers={len(out['stragglers'])}")
+
+    if ring is not None:
+        _telemetry_reports(args, arch, plan, ring)
+        obs.get_telemetry().close()
+
+
+def _telemetry_reports(args, arch, plan, ring):
+    """End-of-run observability artifacts: the model-vs-measured drift
+    report (this run's shape priced on TPU v5e — structural ratios when the
+    run itself was host-lowered) and a Chrome trace_event file with
+    per-stage schedule lanes when the run was pipelined."""
+    from repro import obs
+    from repro.core import resource_model as rm
+    from repro.core import schedules as sched_lib
+    from repro.core.platform import TPU_V5E
+
+    events = ring.events()
+    pp = max(plan.pp, 1)
+    ep = max(plan.ep, 1)
+    tp = max(plan.tp, 1)
+    setup = rm.TrainSetup(
+        b=args.batch,
+        s=args.seq,
+        PP=pp,
+        EP=ep,
+        DP=max(plan.num_devices // (pp * ep * tp), 1),
+        zero="world",
+        **(
+            {"schedule": plan.schedule, "vstages": plan.vstages}
+            if plan.pp > 1
+            else {}
+        ),
+        **({"dispatch": arch.moe.dispatch} if arch.moe else {}),
+    )
+    est = rm.estimate(rm.ModelShape.from_arch(arch), setup, TPU_V5E)
+    tracker = obs.DriftTracker(rm.modeled_phases(est))
+    n = tracker.observe_events(events)
+    print(tracker.format_report(
+        f"drift {args.arch}: host-measured vs TPU-v5e model "
+        f"(structural when run on CPU)"
+    ))
+
+    sched = None
+    tick_s = 1e-3
+    if plan.pp > 1:
+        M = plan.microbatches or 2 * plan.pp
+        sched = sched_lib.build(plan.schedule, plan.pp, M, plan.vstages)
+        # Scale the lane ticks so the rendered pipeline spans the same
+        # wall clock as a measured (post-compile) step.
+        steps = [
+            e["dur"] for e in events
+            if e["kind"] == "span" and e["name"] == "train.step"
+        ]
+        if len(steps) > 1:
+            tick_s = (sum(steps[1:]) / (len(steps) - 1)) / sched.num_ticks
+    trace_path = args.metrics_out + ".trace.json"
+    obs.write_chrome_trace(
+        trace_path, events, schedule=sched, tick_s=tick_s,
+        process_name=f"train {args.arch}",
+    )
+    print(f"[obs] {len(events)} events ({n} drift spans) -> "
+          f"{args.metrics_out}; chrome trace: {trace_path}")
 
 
 if __name__ == "__main__":

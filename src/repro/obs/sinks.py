@@ -1,0 +1,71 @@
+"""Telemetry sinks: where events go.
+
+A sink is any object with ``emit(event: dict)`` and ``close()``.  The
+``Telemetry`` router calls ``emit`` under its lock, so sinks themselves
+need no locking of their own.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+__all__ = ["Sink", "RingBufferSink", "JsonlSink"]
+
+
+class Sink:
+    def emit(self, event: Dict[str, Any]) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class RingBufferSink(Sink):
+    """Keep the last ``capacity`` events in memory (unbounded when
+    ``capacity`` is None).  The serving engine's structured trace and the
+    launch scripts' end-of-run drift/chrome exports both read from one of
+    these."""
+
+    def __init__(self, capacity: Optional[int] = None):
+        self.buf: deque = deque(maxlen=capacity)
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        self.buf.append(event)
+
+    def events(self) -> List[Dict[str, Any]]:
+        return list(self.buf)
+
+    def __len__(self) -> int:
+        return len(self.buf)
+
+    def clear(self) -> None:
+        self.buf.clear()
+
+
+class JsonlSink(Sink):
+    """One JSON object per line, append-only.  ``--metrics-out`` on the
+    launch scripts points here; ``jq`` / pandas read it back directly."""
+
+    def __init__(self, path):
+        self.path = str(path)
+        self._fh = open(self.path, "w")
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        self._fh.write(json.dumps(event, default=_jsonable) + "\n")
+
+    def close(self) -> None:
+        if not self._fh.closed:
+            self._fh.flush()
+            self._fh.close()
+
+
+def _jsonable(obj):
+    """Fallback encoder: tuples arrive via event attrs (e.g. decode rid
+    sets); numpy scalars via metric fetches."""
+    if isinstance(obj, (tuple, set)):
+        return list(obj)
+    if hasattr(obj, "item"):
+        return obj.item()
+    return str(obj)

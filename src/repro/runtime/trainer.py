@@ -48,6 +48,7 @@ from typing import Any, Callable, Dict, Iterator, List, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 from repro.core import migration as mig
 from repro.models.model import LanguageModel
@@ -130,7 +131,16 @@ class Trainer:
         self.migrations: List[Dict[str, Any]] = []
         self.anomalies: List[Dict[str, Any]] = []
         self.rollbacks: List[Dict[str, Any]] = []
+        # Every blocking device->host metric fetch goes through _fetch and
+        # is counted here, so tests can pin the hot-loop sync cadence.
+        self.host_fetches = 0
         self._stop = False
+
+    def _fetch(self, x):
+        """Blocking device->host fetch of a metric value (counted)."""
+        self.host_fetches += 1
+        obs.counter("train.host_fetches")
+        return jax.device_get(x)
 
     # -- fault handling ------------------------------------------------------
 
@@ -264,6 +274,10 @@ class Trainer:
         n_replicas = (
             int((new_reps_all < E).sum(axis=1).max()) if have_reps else 0
         )
+        obs.instant(
+            "train.migrate_planned", step=step, imbalance=imb,
+            imbalance_post=imb_post, swaps=total_swaps, replicas=n_replicas,
+        )
         record: Dict[str, Any] = {
             "step": step,
             "imbalance": imb,
@@ -325,6 +339,7 @@ class Trainer:
         new_state = jax.device_put(new_state, live_shardings)
         dt = time.perf_counter() - t0
         record.update({"seconds": dt, "applied": True})
+        obs.histogram("train.migrate_s", dt, step=step)
         self.migrations.append(record)
         self.log(
             f"[migrate] step={step} imbalance={imb:.2f}->{imb_post:.2f} "
@@ -445,7 +460,7 @@ class Trainer:
                 + (f"V={plan.vstages} " if plan.vstages > 1 else "")
                 + f"(M={plan.microbatches or 2 * plan.pp})"
             )
-        start_step = int(jax.device_get(state["step"]))
+        start_step = int(self._fetch(state["step"]))
         if self.ckpt is not None:
             try:
                 abstract, shardings = self._abstract_and_shardings(state)
@@ -471,7 +486,8 @@ class Trainer:
                 os.kill(os.getpid(), signal.SIGTERM)
             if self._stop:
                 break
-            batch = self._next_batch(data, data_it, indexed, step)
+            with obs.span("train.data", step=step):
+                batch = self._next_batch(data, data_it, indexed, step)
             if self._batch_shape is None:
                 tok = batch["tokens"]
                 self._batch_shape = (int(tok.shape[0]), int(tok.shape[1]))
@@ -482,11 +498,19 @@ class Trainer:
             # Slow-step injection sleeps inside the timed window so the
             # straggler monitor sees it like a real slow host.
             self.injector.sleep_if("train.slow_step", step)
-            state, metrics = self.train_step(state, batch)
-            loss = float(jax.device_get(metrics["loss"]))
-            skipped = bool(jax.device_get(metrics.get("skipped", 0)))
+            with obs.span("train.step", step=step) as sp:
+                state, metrics = self.train_step(state, batch)
+                # The ONE per-step host sync: the in-jit anomaly sentinel's
+                # verdict (the branch below must run on the host).  Fetching
+                # it blocks until the step finishes, which also makes dt a
+                # true wall time.  loss/grad_norm stay on device except on
+                # log steps and skips — fetching them every step serializes
+                # the device against the host (the old hot-loop bug).
+                skipped = bool(self._fetch(metrics.get("skipped", 0)))
+                sp.set(skipped=skipped)
             dt = time.perf_counter() - t0
             self.step_times.append(dt)
+            obs.histogram("train.step_s", dt, step=step)
             # Straggler detection on the step-time EMA.
             if len(self.step_times) > 5:
                 ema = float(np.mean(self.step_times[-20:-1]))
@@ -500,7 +524,11 @@ class Trainer:
                 # The sentinel refused the update (state unchanged): count
                 # the streak, roll back to the last good checkpoint once it
                 # crosses the budget, and re-enter AT the restored step.
-                gnorm = float(jax.device_get(metrics["grad_norm"]))
+                loss = float(self._fetch(metrics["loss"]))
+                gnorm = float(self._fetch(metrics["grad_norm"]))
+                obs.instant(
+                    "train.anomaly", step=step, loss=loss, grad_norm=gnorm
+                )
                 anomaly_streak += 1
                 self.anomalies.append(
                     {"step": step, "loss": loss, "grad_norm": gnorm}
@@ -518,7 +546,10 @@ class Trainer:
                 continue
             anomaly_streak = 0
             if self.load_stats is not None and "expert_load" in metrics:
-                loads = np.asarray(jax.device_get(metrics["expert_load"]))
+                # Migration controller EMA: stays per-step on purpose — the
+                # SIGTERM-restart tests pin the controller bit-exact, and
+                # thinning the EMA feed would change its trajectory.
+                loads = np.asarray(self._fetch(metrics["expert_load"]))
                 # (reps, n_moe_pos, E) -> stack order (pos-major, rep)
                 loads = np.concatenate(
                     [loads[:, i, :] for i in range(loads.shape[1])]
@@ -526,6 +557,8 @@ class Trainer:
                 self.load_stats.update(loads)
             state = self._maybe_migrate(state, step + 1)
             if step % self.cfg.log_every == 0:
+                loss = float(self._fetch(metrics["loss"]))
+                obs.gauge("train.loss", loss, step=step)
                 self.log(
                     f"[train] step={step} loss={loss:.4f} "
                     f"({dt*1e3:.0f} ms/step)"

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import migration as mig
 from repro.runtime.faults import FaultInjector
 from repro.serving.kv_cache import BlockPool, PagedLayout
@@ -161,7 +162,15 @@ class Engine:
         # Tokens generated before a preemption (the re-queued request
         # carries them in its prompt; outputs must still report them).
         self._gen_prefix: Dict[int, List[int]] = {}
-        self.trace: List[Tuple] = []
+        # Structured telemetry: the engine always records its own event
+        # stream into an unbounded ring (cheap: dict appends, no clock
+        # sync with the device).  The deterministic tuple trace the
+        # serving tests pin is a derived VIEW over it (`trace` property) —
+        # rebuilt from event attrs only, never timestamps, so two runs of
+        # the same workload still compare equal.  Launch scripts tee the
+        # same stream to JSONL by appending a sink.
+        self.trace_ring = obs.RingBufferSink()
+        self.telemetry = obs.Telemetry(enabled=True, sinks=[self.trace_ring])
         self.step_no = 0
         self.decode_steps = 0
         self.decoded_tokens = 0
@@ -185,6 +194,42 @@ class Engine:
         # the power-of-two padding in _bucket is what bounds that cache.
         self._prefill = jax.jit(lm.prefill_paged)
 
+    # -- structured trace ----------------------------------------------------
+
+    # Event kind -> ordered attr fields of the legacy tuple encoding
+    # ``(kind, step, *fields)``.  The tuple view and the structured stream
+    # are the same data by construction; tests assert it.
+    _TRACE_FIELDS = {
+        "submit": ("rid",),
+        "stall": (),
+        "abort": ("rid", "reason"),
+        "admit": ("rid", "slot"),
+        "prefill": ("rid", "plen", "bucket"),
+        "decode": ("rids",),
+        "rebalance": ("swaps", "replicas"),
+        "finish": ("rid", "ntokens"),
+        "preempt": ("rid",),
+    }
+
+    def _trace(self, kind: str, **fields) -> None:
+        self.telemetry.instant("engine." + kind, step=self.step_no, **fields)
+
+    @property
+    def trace(self) -> List[Tuple]:
+        """Back-compat tuple view of the structured event stream."""
+        out: List[Tuple] = []
+        prefix = "engine."
+        for ev in self.trace_ring.events():
+            if ev["kind"] != "instant" or not ev["name"].startswith(prefix):
+                continue
+            kind = ev["name"][len(prefix):]
+            fields = self._TRACE_FIELDS.get(kind)
+            if fields is None:
+                continue
+            a = ev["attrs"]
+            out.append((kind, a["step"]) + tuple(a[f] for f in fields))
+        return out
+
     # -- public API ---------------------------------------------------------
 
     def submit(self, req: Request) -> None:
@@ -203,7 +248,7 @@ class Engine:
             f"forever"
         )
         self.queue.append(req)
-        self.trace.append(("submit", self.step_no, req.rid))
+        self._trace("submit", rid=req.rid)
 
     def run(self, requests: Sequence[Request]) -> Dict[int, List[int]]:
         """Serve ``requests`` to completion; returns rid -> generated ids."""
@@ -222,13 +267,15 @@ class Engine:
         # the host is wedged behind a slow collective) — deadline budget
         # burns, nothing progresses.
         if self.injector.fire("serve.stall", self.step_no) is not None:
-            self.trace.append(("stall", self.step_no))
+            self._trace("stall")
             return
-        self._shed_expired()
-        self._admit_and_prefill()
-        self._decode_once()
-        self._maybe_rebalance()
-        self.pool.check_invariants()
+        with self.telemetry.span("engine.step", step=self.step_no) as sp:
+            self._shed_expired()
+            self._admit_and_prefill()
+            self._decode_once()
+            self._maybe_rebalance()
+            self.pool.check_invariants()
+            sp.set(running=len(self.running), queued=len(self.queue))
 
     # -- graceful degradation -------------------------------------------------
 
@@ -290,7 +337,7 @@ class Engine:
             detail=detail,
             generated=generated,
         )
-        self.trace.append(("abort", self.step_no, req.rid, reason))
+        self._trace("abort", rid=req.rid, reason=reason)
 
     # -- admission + prefill -------------------------------------------------
 
@@ -324,23 +371,30 @@ class Engine:
             slot = self.pool.admit(plen)
             st = _SeqState(req=req, slot=slot, admitted_at=self.step_no)
             self.running[slot] = st
-            self.trace.append(("admit", self.step_no, req.rid, slot))
+            self._trace("admit", rid=req.rid, slot=slot)
             budget -= plen
             self._prefill_one(st)
 
     def _prefill_one(self, st: _SeqState) -> None:
         plen = int(st.req.tokens.size)
         bucket = _bucket(plen)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :plen] = st.req.tokens
-        bt = jnp.asarray(self.pool.block_table[st.slot][None])
-        lens = jnp.asarray([plen], jnp.int32)
-        logits, self.cache = self._prefill(
-            self.params, {"tokens": jnp.asarray(toks)}, self.cache, bt, lens
-        )
-        tok = int(jnp.argmax(logits[0]))
+        with self.telemetry.span(
+            "engine.prefill", step=self.step_no, rid=st.req.rid,
+            plen=plen, bucket=bucket,
+        ):
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :plen] = st.req.tokens
+            bt = jnp.asarray(self.pool.block_table[st.slot][None])
+            lens = jnp.asarray([plen], jnp.int32)
+            logits, self.cache = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks)}, self.cache, bt,
+                lens,
+            )
+            # int() blocks on the device — keep the sync inside the span so
+            # its duration is the real prefill latency.
+            tok = int(jnp.argmax(logits[0]))
         st.generated.append(tok)
-        self.trace.append(("prefill", self.step_no, st.req.rid, plen, bucket))
+        self._trace("prefill", rid=st.req.rid, plen=plen, bucket=bucket)
         self._retire_if_done(st)
 
     # -- decode --------------------------------------------------------------
@@ -369,27 +423,33 @@ class Engine:
             toks[slot, 0] = st.generated[-1]
             lens[slot] = fills[slot]
         bt = jnp.asarray(self.pool.block_table)
-        if self.load_stats is not None:
-            logits, self.cache, loads = self._decode(
-                self.params, self.cache, bt, jnp.asarray(lens),
-                {"tokens": jnp.asarray(toks)}, return_loads=True,
-            )
-            # (reps, n_moe_pos, E) -> LoadStats row order (pos-major, rep)
-            l = np.asarray(jax.device_get(loads))
-            self.load_stats.update(
-                np.concatenate([l[:, i, :] for i in range(l.shape[1])])
-            )
-        else:
-            logits, self.cache = self._decode(
-                self.params, self.cache, bt, jnp.asarray(lens),
-                {"tokens": jnp.asarray(toks)},
-            )
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        with self.telemetry.span(
+            "engine.decode", step=self.step_no, batch=len(self.running),
+        ):
+            if self.load_stats is not None:
+                logits, self.cache, loads = self._decode(
+                    self.params, self.cache, bt, jnp.asarray(lens),
+                    {"tokens": jnp.asarray(toks)}, return_loads=True,
+                )
+                # (reps, n_moe_pos, E) -> LoadStats row order
+                # (pos-major, rep)
+                l = np.asarray(jax.device_get(loads))
+                self.load_stats.update(
+                    np.concatenate([l[:, i, :] for i in range(l.shape[1])])
+                )
+            else:
+                logits, self.cache = self._decode(
+                    self.params, self.cache, bt, jnp.asarray(lens),
+                    {"tokens": jnp.asarray(toks)},
+                )
+            # The argmax fetch is the per-step device sync — inside the
+            # span so dur is the true decode-step latency.
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
         active = sorted(self.running)
         self.decode_steps += 1
         self.decoded_tokens += len(active)
-        self.trace.append(
-            ("decode", self.step_no, tuple(self.running[s].req.rid for s in active))
+        self._trace(
+            "decode", rids=tuple(self.running[s].req.rid for s in active)
         )
         for slot in active:
             st = self.running[slot]
@@ -486,9 +546,7 @@ class Engine:
                 "replicas": n_replicas,
             }
         )
-        self.trace.append(
-            ("rebalance", self.step_no, total_swaps, n_replicas)
-        )
+        self._trace("rebalance", swaps=total_swaps, replicas=n_replicas)
 
     # -- lifecycle helpers ---------------------------------------------------
 
@@ -499,7 +557,7 @@ class Engine:
         del self.running[st.slot]
         out = self._gen_prefix.pop(st.req.rid, []) + list(st.generated)
         self.finished[st.req.rid] = out
-        self.trace.append(("finish", self.step_no, st.req.rid, len(out)))
+        self._trace("finish", rid=st.req.rid, ntokens=len(out))
 
     def _slots_by_age(self, youngest_first: bool = False) -> List[int]:
         order = sorted(
@@ -530,4 +588,4 @@ class Engine:
                 deadline_step=st.req.deadline_step,
             )
         )
-        self.trace.append(("preempt", self.step_no, st.req.rid))
+        self._trace("preempt", rid=st.req.rid)
