@@ -54,6 +54,30 @@ assert all(s["num_wslots"] > 0 and s["wstash_bytes_ref"] > 0 for s in zb), (
 print(f"zb gate ok: {len(zb)} zb_h1 cells, equal-slot bubble win on all")
 PY
 
+# Comm-lane overlap acceptance gate on the committed schedule bench:
+# 1f1b_overlap rows exist and, against the non-overlap 1f1b twin of the
+# SAME (PP, M) cell, keep the identical compute account (makespan,
+# residual slots, bubble) while strictly reducing the modeled exposed p2p
+# on EVERY cell (and never losing the a2a bracket comparison).
+python - <<'PY'
+import json
+rec = json.load(open("BENCH_schedules.json"))
+ov = [s for s in rec["sweep"] if s["schedule"] == "1f1b_overlap"]
+assert ov, "BENCH_schedules.json has no 1f1b_overlap rows -- regenerate it"
+s = rec["summary"]
+assert s["overlap_same_compute_all"] is True, (
+    "1f1b_overlap must keep 1f1b's makespan/slots/bubble on every cell")
+assert s["overlap_exposed_p2p_win_all"] is True, (
+    "1f1b_overlap must strictly reduce exposed p2p vs 1f1b on every cell")
+assert s["overlap_exposed_a2a_win_all"] is True, (
+    "1f1b_overlap must never lose the exposed-a2a comparison")
+assert all(x["num_cslots"] >= 1 for x in ov), (
+    "overlap rows must report their in-flight comm-slot pool")
+print(f"overlap gate ok: {len(ov)} cells, strict exposed-p2p win on all "
+      f"(max shrink {s['overlap_p2p_shrink_max']:.2f}x, "
+      f"<= {s['overlap_cslots_max']} comm slots)")
+PY
+
 # Chunked-a2a acceptance gate on the committed overlap bench: the best
 # chunked K strictly beats the monolithic K=1 layer pass on at least one
 # multi-device cell, and the calibrated comm-model's argmax-K direction

@@ -24,8 +24,15 @@ from typing import Optional, Sequence, Tuple
 # zero-bubble ZB-H1 schedule: backward split into activation-grad (Bi) and
 # deferred weight-grad (Bw) ops at 1F1B-equal residual memory, the drain
 # bubble filled by the deferred Bw's (plus a small W-stash priced
-# separately by the resource model).
-SCHEDULES: Tuple[str, ...] = ("gpipe", "1f1b", "interleaved_1f1b", "zb_h1")
+# separately by the resource model).  ``1f1b_overlap`` is 1F1B with the
+# stage P2P hand-offs promoted to first-class comm ops on the IR's comm
+# lane (send at the producer tick, recv at the consumer tick,
+# double-buffered in-flight comm slots) so the transfer overlaps the
+# intervening compute — same compute table, residual slots and bubble as
+# 1f1b, with the modeled exposed p2p collapsing to the fill staircase.
+SCHEDULES: Tuple[str, ...] = (
+    "gpipe", "1f1b", "1f1b_overlap", "interleaved_1f1b", "zb_h1"
+)
 DEFAULT_SCHEDULE = "1f1b"
 
 # Expert dispatch modes the system understands end-to-end: the MoE layer

@@ -602,7 +602,10 @@ def pipelined_step(
     ``Schedule.occupancy_trace()``.  For split-backward schedules
     (``zb_h1``) ``metrics["pipeline_wstash_occupancy"]`` carries the
     executed deferred-weight-grad residency, comparable 1:1 with
-    ``Schedule.wstash_trace()``.
+    ``Schedule.wstash_trace()``; for comm-lane schedules
+    (``1f1b_overlap``) ``metrics["pipeline_comm_inflight"]`` carries the
+    executed comm-buffer residency, comparable 1:1 with
+    ``Schedule.comm_trace()``.
     """
     pp_axis = plan.pp_axis
     assert pp_axis is not None
@@ -636,6 +639,7 @@ def pipelined_step(
         "pipeline.schedule", schedule=sched_name, PP=PP, M=M, V=V,
         num_ticks=sched.num_ticks, slots=sched.num_slots,
         wslots=sched.num_wslots,
+        cslots=sched.num_cslots_fwd + sched.num_cslots_bwd,
     )
     T = sched.num_ticks
     K = sched.num_slots
@@ -644,6 +648,17 @@ def pipelined_step(
     # schedules allocate none and skip the whole Bw phase at trace time.
     Kw = sched.num_wslots
     has_split = Kw > 0
+    # Comm-lane schedules (1f1b_overlap): hand-offs still ride the every-
+    # tick ppermute on their SEND tick edge, but a dwelling payload parks
+    # in a scan-carried comm buffer (num_cslots_fwd/_bwd double-buffer
+    # slots) until its RECV tick instead of being written straight into
+    # its residual slot — the IR's in-flight window, executed.  A2A
+    # brackets are pricing/legality ops only: the expert a2a itself runs
+    # (and overlaps) inside the MoE layer.  Schedules without a comm lane
+    # take none of these branches — their trace is unchanged.
+    Kcf = sched.num_cslots_fwd
+    Kcb = sched.num_cslots_bwd
+    has_comm = sched.has_comm
     ring = V > 1  # chunk hand-offs wrap around the stage ring
 
     staged, rpc = _stage_block_params(block_params, arch, plan, vstages=V)
@@ -676,6 +691,11 @@ def pipelined_step(
         afwd_t = jnp.asarray(tt.arrive_fwd)
         abwd_t = jnp.asarray(tt.arrive_bwd)
         wslot_t = jnp.asarray(tt.wslot)
+        if has_comm:
+            storef_t = jnp.asarray(tt.store_fwd)
+            srcf_t = jnp.asarray(tt.src_fwd)
+            storeb_t = jnp.asarray(tt.store_bwd)
+            srcb_t = jnp.asarray(tt.src_bwd)
 
         act_spec = P(tuple(plan.dp_axes), tuple(plan.sp_axes), None)
 
@@ -737,19 +757,65 @@ def pipelined_step(
         )
 
         def tick(carry, t):
-            (in_buf, cot_buf, wstash, recv_h, recv_g, gacc, gemb, ghead,
-             ce, aux, z, loads, live, live_w) = carry
+            (in_buf, cot_buf, wstash, cstate, recv_h, recv_g, gacc, gemb,
+             ghead, ce, aux, z, loads, live, live_w) = carry
 
             # -- 1. park wire arrivals in their residual slots -------------
+            # Comm-lane schedules route a dwelling payload through the comm
+            # buffer: store the wire arrival at its Send+1 tick, consume it
+            # at its Recv tick.  The consume is read BEFORE the store — a
+            # comm slot freed at this tick can be re-filled by this tick's
+            # arrival.  Zero-dwell payloads (src/store -1) park directly
+            # from the wire, exactly the legacy path.
+            pay_h, pay_g = recv_h, recv_g
+            if has_comm:
+                cbuf_h, cbuf_g, live_c = cstate
+                if cbuf_h is not None:
+                    src_f = srcf_t[stage, t]
+                    st_f = storef_t[stage, t]
+                    held = lax.dynamic_index_in_dim(
+                        cbuf_h, src_f, 0, keepdims=False
+                    )
+                    pay_h = jnp.where(src_f >= 0, held, recv_h)
+                    curs = lax.dynamic_index_in_dim(
+                        cbuf_h, st_f, 0, keepdims=False
+                    )
+                    cbuf_h = lax.dynamic_update_index_in_dim(
+                        cbuf_h, jnp.where(st_f >= 0, recv_h, curs), st_f, 0
+                    )
+                    live_c = (
+                        live_c
+                        + (st_f >= 0).astype(jnp.int32)
+                        - (src_f >= 0).astype(jnp.int32)
+                    )
+                if cbuf_g is not None:
+                    src_b = srcb_t[stage, t]
+                    st_b = storeb_t[stage, t]
+                    heldg = lax.dynamic_index_in_dim(
+                        cbuf_g, src_b, 0, keepdims=False
+                    )
+                    pay_g = jnp.where(src_b >= 0, heldg, recv_g)
+                    curg = lax.dynamic_index_in_dim(
+                        cbuf_g, st_b, 0, keepdims=False
+                    )
+                    cbuf_g = lax.dynamic_update_index_in_dim(
+                        cbuf_g, jnp.where(st_b >= 0, recv_g, curg), st_b, 0
+                    )
+                    live_c = (
+                        live_c
+                        + (st_b >= 0).astype(jnp.int32)
+                        - (src_b >= 0).astype(jnp.int32)
+                    )
+                cstate = (cbuf_h, cbuf_g, live_c)
             a_f = afwd_t[stage, t]
             cur = lax.dynamic_index_in_dim(in_buf, a_f, 0, keepdims=False)
             in_buf = lax.dynamic_update_index_in_dim(
-                in_buf, jnp.where(a_f >= 0, recv_h, cur), a_f, 0
+                in_buf, jnp.where(a_f >= 0, pay_h, cur), a_f, 0
             )
             a_b = abwd_t[stage, t]
             curc = lax.dynamic_index_in_dim(cot_buf, a_b, 0, keepdims=False)
             cot_buf = lax.dynamic_update_index_in_dim(
-                cot_buf, jnp.where(a_b >= 0, recv_g, curc), a_b, 0
+                cot_buf, jnp.where(a_b >= 0, pay_g, curc), a_b, 0
             )
 
             # -- 2. the tick's op (F / B / Bi / Bw / idle, from the IR) ----
@@ -866,8 +932,10 @@ def pipelined_step(
             live = live + is_f.astype(jnp.int32) - is_cot.astype(jnp.int32)
             sent_h = _send_fwd(y, plan, ring=ring)
             sent_g = _send_bwd(g_h.astype(act_dtype), plan, ring=ring)
-            carry = (in_buf, cot_buf, wstash, sent_h, sent_g, gacc, gemb,
-                     ghead, ce, aux, z, loads, live, live_w)
+            carry = (in_buf, cot_buf, wstash, cstate, sent_h, sent_g, gacc,
+                     gemb, ghead, ce, aux, z, loads, live, live_w)
+            if has_comm:
+                return carry, (live, live_w, cstate[2])
             return carry, (live, live_w)
 
         wstash0 = (
@@ -878,18 +946,32 @@ def pipelined_step(
             if has_split
             else None
         )
+        cstate0 = (
+            (
+                jnp.zeros((Kcf, b_mu, s, d), act_dtype) if Kcf else None,
+                jnp.zeros((Kcb, b_mu, s, d), act_dtype) if Kcb else None,
+                jnp.int32(0),
+            )
+            if has_comm
+            else None
+        )
         carry0 = (
             jnp.zeros((K, b_mu, s, d), act_dtype),
             jnp.zeros((K, b_mu, s, d), act_dtype),
             wstash0,
+            cstate0,
             zero_h, zero_h,
             gacc0, gemb0, ghead0,
             f32z, f32z, f32z, zero_loads, jnp.int32(0), jnp.int32(0),
         )
-        carry, (occ, wocc) = lax.scan(tick, carry0, jnp.arange(T))
-        (_, _, _, _, _, gacc, gemb, ghead, ce, aux, z, loads, _, _) = carry
+        if has_comm:
+            carry, (occ, wocc, cocc) = lax.scan(tick, carry0, jnp.arange(T))
+        else:
+            carry, (occ, wocc) = lax.scan(tick, carry0, jnp.arange(T))
+            cocc = jnp.zeros((T,), jnp.int32)
+        (_, _, _, _, _, _, gacc, gemb, ghead, ce, aux, z, loads, _, _) = carry
         g_blocks = sp_rebuild(gacc)
-        return g_blocks, gemb, ghead, ce, aux, z, loads, occ, wocc
+        return g_blocks, gemb, ghead, ce, aux, z, loads, occ, wocc, cocc
 
     in_specs = (
         jax.tree.map(lambda v: P(pp_axis), staged),
@@ -908,10 +990,12 @@ def pipelined_step(
         P(pp_axis) if has_moe else P(),
         P(pp_axis),  # occupancy (PP, T)
         P(pp_axis),  # W-stash occupancy (PP, T); zeros for fused schedules
+        P(pp_axis),  # comm in-flight (PP, T); zeros without a comm lane
     )
 
     def wrapped(stage_params, emb_p, head_p, xm_in, lbl_in):
-        g_blocks, gemb, ghead, ce, aux, z, loads, occ, wocc = stage_program(
+        (g_blocks, gemb, ghead, ce, aux, z, loads, occ, wocc,
+         cocc) = stage_program(
             stage_params, emb_p, head_p, xm_in, lbl_in
         )
         lead = lambda v: v[None]
@@ -923,9 +1007,10 @@ def pipelined_step(
         else:
             loads = loads[None]
         return (g_blocks, gemb, ghead, ce[None], aux[None],
-                z[None], loads, occ[None], wocc[None])
+                z[None], loads, occ[None], wocc[None], cocc[None])
 
-    (g_blocks, gemb, ghead, ce, aux, z, loads, occ, wocc) = compat.shard_map(
+    (g_blocks, gemb, ghead, ce, aux, z, loads, occ, wocc,
+     cocc) = compat.shard_map(
         wrapped,
         mesh=mesh,
         in_specs=in_specs,
@@ -957,6 +1042,10 @@ def pipelined_step(
         # Executed deferred-weight-grad residency, comparable 1:1 with
         # Schedule.wstash_trace() (all zeros for fused-backward schedules).
         "pipeline_wstash_occupancy": wocc,
+        # Executed comm-buffer residency, comparable 1:1 with
+        # Schedule.comm_trace() (all zeros for schedules without a comm
+        # lane).
+        "pipeline_comm_inflight": cocc,
     }
     grads = {"blocks": g_blocks, "embed": gemb, "head": ghead}
     return loss, grads, metrics, occ

@@ -72,7 +72,9 @@ class Strategy:
             f"t_step={e.t_step*1e3:8.1f}ms "
             f"(comp={e.t_compute*1e3:.1f} a2a={e.t_a2a*1e3:.1f} "
             f"a2a_exp={e.t_a2a_exposed*1e3:.1f} "
-            f"p2p={e.t_p2p*1e3:.1f} dp={e.t_dp_grad*1e3:.1f} "
+            f"p2p={e.t_p2p*1e3:.1f} "
+            f"p2p_exp={e.t_p2p_exposed*1e3:.1f} "
+            f"dp={e.t_dp_grad*1e3:.1f} "
             f"disp={e.t_dispatch*1e3:.1f} drop={e.drop_rate:.2f} "
             f"bubble={e.bubble_fraction:.2f}) "
             f"ckpt@{e.ckpt_every_steps}st goodput={e.goodput_factor*100:.2f}% "

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
+from functools import lru_cache
 from typing import Dict, Optional, Tuple
 
 from repro.configs.base import (
@@ -446,7 +447,9 @@ def memory_pp(m: ModelShape, t: TrainSetup, stage: int = 0) -> float:
         return memory_pp_interleaved(m, t, stage)
     # zb_h1 is Eq-4-equal on the residual slots (Bi frees them on B's
     # cadence); the deferred weight grads add the W-stash on top.
-    return memory_pp_1f1b(m, t, stage) + wstash_bytes(m, t)
+    # Comm-lane schedules (1f1b_overlap) keep 1F1B's Eq-4 residuals and
+    # add the in-flight hand-off buffer (comm_buf_bytes == 0 otherwise).
+    return memory_pp_1f1b(m, t, stage) + wstash_bytes(m, t) + comm_buf_bytes(m, t)
 
 
 def schedule_bubble_fraction(
@@ -540,6 +543,39 @@ def p2p_bytes_per_boundary(m: ModelShape, t: TrainSetup) -> float:
     per EP rank (paper §III-B2: 2 b_mu s d bytes)."""
     b_mu_tok = t.b / t.DP / t.M / t.EP
     return t.bytes_act * b_mu_tok * t.s * m.d_model
+
+
+@lru_cache(maxsize=None)
+def _comm_lane_exposure(
+    schedule: str, PP: int, M: int,
+    t_f: float, t_b: float, t_p2p: float, t_a2a: float,
+) -> Tuple[float, float]:
+    """(exposed_p2p, exposed_a2a) of one comm-lane schedule replay —
+    THE definition the resource model charges for ``has_comm`` schedules,
+    shared verbatim with ``schedule_sim.simulate`` so the model is pinned
+    against the simulator by construction (per-op durations in seconds:
+    ``t_f``/``t_b`` per microbatch per stage, ``t_p2p`` per hop, ``t_a2a``
+    per op bracket)."""
+    from repro.core import schedule_sim as ss
+    from repro.core.schedules import build
+
+    r = ss.simulate(build(schedule, PP, M), t_f, t_b,
+                    t_p2p=t_p2p, t_a2a=t_a2a)
+    return r.exposed_p2p, r.exposed_a2a
+
+
+def comm_buf_bytes(m: ModelShape, t: TrainSetup) -> float:
+    """Per-chip bytes of the comm-lane schedules' in-flight hand-off
+    buffers: one boundary activation per comm slot (fwd) / cotangent
+    (bwd), held between its Send and Recv ticks.  Zero for schedules
+    without a comm lane."""
+    from repro.core.schedules import OVERLAP_BASE, build
+
+    if t.schedule not in OVERLAP_BASE or t.PP <= 1:
+        return 0.0
+    sch = build(t.schedule, t.PP, t.M)
+    slots = sch.num_cslots_fwd + sch.num_cslots_bwd
+    return slots * p2p_bytes_per_boundary(m, t)
 
 
 # ---------------------------------------------------------------------------
@@ -705,6 +741,16 @@ class Estimate:
     a2a_overlap_saving: float = 0.0
     a2a_algo: str = DEFAULT_A2A
     a2a_chunks: int = 1
+    # Comm-lane schedule accounting (1f1b_overlap): t_p2p stays the flat
+    # serial Eq reference (2·M·V hand-offs per stage); t_p2p_exposed is
+    # what actually hits the critical path — the comm-lane dependency
+    # replay for has_comm schedules, the full serial reference otherwise
+    # (the historical charge, a LOWER bound of the synchronous replay) —
+    # and it, not t_p2p, is what t_step charges.  comm_buf_bytes is the
+    # in-flight hand-off buffer the overlap pays for (in mem_stage0).
+    t_p2p_exposed: float = 0.0
+    p2p_overlap_saving: float = 0.0
+    comm_buf_bytes: float = 0.0
     # Reliability pricing (Young–Daly): checkpoint write time, optimal
     # interval (seconds / steps), and the availability-adjusted goodput.
     # mfu_effective = mfu * goodput_factor is the metric long runs buy.
@@ -833,8 +879,30 @@ def estimate(
     else:
         trep = 0.0
 
+    # Comm-lane schedules: replace the flat serial p2p charge with the
+    # comm-lane dependency replay (send at producer tick, recv at
+    # consumer tick — only what the intervening compute cannot cover is
+    # exposed), and cap the a2a exposure by the schedule-level A2A
+    # bracket replay (the tick-granular view of the same hiding the
+    # chunked comm model prices within the layer; the two mechanisms
+    # hide the same serial reference, so the model takes the better one,
+    # they do not compose).  Legacy schedules charge the serial
+    # reference, keeping their t_step bit-identical.
+    from repro.core.schedules import OVERLAP_BASE
+
+    tp2p_exposed = tp2p
+    if t.schedule in OVERLAP_BASE and t.PP > 1 and (tp2p > 0 or ta2a > 0):
+        t_f_mb = tc / (3.0 * t.M)  # per-mb fwd op; bwd is the other 2/3
+        h_hop = tp2p / (2.0 * t.M * t.vstages)
+        a_op = ta2a / (2.0 * t.M)  # per F/B op's bracketed a2a share
+        exp_p2p, exp_a2a = _comm_lane_exposure(
+            t.schedule, t.PP, t.M, t_f_mb, 2.0 * t_f_mb, h_hop, a_op
+        )
+        tp2p_exposed = exp_p2p
+        ta2a_exposed = min(ta2a_exposed, exp_a2a)
+
     exposed = (
-        (ta2a_exposed + tp2p + tdp + trep) * (1.0 - overlap_fraction)
+        (ta2a_exposed + tp2p_exposed + tdp + trep) * (1.0 - overlap_fraction)
     )
     t_step = (
         (tc * t.imbalance + t_disp + exposed) * (1 + bubble)
@@ -887,6 +955,9 @@ def estimate(
         a2a_overlap_saving=ta2a - ta2a_exposed,
         a2a_algo=t.a2a_algo,
         a2a_chunks=t.a2a_chunks,
+        t_p2p_exposed=tp2p_exposed,
+        p2p_overlap_saving=tp2p - tp2p_exposed,
+        comm_buf_bytes=comm_buf_bytes(m, t) if t.PP > 1 else 0.0,
         t_ckpt=t_ckpt,
         ckpt_interval_s=tau,
         ckpt_every_steps=max(1, int(round(tau / t_step))),
@@ -1146,7 +1217,7 @@ def modeled_phases(e: Estimate) -> dict:
     return {
         "step": e.t_step,
         "a2a": e.t_a2a_exposed,
-        "p2p": e.t_p2p,
+        "p2p": e.t_p2p_exposed,
         "ckpt": e.t_ckpt,
         "compute": e.t_compute,
         "dp_grad": e.t_dp_grad,

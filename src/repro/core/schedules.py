@@ -103,28 +103,85 @@ import numpy as np
 from repro.configs.base import SCHEDULES
 
 Op = Tuple[str, int, int]  # ("F"|"B"|"Bi"|"Bw", mb, vstage)
+CommOp = Tuple[str, int, int]  # ("SendF"|"RecvF"|"SendB"|"RecvB"|"A2A", mb, vs)
 
-# Integer op encoding for the executor's tick tables.  KIND_CODE is the
-# single source of truth for the kind -> code lowering: every consumer maps
-# through it (and raises on an unknown kind) so a new op kind can never be
-# silently mis-encoded.
-OP_IDLE, OP_F, OP_B, OP_BI, OP_BW = 0, 1, 2, 3, 4
-KIND_CODE = {"F": OP_F, "B": OP_B, "Bi": OP_BI, "Bw": OP_BW}
-# Residual-occupancy delta of each op kind (F parks a chunk input; the
-# cotangent-producing backward — fused B or split Bi — frees it; Bw only
-# touches the W-stash).
-OCC_DELTA = {"F": 1, "B": -1, "Bi": -1, "Bw": 0}
+
+@dataclass(frozen=True)
+class OpKindSpec:
+    """One row of the op-kind registry: integer lowering code, residual-
+    occupancy delta, and whether the kind produces/hands-off a cotangent
+    (the "B" role).  EVERY lowering site (``KIND_CODE``, ``OCC_DELTA``,
+    ``describe()``, ``occupancy_trace()``, ``tick_tables()``) derives from
+    this one table, so adding an op kind cannot silently miss a site."""
+
+    code: int
+    occ_delta: int
+    cotangent: bool
+
+
+# The single source of truth for compute op kinds.  F parks a chunk input;
+# the cotangent-producing backward — fused B or split Bi — frees it; Bw only
+# touches the W-stash.
+OP_KINDS: Dict[str, OpKindSpec] = {
+    "F": OpKindSpec(code=1, occ_delta=+1, cotangent=False),
+    "B": OpKindSpec(code=2, occ_delta=-1, cotangent=True),
+    "Bi": OpKindSpec(code=3, occ_delta=-1, cotangent=True),
+    "Bw": OpKindSpec(code=4, occ_delta=0, cotangent=False),
+}
+OP_IDLE = 0
+OP_F, OP_B, OP_BI, OP_BW = (OP_KINDS[k].code for k in ("F", "B", "Bi", "Bw"))
+# Derived views kept for importers; the registry above is the source.
+KIND_CODE = {k: spec.code for k, spec in OP_KINDS.items()}
+OCC_DELTA = {k: spec.occ_delta for k, spec in OP_KINDS.items()}
 # Cotangent producers: the ops that consume the residual and ppermute the
 # input gradient upstream (the "B" role in the hand-off ordering rules).
-COT_KINDS = ("B", "Bi")
+COT_KINDS = tuple(k for k, spec in OP_KINDS.items() if spec.cotangent)
+
+# Communication op kinds (first-class comm lane of the IR): the stage P2P
+# hand-off pairs — a SendF on the producing stage at (or after) its F tick
+# with the matching RecvF on the consuming stage at (or before) its consumer
+# tick, plus the backward-cotangent pair — and A2A brackets marking the
+# expert all-to-all overlapped with a compute op.  Codes are disjoint from
+# nothing (comm ops live on their own lane) but centralized here so every
+# comm lowering site shares one table.
+COMM_SEND_F, COMM_RECV_F, COMM_SEND_B, COMM_RECV_B, COMM_A2A = 1, 2, 3, 4, 5
+COMM_KIND_CODE: Dict[str, int] = {
+    "SendF": COMM_SEND_F,
+    "RecvF": COMM_RECV_F,
+    "SendB": COMM_SEND_B,
+    "RecvB": COMM_RECV_B,
+    "A2A": COMM_A2A,
+}
+# Overlap builder variants: same compute table as the base schedule, plus
+# an explicit comm lane (send at the producer tick, recv at the consumer
+# tick, the in-flight window double-buffered in comm slots).
+OVERLAP_BASE: Dict[str, str] = {"1f1b_overlap": "1f1b"}
 
 
 def _kind_code(kind: str) -> int:
     try:
-        return KIND_CODE[kind]
+        return OP_KINDS[kind].code
     except KeyError:
         raise ValueError(
-            f"unknown op kind {kind!r}; known: {sorted(KIND_CODE)}"
+            f"unknown op kind {kind!r}; known: {sorted(OP_KINDS)}"
+        ) from None
+
+
+def _occ_delta(kind: str) -> int:
+    try:
+        return OP_KINDS[kind].occ_delta
+    except KeyError:
+        raise ValueError(
+            f"unknown op kind {kind!r}; known: {sorted(OP_KINDS)}"
+        ) from None
+
+
+def _comm_kind_code(kind: str) -> int:
+    try:
+        return COMM_KIND_CODE[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown comm op kind {kind!r}; known: {sorted(COMM_KIND_CODE)}"
         ) from None
 
 
@@ -305,10 +362,17 @@ def zb_h1_order(PP: int, M: int, stage: int) -> List[Op]:
 _ORDERS = {
     "gpipe": gpipe_order,
     "1f1b": one_f_one_b_order,
+    # Overlap variant: 1F1B's compute table verbatim; build() attaches the
+    # explicit comm lane (send at the producer tick, recv at the consumer
+    # tick) and the in-flight comm-slot geometry.
+    "1f1b_overlap": one_f_one_b_order,
     "interleaved_1f1b": interleaved_1f1b_order,
     "zb_h1": zb_h1_order,
 }
 assert set(_ORDERS) == set(SCHEDULES), "configs.base.SCHEDULES drifted"
+assert set(OVERLAP_BASE) <= set(_ORDERS) and all(
+    base in _ORDERS for base in OVERLAP_BASE.values()
+), "OVERLAP_BASE drifted from the registered builders"
 
 
 def _stage_orders(name: str, PP: int, M: int, V: int) -> List[List[Op]]:
@@ -344,6 +408,23 @@ class Schedule:
     # entries, depth num_wslots (0 when the whole table is fused).
     wslots: Tuple[Tuple[Tuple[int, ...], ...], ...] = ()
     num_wslots: int = 0
+    # Comm lane (overlap schedules): comm[stage][tick] -> tuple of CommOps.
+    # A fwd hand-off edge chunk c -> c' appears as a SendF(mb, vs_of_c) on
+    # c's stage and a RecvF(mb, vs_of_c') on c''s stage; the backward
+    # cotangent edge as SendB/RecvB; A2A(mb, vs) brackets the expert
+    # all-to-all overlapped with the same tick's compute op.  Empty for
+    # legacy schedules (implicit send-at-tick-end wire model).
+    comm: Tuple[Tuple[Tuple[CommOp, ...], ...], ...] = ()
+    # In-flight comm-slot geometry, receiver-side: cslots_fwd[stage][vs][mb]
+    # is the comm-buffer slot the fwd payload of the RECEIVING chunk
+    # (stage, vs, mb) dwells in over (send_tick, recv_tick), -1 when the
+    # payload is consumed the tick it lands (zero dwell) or never arrives.
+    # cslots_bwd is the cotangent mirror.  Depths are the per-direction
+    # double-buffer sizes (exactly the peak in-flight count).
+    cslots_fwd: Tuple[Tuple[Tuple[int, ...], ...], ...] = ()
+    cslots_bwd: Tuple[Tuple[Tuple[int, ...], ...], ...] = ()
+    num_cslots_fwd: int = 0
+    num_cslots_bwd: int = 0
 
     # -- views --------------------------------------------------------------
 
@@ -378,12 +459,7 @@ class Schedule:
             live = 0
             for t, op in enumerate(row):
                 if op is not None:
-                    if op[0] not in OCC_DELTA:
-                        raise ValueError(
-                            f"unknown op kind {op[0]!r}; known: "
-                            f"{sorted(OCC_DELTA)}"
-                        )
-                    live += OCC_DELTA[op[0]]
+                    live += _occ_delta(op[0])
                 out[s, t] = live
         return out
 
@@ -399,6 +475,33 @@ class Schedule:
                 if op is not None:
                     live += 1 if op[0] == "Bi" else -1 if op[0] == "Bw" else 0
                 out[s, t] = live
+        return out
+
+    @property
+    def has_comm(self) -> bool:
+        """True when the schedule carries an explicit comm lane."""
+        return any(cell for row in self.comm for cell in row)
+
+    def comm_op_ticks(self, kind: str) -> Dict[Tuple[int, int, int], int]:
+        """{(stage, vs, mb): tick} for every comm op of ``kind``."""
+        return _comm_ticks(self.comm, kind)
+
+    def comm_edges(self) -> List[Tuple[str, Tuple[int, int, int], int, int]]:
+        """The comm lane as matched hand-off edges:
+        [(direction, (recv_stage, recv_vs, mb), send_tick, recv_tick)] with
+        direction in {"fwd", "bwd"}, keyed by the RECEIVING chunk.  Raises
+        on unmatched Send/Recv pairs (use check_invariants for diagnosis)."""
+        return _comm_edge_table(self.comm, self.PP, self.V)
+
+    def comm_trace(self) -> np.ndarray:
+        """(PP, num_ticks) int32: in-flight comm-buffer payloads per
+        RECEIVING stage AFTER each tick — a payload dwells over ticks
+        (send_tick, recv_tick) exclusive; zero-dwell hand-offs (consumed
+        the tick they land) never enter the buffer.  All zeros for legacy
+        schedules — the executor must reproduce this exactly."""
+        out = np.zeros((self.PP, self.num_ticks), np.int32)
+        for _direction, (s, _vs, _mb), ts, tr in self.comm_edges():
+            out[s, ts + 1:tr] += 1
         return out
 
     def p2p_events(self) -> int:
@@ -428,11 +531,8 @@ class Schedule:
         for s, row in enumerate(self.ops):
             cells = []
             for op in row:
-                if op is not None and op[0] not in KIND_CODE:
-                    raise ValueError(
-                        f"unknown op kind {op[0]!r}; known: "
-                        f"{sorted(KIND_CODE)}"
-                    )
+                if op is not None:
+                    _kind_code(op[0])  # raise uniformly on unknown kinds
                 if op is None:
                     pad = " " if wide else ""
                     cells.append(
@@ -459,6 +559,8 @@ def list_schedule(
     t_bwd: float = 2.0,
     V: int = 1,
     t_bw: Optional[float] = None,
+    p2p_delay: float = 0.0,
+    p2p_sync: bool = False,
 ) -> List[Tuple[int, Op, float, float]]:
     """Greedy dependency-resolving list scheduler over per-stage op orders.
 
@@ -478,6 +580,24 @@ def list_schedule(
     ``t_bw`` (default ``t_bwd / 2``) and Bi ops the remaining
     ``t_bwd - t_bw``, so fused and split orders are comparable at equal
     total work.
+
+    ``p2p_delay`` adds a transfer latency to every CROSS-STAGE dependency
+    edge (fwd activation hand-offs and bwd cotangent hand-offs): the
+    consumer may start no earlier than producer end + delay, but the
+    producing and consuming stages stay free in between — i.e. the
+    transfer happens on a background comm lane, and only the part that
+    the dependency chain cannot hide extends the makespan.  This is the
+    replay model for comm-lane (``has_comm``) schedules; the default 0.0
+    keeps legacy behavior bit-identical.
+
+    ``p2p_sync=True`` additionally BLOCKS the producing stage for
+    ``p2p_delay`` after every op whose output crosses a stage edge — the
+    synchronous hand-off semantics of schedules without a comm lane,
+    where the transfer sits on the tick edge and the sender cannot start
+    its next op until the collective completes.  The async comm-lane
+    replay is the same DAG minus that blocking, so its makespan is never
+    larger: the overlap saving is exactly the blocking time the
+    dependency chain can absorb.
 
     Returns [(stage, op, start, end)] or raises on a deadlocked order.
     """
@@ -503,6 +623,8 @@ def list_schedule(
                 if kind == "F":
                     prv = prev_chunk(s, vs, PP, V)
                     dep = 0.0 if prv is None else done_f.get(prv + (mb,))
+                    if dep is not None and prv is not None and prv[0] != s:
+                        dep += p2p_delay
                 elif kind == "Bw":
                     dep = done_b.get((s, vs, mb))  # own Bi only
                 else:  # fused B or split Bi: residual + downstream cotangent
@@ -512,6 +634,8 @@ def list_schedule(
                         if nxt is None
                         else done_b.get(nxt + (mb,))
                     )
+                    if dep is not None and nxt is not None and nxt[0] != s:
+                        dep += p2p_delay
                     if dep is not None and done_f.get((s, vs, mb)) is None:
                         dep = None
                 if dep is None:
@@ -521,8 +645,18 @@ def list_schedule(
                 t_stage[s] = end
                 if kind == "F":
                     done_f[(s, vs, mb)] = end
+                    out_edge = next_chunk(s, vs, PP, V)
                 elif kind in COT_KINDS:
                     done_b[(s, vs, mb)] = end
+                    out_edge = prev_chunk(s, vs, PP, V)
+                else:
+                    out_edge = None
+                if (
+                    p2p_sync
+                    and out_edge is not None
+                    and out_edge[0] != s
+                ):
+                    t_stage[s] = end + p2p_delay
                 placed.append((s, (kind, mb, vs), start, end))
                 pending[s].pop(0)
                 progressed = True
@@ -669,6 +803,129 @@ def _assign_wslots(
     return tuple(wslots), depth
 
 
+def _synthesize_comm(
+    table: List[List[Optional[Op]]], PP: int, M: int, V: int
+) -> Tuple[Tuple[Tuple[CommOp, ...], ...], ...]:
+    """Explicit comm lane for an overlap schedule: every hand-off edge of
+    the compute table gets a Send on the producer AT its compute tick (the
+    payload exists at tick end — the earliest legal issue) and a Recv on
+    the consumer AT its consuming tick (the latest legal arrival), so the
+    transfer window spans every intervening tick and the in-flight payload
+    double-buffers in a comm slot while both stages keep computing.  A2A
+    brackets ride every F and cotangent op: the expert all-to-all of that
+    microbatch overlapped with its own compute (the chunked double-buffered
+    loop of docs/a2a.md, made schedule-visible so the simulator can price
+    its exposure per tick)."""
+    T = len(table[0])
+    comm: List[List[List[CommOp]]] = [[[] for _ in range(T)] for _ in range(PP)]
+    f = {
+        (s, op[2], op[1]): t
+        for s, row in enumerate(table)
+        for t, op in enumerate(row)
+        if op and op[0] == "F"
+    }
+    b = {
+        (s, op[2], op[1]): t
+        for s, row in enumerate(table)
+        for t, op in enumerate(row)
+        if op and op[0] in COT_KINDS
+    }
+    for (s, vs, mb), t in f.items():
+        nxt = next_chunk(s, vs, PP, V)
+        if nxt is not None:
+            ns, nv = nxt
+            comm[s][t].append(("SendF", mb, vs))
+            comm[ns][f[(ns, nv, mb)]].append(("RecvF", mb, nv))
+    for (s, vs, mb), t in b.items():
+        prv = prev_chunk(s, vs, PP, V)
+        if prv is not None:
+            ps, pv = prv
+            comm[s][t].append(("SendB", mb, vs))
+            comm[ps][b[(ps, pv, mb)]].append(("RecvB", mb, pv))
+    for s, row in enumerate(table):
+        for t, op in enumerate(row):
+            if op and (op[0] == "F" or op[0] in COT_KINDS):
+                comm[s][t].append(("A2A", op[1], op[2]))
+    return tuple(tuple(tuple(cell) for cell in row) for row in comm)
+
+
+def _comm_ticks(
+    comm: Tuple[Tuple[Tuple[CommOp, ...], ...], ...], kind: str
+) -> Dict[Tuple[int, int, int], int]:
+    _comm_kind_code(kind)
+    return {
+        (s, op[2], op[1]): t
+        for s, row in enumerate(comm)
+        for t, cell in enumerate(row)
+        for op in cell
+        if op[0] == kind
+    }
+
+
+def _comm_edge_table(
+    comm: Tuple[Tuple[Tuple[CommOp, ...], ...], ...], PP: int, V: int
+) -> List[Tuple[str, Tuple[int, int, int], int, int]]:
+    """Matched Send/Recv pairs of a comm lane, keyed by the RECEIVING
+    chunk: [(direction, (stage, vs, mb), send_tick, recv_tick)].  Asserts
+    on unmatched pairs — check_invariants gives the diagnosable error."""
+    out = []
+    for direction, skind, rkind in (
+        ("fwd", "SendF", "RecvF"), ("bwd", "SendB", "RecvB"),
+    ):
+        sends = _comm_ticks(comm, skind)
+        for (s, vs, mb), tr in _comm_ticks(comm, rkind).items():
+            src = (
+                prev_chunk(s, vs, PP, V)
+                if direction == "fwd"
+                else next_chunk(s, vs, PP, V)
+            )
+            assert src is not None, ("recv with no source chunk", s, vs)
+            ts = sends.get(src + (mb,))
+            assert ts is not None, ("orphan recv", direction, s, vs, mb)
+            out.append((direction, (s, vs, mb), ts, tr))
+    return out
+
+
+def _assign_cslots(
+    comm: Tuple[Tuple[Tuple[CommOp, ...], ...], ...], PP: int, M: int, V: int
+) -> Tuple[
+    Tuple[Tuple[Tuple[Tuple[int, ...], ...], ...], int],
+    Tuple[Tuple[Tuple[Tuple[int, ...], ...], ...], int],
+]:
+    """Fixed in-flight comm slot per received payload: greedy interval
+    coloring of the (send_tick, recv_tick)-exclusive dwell windows per
+    receiving stage and direction (same scheme as the residual slots, so
+    the depth equals the peak in-flight count — the double-buffer size).
+    Zero-dwell payloads (consumed the tick they land) never buffer: -1."""
+    edges = _comm_edge_table(comm, PP, V)
+    out = []
+    for direction in ("fwd", "bwd"):
+        by_stage: Dict[int, List[Tuple[int, int, Tuple[int, int]]]] = {
+            s: [] for s in range(PP)
+        }
+        for d, (s, vs, mb), ts, tr in edges:
+            if d == direction and tr > ts + 1:
+                by_stage[s].append((ts + 1, tr - 1, (vs, mb)))
+        slots: List[Tuple[Tuple[int, ...], ...]] = []
+        depth = 0
+        for s in range(PP):
+            free_at: List[int] = []
+            stage_slots = [[-1] * M for _ in range(V)]
+            for alloc, free, (vs, mb) in sorted(by_stage[s]):
+                for i, fa in enumerate(free_at):
+                    if fa <= alloc:
+                        stage_slots[vs][mb] = i
+                        free_at[i] = free + 1
+                        break
+                else:
+                    stage_slots[vs][mb] = len(free_at)
+                    free_at.append(free + 1)
+            slots.append(tuple(tuple(row) for row in stage_slots))
+            depth = max(depth, len(free_at))
+        out.append((tuple(slots), depth))
+    return out[0], out[1]
+
+
 # ---------------------------------------------------------------------------
 # The universal schedule-invariant harness
 # ---------------------------------------------------------------------------
@@ -707,7 +964,16 @@ def check_invariants(sched: Schedule) -> None:
        windows overlap in the same (stage, wslot), and num_wslots == the
        peak of the W-stash residency trace (no stash over-allocation);
     8. peak_in_flight == per-stage max of the F-minus-B/Bi occupancy
-       trace, which drains to zero; the W-stash trace drains too.
+       trace, which drains to zero; the W-stash trace drains too;
+    9. comm lane (overlap schedules): well-formed comm ops, every hand-off
+       edge of the compute table covered by exactly one Send + one Recv
+       (no orphan, missing, or duplicate sends/recvs), send at/after the
+       payload-producing op and strictly before the recv, recv at/before
+       the consuming op (send-before-recv across every (stage, vstage)
+       edge incl. wrap), A2A brackets pinned to a matching compute op,
+       in-flight comm-slot windows disjoint per (stage, direction, slot)
+       with num_cslots == the peak in-flight count (bounded buffers), and
+       the in-flight trace drains to zero.
     """
     PP, M, V, T = sched.PP, sched.M, sched.V, sched.num_ticks
 
@@ -872,6 +1138,165 @@ def check_invariants(sched: Schedule) -> None:
         bool((wocc >= 0).all()), sched, "negative W-stash (Bw before Bi)",
     )
 
+    # 9. comm lane (overlap schedules only)
+    if sched.comm:
+        _require(
+            len(sched.comm) == PP
+            and all(len(row) == T for row in sched.comm),
+            sched, "comm must be shaped (PP, num_ticks)",
+        )
+        counts = {k: 0 for k in COMM_KIND_CODE}
+        for s, row in enumerate(sched.comm):
+            for t, cell in enumerate(row):
+                for cop in cell:
+                    _require(
+                        len(cop) == 3
+                        and cop[0] in COMM_KIND_CODE
+                        and 0 <= cop[1] < M
+                        and 0 <= cop[2] < V,
+                        sched, "malformed comm op", s, t, cop,
+                    )
+                    counts[cop[0]] += 1
+    if sched.has_comm:
+        # Pairing + completeness: the comm lane must cover EVERY hand-off
+        # edge of the compute table, exactly once per endpoint.
+        sf, rf = sched.comm_op_ticks("SendF"), sched.comm_op_ticks("RecvF")
+        sb, rb = sched.comm_op_ticks("SendB"), sched.comm_op_ticks("RecvB")
+        senders_f = {c for c in f if next_chunk(c[0], c[1], PP, V)}
+        receivers_f = {c for c in f if prev_chunk(c[0], c[1], PP, V)}
+        senders_b = {c for c in b if prev_chunk(c[0], c[1], PP, V)}
+        receivers_b = {c for c in b if next_chunk(c[0], c[1], PP, V)}
+        for kind, have, want in (
+            ("SendF", sf, senders_f), ("RecvF", rf, receivers_f),
+            ("SendB", sb, senders_b), ("RecvB", rb, receivers_b),
+        ):
+            _require(
+                set(have) == want, sched,
+                f"comm lane must cover every hand-off edge with one {kind} "
+                f"(orphan or missing)",
+                sorted(set(have) ^ want)[:4],
+            )
+            _require(
+                counts[kind] == len(have), sched,
+                f"duplicate {kind} ops in the comm lane",
+            )
+        # Ordering per edge: the payload exists before its send, the send
+        # strictly precedes the recv (one in-flight tick minimum), and the
+        # recv lands by the consuming op's tick — wrap edges included.
+        for direction, recvs, sends, produce, consume in (
+            ("fwd", rf, sf, f, f), ("bwd", rb, sb, b, b),
+        ):
+            for (s, vs, mb), tr in recvs.items():
+                src = (
+                    prev_chunk(s, vs, PP, V)
+                    if direction == "fwd"
+                    else next_chunk(s, vs, PP, V)
+                )
+                _require(
+                    src is not None, sched,
+                    "recv on a chunk with no source edge", direction, s, vs,
+                )
+                ts = sends[src + (mb,)]
+                _require(
+                    ts >= produce[src + (mb,)], sched,
+                    "send before its payload-producing op",
+                    direction, src, mb, ts,
+                )
+                _require(
+                    tr > ts, sched, "recv not strictly after its send",
+                    direction, s, vs, mb, ts, tr,
+                )
+                _require(
+                    tr <= consume[(s, vs, mb)], sched,
+                    "recv after its consuming op", direction, s, vs, mb,
+                )
+        # A2A brackets must ride a matching compute op (same stage, tick,
+        # microbatch, vstage; F or a cotangent producer).
+        for s, row in enumerate(sched.comm):
+            for t, cell in enumerate(row):
+                for cop in cell:
+                    if cop[0] != "A2A":
+                        continue
+                    host = sched.ops[s][t]
+                    _require(
+                        host is not None
+                        and (host[0] == "F" or host[0] in COT_KINDS)
+                        and host[1] == cop[1]
+                        and host[2] == cop[2],
+                        sched, "A2A bracket without a matching compute op",
+                        s, t, cop, host,
+                    )
+        # Comm-slot geometry: dwell windows disjoint per (stage, slot),
+        # depth == peak in-flight (bounded, minimal), trace drains.
+        edges = sched.comm_edges()
+        for direction, cslots, depth in (
+            ("fwd", sched.cslots_fwd, sched.num_cslots_fwd),
+            ("bwd", sched.cslots_bwd, sched.num_cslots_bwd),
+        ):
+            _require(
+                len(cslots) == PP
+                and all(len(sv) == V and all(len(r) == M for r in sv)
+                        for sv in cslots),
+                sched, f"cslots_{direction} must be shaped (PP, V, M)",
+            )
+            max_inflight = 0
+            for stage in range(PP):
+                windows = [
+                    (ts + 1, tr - 1, key[1], key[2])
+                    for d, key, ts, tr in edges
+                    if d == direction and key[0] == stage and tr > ts + 1
+                ]
+                keyed = {(vs, mb) for _, _, vs, mb in windows}
+                for vs in range(V):
+                    for mb in range(M):
+                        cs = cslots[stage][vs][mb]
+                        if (vs, mb) in keyed:
+                            _require(
+                                0 <= cs < depth, sched,
+                                "comm slot id out of range",
+                                direction, stage, vs, mb, cs,
+                            )
+                        else:
+                            _require(
+                                cs == -1, sched,
+                                "zero-dwell payload must carry comm slot -1",
+                                direction, stage, vs, mb, cs,
+                            )
+                by_cslot: Dict[int, List[Tuple[int, int]]] = {}
+                for alloc, free, vs, mb in windows:
+                    by_cslot.setdefault(
+                        cslots[stage][vs][mb], []
+                    ).append((alloc, free))
+                for cs, intervals in by_cslot.items():
+                    intervals.sort()
+                    for (a0, f0), (a1, _) in zip(intervals, intervals[1:]):
+                        _require(
+                            f0 < a1, sched,
+                            "overlapping in-flight windows in one comm slot",
+                            direction, stage, cs, (a0, f0), a1,
+                        )
+                for t in {a for a, _, _, _ in windows}:
+                    live = sum(
+                        1 for a, fr, _, _ in windows if a <= t <= fr
+                    )
+                    max_inflight = max(max_inflight, live)
+            _require(
+                depth == max_inflight, sched,
+                f"num_cslots_{direction} != peak in-flight count "
+                f"(comm buffer over- or under-allocated)",
+                depth, max_inflight,
+            )
+        ctrace = sched.comm_trace()
+        _require(
+            bool((ctrace[:, -1] == 0).all()), sched,
+            "comm in-flight trace does not drain to zero",
+        )
+    else:
+        _require(
+            sched.num_cslots_fwd == 0 and sched.num_cslots_bwd == 0,
+            sched, "comm slots without a comm lane",
+        )
+
 
 # ---------------------------------------------------------------------------
 # build
@@ -911,11 +1336,18 @@ def build(name: str, PP: int, M: int, V: int = 1) -> Schedule:
         live = peak = 0
         for op in table[s]:
             if op:
-                live += OCC_DELTA[op[0]]
+                live += _occ_delta(op[0])
                 peak = max(peak, live)
         occupancy.append(peak)
     slots, depth = _assign_slots(table, PP, M, V)
     wslots, wdepth = _assign_wslots(table, PP, M, V)
+    comm: Tuple = ()
+    cslots_f: Tuple = ()
+    cslots_b: Tuple = ()
+    ncf = ncb = 0
+    if name in OVERLAP_BASE:
+        comm = _synthesize_comm(table, PP, M, V)
+        (cslots_f, ncf), (cslots_b, ncb) = _assign_cslots(comm, PP, M, V)
     sched = Schedule(
         name=name,
         PP=PP,
@@ -928,6 +1360,11 @@ def build(name: str, PP: int, M: int, V: int = 1) -> Schedule:
         num_slots=depth,
         wslots=wslots,
         num_wslots=wdepth,
+        comm=comm,
+        cslots_fwd=cslots_f,
+        cslots_bwd=cslots_b,
+        num_cslots_fwd=ncf,
+        num_cslots_bwd=ncb,
     )
     check_invariants(sched)
     return sched
@@ -967,6 +1404,18 @@ class TickTables:
     arrive_fwd_mb: np.ndarray  # (PP, T) arriving microbatch id, -1
     arrive_bwd: np.ndarray  # (PP, T) slot to store arriving cotangent, -1
     wslot: np.ndarray = None  # (PP, T) W-stash slot of a Bi/Bw op, -1
+    # Comm-lane routing (overlap schedules; None for legacy tables).  A
+    # payload whose explicit Recv tick is LATER than the tick after its
+    # Send dwells in the in-flight comm buffer: ``store_*`` gives the comm
+    # slot the wire payload landing at the start of a tick is stored into
+    # (-1: no dwell — either no arrival or it is consumed directly), and
+    # ``src_*`` gives the comm slot a Recv tick's payload is read FROM
+    # when parking it into its residual slot (-1: park the wire payload
+    # directly, the legacy zero-dwell path).
+    store_fwd: np.ndarray = None  # (PP, T) comm slot to store recv_h, -1
+    src_fwd: np.ndarray = None  # (PP, T) comm slot feeding arrive_fwd, -1
+    store_bwd: np.ndarray = None  # (PP, T) comm slot to store recv_g, -1
+    src_bwd: np.ndarray = None  # (PP, T) comm slot feeding arrive_bwd, -1
 
 
 def tick_tables(sched: Schedule) -> TickTables:
@@ -997,21 +1446,58 @@ def tick_tables(sched: Schedule) -> TickTables:
             # cell stays 0 (unused by the executor).
             if k != "Bw":
                 slot[s, t] = sched.slots[s][v][m]
-            if k == "F":
-                nxt = next_chunk(s, v, PP, V)
-                if nxt is not None and t + 1 < T:
-                    ns, nv = nxt
-                    assert arrive_fwd[ns, t + 1] == -1, "fwd arrival clash"
-                    arrive_fwd[ns, t + 1] = sched.slots[ns][nv][m]
-                    arrive_fwd_mb[ns, t + 1] = m
-            if k in COT_KINDS:
-                prv = prev_chunk(s, v, PP, V)
-                if prv is not None and t + 1 < T:
-                    ps, pv = prv
-                    assert arrive_bwd[ps, t + 1] == -1, "bwd arrival clash"
-                    arrive_bwd[ps, t + 1] = sched.slots[ps][pv][m]
+            if not sched.has_comm:
+                # Legacy implicit wire model: the payload ppermuted at the
+                # END of the producing tick parks at the START of t + 1.
+                if k == "F":
+                    nxt = next_chunk(s, v, PP, V)
+                    if nxt is not None and t + 1 < T:
+                        ns, nv = nxt
+                        assert arrive_fwd[ns, t + 1] == -1, "fwd arrival clash"
+                        arrive_fwd[ns, t + 1] = sched.slots[ns][nv][m]
+                        arrive_fwd_mb[ns, t + 1] = m
+                if k in COT_KINDS:
+                    prv = prev_chunk(s, v, PP, V)
+                    if prv is not None and t + 1 < T:
+                        ps, pv = prv
+                        assert arrive_bwd[ps, t + 1] == -1, "bwd arrival clash"
+                        arrive_bwd[ps, t + 1] = sched.slots[ps][pv][m]
+    store_fwd = src_fwd = store_bwd = src_bwd = None
+    if sched.has_comm:
+        # Explicit comm lane: the wire payload still lands the tick after
+        # its Send (the executor ppermutes once per tick edge), but it
+        # parks into its residual slot only at its Recv tick — dwelling in
+        # the in-flight comm buffer in between, so the transfer crosses
+        # whole compute ticks the latency-hiding scheduler can overlap.
+        store_fwd = np.full((PP, T), -1, np.int32)
+        src_fwd = np.full((PP, T), -1, np.int32)
+        store_bwd = np.full((PP, T), -1, np.int32)
+        src_bwd = np.full((PP, T), -1, np.int32)
+        for direction, (s, v, m), ts, tr in sched.comm_edges():
+            if direction == "fwd":
+                assert arrive_fwd[s, tr] == -1, "fwd arrival clash"
+                arrive_fwd[s, tr] = sched.slots[s][v][m]
+                arrive_fwd_mb[s, tr] = m
+                if tr > ts + 1:
+                    c = sched.cslots_fwd[s][v][m]
+                    assert c >= 0, ("dwelling payload without a comm slot",
+                                    s, v, m)
+                    assert store_fwd[s, ts + 1] == -1, "comm store clash"
+                    store_fwd[s, ts + 1] = c
+                    src_fwd[s, tr] = c
+            else:
+                assert arrive_bwd[s, tr] == -1, "bwd arrival clash"
+                arrive_bwd[s, tr] = sched.slots[s][v][m]
+                if tr > ts + 1:
+                    c = sched.cslots_bwd[s][v][m]
+                    assert c >= 0, ("dwelling cotangent without a comm slot",
+                                    s, v, m)
+                    assert store_bwd[s, ts + 1] == -1, "comm store clash"
+                    store_bwd[s, ts + 1] = c
+                    src_bwd[s, tr] = c
     return TickTables(
-        kind, mb, vs, slot, arrive_fwd, arrive_fwd_mb, arrive_bwd, wslot
+        kind, mb, vs, slot, arrive_fwd, arrive_fwd_mb, arrive_bwd, wslot,
+        store_fwd, src_fwd, store_bwd, src_bwd,
     )
 
 

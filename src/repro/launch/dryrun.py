@@ -128,6 +128,58 @@ def _a2a_model_record(arch, shape, chips: int, plan) -> dict:
     }
 
 
+def _schedule_model_record(arch, shape, chips: int, plan) -> dict:
+    """Exposed-comm pricing of the pipeline schedule for this cell: the
+    cell's partition priced under the bound schedule AND its comm-lane /
+    non-overlap twin, so the record shows what promoting the hand-offs to
+    first-class comm ops buys (or costs) — serial p2p reference, the
+    replayed exposure, the a2a bracket cap, and the comm-buffer bytes."""
+    from repro.configs.base import SCHEDULES
+    from repro.core import resource_model as rm
+    from repro.core.platform import TPU_V5E
+    from repro.core.schedules import OVERLAP_BASE
+
+    if shape.kind != "train" or plan.pp <= 1:
+        return {}
+    m = rm.ModelShape.from_arch(arch)
+    PP = plan.pp
+    EP = max(plan.ep, 1)
+    DP = max(chips // (PP * EP), 1)
+    bound = plan.schedule
+    twin = OVERLAP_BASE.get(bound)
+    if twin is None:
+        # the bound schedule is legacy: its overlap twin, if registered
+        twin = next(
+            (o for o, b in OVERLAP_BASE.items() if b == bound), None
+        )
+    names = [n for n in (bound, twin) if n in SCHEDULES]
+    rows = []
+    for name in names:
+        t = rm.TrainSetup(
+            b=shape.global_batch, s=shape.seq_len, PP=PP, EP=EP, DP=DP,
+            dispatch=arch.moe.dispatch if arch.moe else "capacity",
+            zero="world", schedule=name,
+            vstages=plan.vstages if name == "interleaved_1f1b" else 1,
+        )
+        est = rm.estimate(m, t, TPU_V5E)
+        rows.append({
+            "schedule": name,
+            "t_p2p_serial_s": est.t_p2p,
+            "t_p2p_exposed_s": est.t_p2p_exposed,
+            "p2p_overlap_saving_s": est.p2p_overlap_saving,
+            "t_a2a_exposed_s": est.t_a2a_exposed,
+            "comm_buf_bytes": est.comm_buf_bytes,
+            "t_step_s": est.t_step,
+            "mfu": est.mfu,
+        })
+    rows.sort(key=lambda r: r["t_step_s"])
+    return {
+        "bound": bound,
+        "rows": rows,
+        "best": rows[0]["schedule"] if rows else None,
+    }
+
+
 def _robustness_model_record(arch, shape, chips: int, plan) -> dict:
     """Young–Daly checkpoint pricing for this cell: state bytes, write
     time at the platform's sustained bandwidth, job MTBF, the optimal
@@ -274,6 +326,10 @@ def run_cell(
         # Ranked a2a_algo x a2a_chunks enumeration for this cell (the
         # planner's knob, priced by the overlap-aware resource model).
         record["a2a_model"] = _a2a_model_record(arch, shape, chips, plan)
+        # Exposed-comm pricing of the bound schedule vs its overlap twin.
+        record["schedule_model"] = _schedule_model_record(
+            arch, shape, chips, plan
+        )
         # Young–Daly checkpoint pricing (interval + goodput) for the cell.
         record["robustness_model"] = _robustness_model_record(
             arch, shape, chips, plan
@@ -466,8 +522,8 @@ def main():
     ap.add_argument("--pipeline", action="store_true",
                     help="Piper: pipeline stages over the pod axis")
     ap.add_argument("--schedule", default=None,
-                    help="pipeline schedule (gpipe|1f1b|interleaved_1f1b|"
-                         "zb_h1)")
+                    help="pipeline schedule (gpipe|1f1b|1f1b_overlap|"
+                         "interleaved_1f1b|zb_h1)")
     ap.add_argument("--vstages", type=int, default=None,
                     help="virtual stages per stage (interleaved_1f1b)")
     ap.add_argument("--hierarchical-a2a", action="store_true")

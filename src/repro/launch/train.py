@@ -31,8 +31,9 @@ def main():
                     help="comma mesh shape, e.g. 2,2,2 -> (pod,data,model)")
     ap.add_argument("--pipeline", action="store_true")
     ap.add_argument("--schedule", default=None,
-                    help="pipeline schedule (gpipe|1f1b|interleaved_1f1b|"
-                         "zb_h1); default: the planner's choice, else 1f1b")
+                    help="pipeline schedule (gpipe|1f1b|1f1b_overlap|"
+                         "interleaved_1f1b|zb_h1); default: the planner's "
+                         "choice, else 1f1b")
     ap.add_argument("--vstages", type=int, default=None,
                     help="virtual stages per pipeline stage (interleaved "
                          "schedules); default: the planner's choice, else 1")

@@ -12,7 +12,10 @@ Two producers share the format:
   ``F3``/``B1``/``Bw2`` on the stage's thread, and a per-stage
   ``occupancy`` counter series mirrors ``Schedule.occupancy_trace()``
   value-for-value — what Perfetto draws *is* the IR's residual-slot
-  account, not a re-derivation.
+  account, not a re-derivation.  Overlap schedules additionally get one
+  *comm* lane per stage (``SendF2``/``RecvB0``/``A2A1`` point ops plus a
+  ``dwell`` span over each in-flight window) and a per-stage
+  ``comm_inflight`` counter equal to ``Schedule.comm_trace()``.
 
 All timestamps/durations are microseconds (the trace_event unit).
 """
@@ -91,6 +94,14 @@ def schedule_lane_events(
     ``tick_s`` with args ``{kind, mb, vstage, tick}``, and each stage gets
     an ``occupancy`` counter stream equal to
     ``sched.occupancy_trace()[stage]`` at every tick boundary.
+
+    When the schedule carries a comm lane (``sched.has_comm``), stage
+    ``s`` gets a second thread ``tid = PP + s`` ("stage s comm") holding
+    every comm op as a tick-long ``X`` event, a ``dwell`` span over each
+    in-flight window ``(send+1, recv)`` of its received payloads, and a
+    ``comm_inflight`` counter stream equal value-for-value to
+    ``sched.comm_trace()[s]`` — Perfetto draws the IR's in-flight
+    comm-buffer account, not a re-derivation.
     """
     occ = sched.occupancy_trace()
     out: List[Dict[str, Any]] = [
@@ -124,6 +135,53 @@ def schedule_lane_events(
                     "ts": ts,
                     "name": f"occupancy stage{stage}",
                     "args": {"value": int(occ[stage, tick])},
+                }
+            )
+    if sched.has_comm:
+        ctrace = sched.comm_trace()
+        for stage in range(sched.PP):
+            tid = sched.PP + stage
+            out.append(
+                _meta("thread_name", pid, tid, {"name": f"stage {stage} comm"})
+            )
+            for tick in range(sched.num_ticks):
+                ts = (t0_s + tick * tick_s) * _US
+                for ckind, mb, vs in sched.comm[stage][tick]:
+                    out.append(
+                        {
+                            "ph": "X",
+                            "pid": pid,
+                            "tid": tid,
+                            "ts": ts,
+                            "dur": tick_s * _US,
+                            "name": f"{ckind}{mb}",
+                            "args": {"kind": ckind, "mb": mb, "vstage": vs,
+                                     "tick": tick},
+                        }
+                    )
+                out.append(
+                    {
+                        "ph": "C",
+                        "pid": pid,
+                        "tid": tid,
+                        "ts": ts,
+                        "name": f"comm_inflight stage{stage}",
+                        "args": {"value": int(ctrace[stage, tick])},
+                    }
+                )
+        for direction, (rs, rv, mb), t_send, t_recv in sched.comm_edges():
+            if t_recv <= t_send + 1:
+                continue  # zero dwell: never enters the comm buffer
+            out.append(
+                {
+                    "ph": "X",
+                    "pid": pid,
+                    "tid": sched.PP + rs,
+                    "ts": (t0_s + (t_send + 1) * tick_s) * _US,
+                    "dur": (t_recv - t_send - 1) * tick_s * _US,
+                    "name": f"dwell {direction} mb{mb}",
+                    "args": {"direction": direction, "mb": mb, "vstage": rv,
+                             "send_tick": t_send, "recv_tick": t_recv},
                 }
             )
     return out

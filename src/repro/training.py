@@ -156,6 +156,7 @@ def make_train_step(
             loss, grads, metrics = lm.loss_and_grads(cast(state["params"]), batch)
             metrics.pop("pipeline_occupancy", None)
             metrics.pop("pipeline_wstash_occupancy", None)
+            metrics.pop("pipeline_comm_inflight", None)
         else:
             def loss_fn(params):
                 return lm.loss(cast(params), batch)

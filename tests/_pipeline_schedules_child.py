@@ -6,10 +6,12 @@ Checks the schedule-EXECUTING pipeline (core.pipeline.pipelined_step):
 * executed per-tick residual occupancy == the schedule IR's trace (so the
   executor provably ran the IR's op order, not AD's);
 * executed 1F1B peaks == paper Eq 4 == schedule_sim on the same IR;
-* loss + grads under ALL schedules (gpipe, 1f1b, zb_h1,
+* loss + grads under ALL schedules (gpipe, 1f1b, 1f1b_overlap, zb_h1,
   interleaved_1f1b@V=2)
   allclose to the non-pipelined sequential stack (value_and_grad oracle),
   and — same forward, same token layout — to reverse-mode AD at 1e-5;
+* the comm-lane executor (1f1b_overlap): executed comm-buffer residency
+  == the IR's comm trace, grads matching the fused 1f1b executor;
 * the zb_h1 two-phase backward: executed W-stash residency == the IR's
   wstash trace, Eq-4-equal residual peaks, and grads byte-matching the
   fused 1f1b executor (B ≡ Bi + Bw, executed);
@@ -82,13 +84,21 @@ def main():
         )(params)
 
         out = {}
-        for name in ("gpipe", "1f1b", "zb_h1"):
+        for name in ("gpipe", "1f1b", "1f1b_overlap", "zb_h1"):
             plan_pp = make_plan(mesh, arch, pipeline_on_pod=True, schedule=name)
             lm_pp = LanguageModel(arch, plan_pp)
             loss, grads, metrics = jax.jit(lm_pp.loss_and_grads)(params, batch)
             occ = np.asarray(metrics["pipeline_occupancy"])
             sched = S.build(name, PP, M)
             out[name] = (loss, grads, occ, sched)
+            # Executed comm-buffer residency == the IR's comm trace: the
+            # comm-lane executor provably dwells each hand-off in its comm
+            # slot over exactly the IR's (Send, Recv) window — and the
+            # legacy schedules provably allocate no comm lane at all.
+            cocc = np.asarray(metrics["pipeline_comm_inflight"])
+            RESULTS[f"{name}_comm_inflight_trace"] = bool(
+                np.array_equal(cocc, sched.comm_trace())
+            )
             if name == "zb_h1":
                 # The split executor's W-stash: executed deferred-weight-
                 # grad residency == the IR's trace, peak == num_wslots ==
@@ -158,6 +168,19 @@ def main():
             abs(float(out["zb_h1"][0]) - float(out["1f1b"][0])) < 1e-6
         ) and grad_close(out["1f1b"][1], out["zb_h1"][1], atol=1e-6,
                          emb_rel_tol=1e-5)
+        # The comm-lane executor performs the SAME arithmetic as fused
+        # 1f1b — identical compute table, identical accumulation order;
+        # only where a dwelling payload parks differs — so it reproduces
+        # the 1f1b executor's loss and grads to float noise.
+        RESULTS["overlap_matches_fused_exec"] = bool(
+            abs(float(out["1f1b_overlap"][0]) - float(out["1f1b"][0])) < 1e-6
+        ) and grad_close(out["1f1b"][1], out["1f1b_overlap"][1], atol=1e-6,
+                         emb_rel_tol=1e-5)
+        # Same compute table == same Eq-4 residual profile, executed.
+        RESULTS["overlap_peak_eq4"] = bool(
+            list(out["1f1b_overlap"][2].max(axis=1))
+            == S.peak_activations_1f1b(PP)
+        )
 
         # Interleaved 1F1B: PP=2 stages x V=2 virtual stages on a 4-device
         # sub-mesh (reps = PP*V = 4, one pattern-rep per chunk).  Same

@@ -242,6 +242,7 @@ def test_chrome_trace_validation_rejects_malformed():
     "name,PP,M,V",
     [
         ("1f1b", 4, 8, 1),
+        ("1f1b_overlap", 4, 8, 1),
         ("zb_h1", 4, 8, 1),
         ("interleaved_1f1b", 2, 4, 2),
         ("gpipe", 2, 4, 1),
@@ -250,12 +251,13 @@ def test_chrome_trace_validation_rejects_malformed():
 def test_schedule_lanes_match_occupancy_trace(name, PP, M, V):
     """The acceptance pin: the rendered pipeline lanes ARE the schedule IR —
     one complete event per non-idle op, and the per-stage counter series
-    equals Schedule.occupancy_trace() value-for-value."""
+    equals Schedule.occupancy_trace() value-for-value.  (Comm events live
+    on their own lanes, tid >= PP — the compute lanes stay pure.)"""
     sched = sched_lib.build(name, PP, M, V)
     evs = obs.schedule_lane_events(sched, tick_s=1e-3)
     obs.validate_chrome_trace({"traceEvents": evs})
     occ = sched.occupancy_trace()
-    ops = [e for e in evs if e["ph"] == "X"]
+    ops = [e for e in evs if e["ph"] == "X" and e["tid"] < sched.PP]
     n_ops = sum(
         1
         for st in range(sched.PP)
@@ -278,6 +280,58 @@ def test_schedule_lanes_match_occupancy_trace(name, PP, M, V):
             assert (e["args"]["kind"], e["args"]["mb"], e["args"]["vstage"]) \
                 == (kind, mb, vs)
             assert e["name"] == f"{kind}{mb}"
+
+
+def test_schedule_comm_lane_matches_comm_trace():
+    """Overlap schedules: the per-stage comm lane renders every comm op of
+    the IR exactly once, the dwell spans cover the (send+1, recv) windows,
+    and the comm_inflight counter series equals Schedule.comm_trace()
+    value-for-value.  Legacy schedules emit no comm lane at all."""
+    sched = sched_lib.build("1f1b_overlap", 4, 8)
+    evs = obs.schedule_lane_events(sched, tick_s=1e-3)
+    obs.validate_chrome_trace({"traceEvents": evs})
+    ctrace = sched.comm_trace()
+    for stage in range(sched.PP):
+        tid = sched.PP + stage
+        counters = [
+            e["args"]["value"]
+            for e in evs
+            if e["ph"] == "C" and e["tid"] == tid
+        ]
+        assert counters == [int(v) for v in ctrace[stage]]
+        lane = [
+            e for e in evs
+            if e["ph"] == "X" and e["tid"] == tid and "direction" not in e["args"]
+        ]
+        want = [
+            (f"{k}{mb}", k, mb, vs, t)
+            for t in range(sched.num_ticks)
+            for k, mb, vs in sched.comm[stage][t]
+        ]
+        got = [
+            (e["name"], e["args"]["kind"], e["args"]["mb"],
+             e["args"]["vstage"], e["args"]["tick"])
+            for e in lane
+        ]
+        assert got == want and len(want) > 0
+    # dwell spans: one per comm edge with a nonzero in-flight window
+    dwells = [
+        e for e in evs if e["ph"] == "X" and "direction" in e.get("args", {})
+    ]
+    edges = [
+        (d, key, ts, tr)
+        for d, key, ts, tr in sched.comm_edges()
+        if tr > ts + 1
+    ]
+    assert len(dwells) == len(edges) > 0
+    for e in dwells:
+        assert e["dur"] > 0
+    # legacy: no comm lane
+    legacy = obs.schedule_lane_events(sched_lib.build("1f1b", 4, 8), 1e-3)
+    assert not any(e.get("tid", 0) >= 4 and e["ph"] != "M" for e in legacy)
+    assert not any(
+        str(e.get("name", "")).startswith("comm_inflight") for e in legacy
+    )
 
 
 def test_write_chrome_trace_with_schedule(tmp_path):

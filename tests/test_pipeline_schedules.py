@@ -5,9 +5,10 @@ process with XLA_FLAGS set (same pattern as test_multidevice.py) and this
 module asserts on the child's verdicts.  Covered:
 
 * executor occupancy trace == Schedule.occupancy_trace() for gpipe, 1f1b,
-  zb_h1 AND interleaved_1f1b@V=2 (the executor provably interprets the
-  vstage IR tick by tick, chunk-ring wrap hand-offs included; for zb_h1
-  the W-stash trace replays too);
+  1f1b_overlap, zb_h1 AND interleaved_1f1b@V=2 (the executor provably
+  interprets the vstage IR tick by tick, chunk-ring wrap hand-offs
+  included; for zb_h1 the W-stash trace replays too, for 1f1b_overlap the
+  comm in-flight trace);
 * executed 1F1B peaks == paper Eq 4 == schedule_sim on the same IR, and
   executed interleaved peaks == the Eq-4 analogue;
 * pipelined loss/grads == sequential stack oracle under all schedules,
@@ -43,10 +44,27 @@ def child_results():
     return json.loads(line[len("RESULTS "):])
 
 
-@pytest.mark.parametrize("sched", ["gpipe", "1f1b", "zb_h1"])
+@pytest.mark.parametrize("sched", ["gpipe", "1f1b", "1f1b_overlap", "zb_h1"])
 def test_executor_runs_the_ir(child_results, sched):
     assert child_results[f"{sched}_occupancy_trace"]
     assert child_results[f"{sched}_peak_matches_sim"]
+
+
+@pytest.mark.parametrize("sched", ["gpipe", "1f1b", "1f1b_overlap", "zb_h1"])
+def test_executor_comm_inflight_matches_ir(child_results, sched):
+    """Executed comm-buffer residency == Schedule.comm_trace(): the
+    comm-lane executor dwells each hand-off over exactly the IR's
+    (Send, Recv) window, and legacy schedules allocate no comm lane."""
+    assert child_results[f"{sched}_comm_inflight_trace"]
+
+
+def test_overlap_comm_lane_executor(child_results):
+    """The comm-lane executor (1f1b_overlap) re-routes dwelling hand-offs
+    through the double-buffered comm slots without touching the math:
+    grads reproduce the fused 1f1b executor's to float noise and the
+    executed residual profile stays Eq-4."""
+    assert child_results["overlap_matches_fused_exec"]
+    assert child_results["overlap_peak_eq4"]
 
 
 def test_executed_1f1b_memory_profile_eq4(child_results):
@@ -54,14 +72,14 @@ def test_executed_1f1b_memory_profile_eq4(child_results):
     assert child_results["gpipe_peak_all_m"]
 
 
-@pytest.mark.parametrize("sched", ["gpipe", "1f1b", "zb_h1"])
+@pytest.mark.parametrize("sched", ["gpipe", "1f1b", "1f1b_overlap", "zb_h1"])
 def test_schedule_backward_matches_ad_exactly(child_results, sched):
     """Same forward, same layout — the hand-rolled schedule-ordered backward
     must agree with reverse-mode AD to float noise."""
     assert child_results[f"{sched}_matches_ad_oracle"]
 
 
-@pytest.mark.parametrize("sched", ["gpipe", "1f1b", "zb_h1"])
+@pytest.mark.parametrize("sched", ["gpipe", "1f1b", "1f1b_overlap", "zb_h1"])
 def test_pipelined_matches_sequential(child_results, sched):
     assert child_results[f"{sched}_loss_close"]
     assert child_results[f"{sched}_grads_close"]

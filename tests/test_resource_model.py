@@ -211,6 +211,115 @@ def test_interleaved_estimate_tradeoffs():
 
 
 # ---------------------------------------------------------------------------
+# Comm-lane pricing (1f1b_overlap)
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_estimate_tradeoffs():
+    """Same partition: 1f1b_overlap keeps 1f1b's compute, bubble and serial
+    p2p reference, charges only the comm-lane replay's exposed p2p (plus
+    the better of the two a2a hidings), pays the comm buffer in stage-0
+    memory, and strictly wins the step."""
+    m = rm.ModelShape.from_arch(get_arch("granite-moe-3b-a800m"))
+    kw = dict(PP=4, EP=4, DP=16, alpha=4, zero="world")
+    e1 = rm.estimate(m, _setup(schedule="1f1b", **kw), TPU_V5E)
+    eo = rm.estimate(m, _setup(schedule="1f1b_overlap", **kw), TPU_V5E)
+    assert eo.t_compute == e1.t_compute
+    assert eo.bubble_fraction == e1.bubble_fraction
+    assert eo.t_p2p == pytest.approx(e1.t_p2p)  # same Eq serial reference
+    assert 0.0 < eo.t_p2p_exposed < e1.t_p2p_exposed
+    assert eo.p2p_overlap_saving == pytest.approx(
+        eo.t_p2p - eo.t_p2p_exposed
+    )
+    assert eo.t_a2a_exposed <= e1.t_a2a_exposed
+    assert eo.comm_buf_bytes > 0 and e1.comm_buf_bytes == 0.0
+    assert eo.mem_stage0 == pytest.approx(e1.mem_stage0 + eo.comm_buf_bytes)
+    assert eo.t_step < e1.t_step
+    assert eo.mfu > e1.mfu
+    # legacy schedules keep the flat serial charge (t_step bit-identity)
+    assert e1.t_p2p_exposed == e1.t_p2p and e1.p2p_overlap_saving == 0.0
+
+
+def test_overlap_exposure_pinned_to_schedule_replay():
+    """The model's exposed-comm terms ARE the schedule replay: recompute
+    the per-op durations from the estimate's own serial references and the
+    simulator must return the same exposure — no second accounting."""
+    from repro.core.schedules import build
+
+    m = rm.ModelShape.from_arch(get_arch("piper-m10b-e16"))
+    t = _setup(PP=4, EP=16, alpha=4, zero="none", schedule="1f1b_overlap")
+    e = rm.estimate(m, t, FRONTIER)
+    M = t.M
+    r = ss.simulate(
+        build("1f1b_overlap", t.PP, M),
+        t_fwd=e.t_compute / (3.0 * M),
+        t_bwd=2.0 * e.t_compute / (3.0 * M),
+        t_p2p=e.t_p2p / (2.0 * M * t.vstages),
+        t_a2a=e.t_a2a / (2.0 * M),
+    )
+    assert e.t_p2p_exposed == pytest.approx(r.exposed_p2p, rel=1e-12)
+    # a2a takes the better of the chunk model and the bracket replay
+    assert e.t_a2a_exposed <= r.exposed_a2a + 1e-12
+    assert e.t_a2a_exposed <= e.t_a2a
+
+
+def test_planner_enumerates_overlap():
+    """1f1b_overlap is a first-class candidate wherever PP > 1 (V=1)."""
+    from repro.core.planner import _schedule_candidates
+
+    for name in ("granite-moe-3b-a800m", "piper-m10b-e16"):
+        arch = get_arch(name)
+        for PP in (2, 4, 8):
+            cands = _schedule_candidates(arch, PP)
+            assert ("1f1b_overlap", 1) in cands, (name, PP)
+
+
+def test_planner_ranks_overlap_above_plain_1f1b():
+    """Acceptance: for at least one assigned MoE arch the best
+    1f1b_overlap strategy outranks the best plain 1f1b one — identical
+    compute/bubble/memory partition (modulo the comm buffer), with the
+    comm-lane replay's exposed p2p strictly below the serial charge."""
+    from repro.configs import ASSIGNED
+
+    won = []
+    for name in ASSIGNED:
+        arch = get_arch(name)
+        if arch.moe is None or arch.num_layers < 4:
+            continue
+        ranked = planner.rank_strategies(
+            planner.valid_strategies(
+                arch, TPU_V5E, 256, batch=256, seq=4096, zero="world"
+            )
+        )
+        ov = [s for s in ranked if s.schedule == "1f1b_overlap"]
+        fl = [s for s in ranked if s.schedule == "1f1b" and s.PP > 1]
+        if not (ov and fl):
+            continue
+        if ranked.index(ov[0]) < ranked.index(fl[0]):
+            best = ov[0]
+            assert best.estimate.mem_ok
+            same = [
+                s for s in fl
+                if (s.PP, s.EP, s.DP, s.alpha)
+                == (best.PP, best.EP, best.DP, best.alpha)
+            ]
+            for s in same:
+                assert best.estimate.t_step <= s.estimate.t_step
+                # the win is comm exposure: the comm-lane replay never
+                # charges more TOTAL exposed comm than the serial
+                # reference (per-channel the flat legacy charge is only a
+                # lower bound of the synchronous replay, so p2p alone may
+                # not shrink at M ~ PP — the sim-level strict-win test
+                # compares like against like)
+                assert (
+                    best.estimate.t_p2p_exposed + best.estimate.t_a2a_exposed
+                    <= s.estimate.t_p2p_exposed + s.estimate.t_a2a_exposed
+                )
+            won.append(name)
+    assert won, "no arch ranks 1f1b_overlap above plain 1f1b"
+
+
+# ---------------------------------------------------------------------------
 # ZB-H1 pricing (the zero-bubble split backward)
 # ---------------------------------------------------------------------------
 
@@ -294,7 +403,16 @@ def test_planner_ranks_halo_above_flat_when_ep_spans_nodes():
             arch, FRONTIER, 256, batch=256, seq=4096, zero="world"
         )
     )
-    spanning = [s for s in ranked if s.EP > FRONTIER.chips_per_node]
+    from repro.core.schedules import OVERLAP_BASE
+
+    # Comm-lane schedules can hide the a2a entirely behind the schedule's
+    # bracket replay, collapsing BOTH algos' exposure to zero — the halo
+    # vs flat pin is about the chunk model's pricing, so compare on the
+    # legacy schedules where that model is the sole account.
+    spanning = [
+        s for s in ranked
+        if s.EP > FRONTIER.chips_per_node and s.schedule not in OVERLAP_BASE
+    ]
     halo = [s for s in spanning if s.a2a_algo == "halo"]
     flat = [s for s in spanning if s.a2a_algo == "flat"]
     assert halo and flat

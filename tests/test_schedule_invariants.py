@@ -373,6 +373,188 @@ def test_detects_fused_key_with_wslot():
 
 
 # ---------------------------------------------------------------------------
+# Comm-lane perturbations: corrupt a valid overlap schedule along every
+# comm legality rule and require an InvariantViolation (rule group 9).
+# ---------------------------------------------------------------------------
+
+
+def ov_sched():
+    return S.build("1f1b_overlap", 4, 8)
+
+
+def _mut_comm(sched):
+    return [[list(cell) for cell in row] for row in sched.comm]
+
+
+def _with_comm(sched, comm, **kw):
+    return dataclasses.replace(
+        sched,
+        comm=tuple(tuple(tuple(c) for c in row) for row in comm),
+        **kw,
+    )
+
+
+def _find_comm(comm, kind, mb):
+    return next(
+        (s, t)
+        for s, row in enumerate(comm)
+        for t, cell in enumerate(row)
+        if any(op[0] == kind and op[1] == mb for op in cell)
+    )
+
+
+def test_harness_accepts_overlap():
+    S.check_invariants(ov_sched())
+
+
+def test_detects_recv_before_send():
+    """A Recv at (or before) its Send tick claims a payload that is still
+    on the wire — including the warmup edge where dwell is zero."""
+    sched = ov_sched()
+    comm = _mut_comm(sched)
+    s, tr = _find_comm(comm, "RecvB", 0)
+    ss_, ts = _find_comm(comm, "SendB", 0)
+    # move the RecvB onto its own SendB's tick (keep the A2A bracket put)
+    moved = [op for op in comm[s][tr] if op[0] == "RecvB"]
+    comm[s][tr] = [op for op in comm[s][tr] if op[0] != "RecvB"]
+    comm[s][ts].extend(moved)
+    with pytest.raises(S.InvariantViolation, match="strictly after"):
+        S.check_invariants(_with_comm(sched, comm))
+
+
+def test_detects_orphan_send():
+    """A Send on an edge the compute table does not have (the last stage
+    has no forward successor at V=1)."""
+    sched = ov_sched()
+    comm = _mut_comm(sched)
+    t = next(
+        t for t, op in enumerate(sched.ops[3]) if op and op[0] == "F"
+    )
+    comm[3][t].append(("SendF", sched.ops[3][t][1], 0))
+    with pytest.raises(S.InvariantViolation, match="orphan or missing"):
+        S.check_invariants(_with_comm(sched, comm))
+
+
+def test_detects_missing_recv():
+    """A dropped Recv is a hand-off that never lands."""
+    sched = ov_sched()
+    comm = _mut_comm(sched)
+    s, t = _find_comm(comm, "RecvF", 1)
+    comm[s][t] = [op for op in comm[s][t] if op[0] != "RecvF"]
+    with pytest.raises(S.InvariantViolation, match="orphan or missing"):
+        S.check_invariants(_with_comm(sched, comm))
+
+
+def test_detects_duplicate_send():
+    """The same (stage, vs, mb) sent twice — the wire would carry a stale
+    double of the payload."""
+    sched = ov_sched()
+    comm = _mut_comm(sched)
+    s, t = _find_comm(comm, "SendF", 0)
+    dup = next(op for op in comm[s][t] if op[0] == "SendF")
+    comm[s][t + 1].append(dup)
+    with pytest.raises(S.InvariantViolation, match="duplicate SendF"):
+        S.check_invariants(_with_comm(sched, comm))
+
+
+def test_detects_send_before_producer():
+    """A Send before the op that produces its payload ships garbage."""
+    sched = ov_sched()
+    comm = _mut_comm(sched)
+    s, t = _find_comm(comm, "SendF", 2)
+    moved = [op for op in comm[s][t] if op[0] == "SendF"]
+    comm[s][t] = [op for op in comm[s][t] if op[0] != "SendF"]
+    comm[s][t - 1].extend(moved)
+    with pytest.raises(
+        S.InvariantViolation, match="send before its payload"
+    ):
+        S.check_invariants(_with_comm(sched, comm))
+
+
+def test_detects_comm_slot_collision():
+    """Two dwell windows overlapping in one comm slot: legally delay a
+    consuming F (and its Recv) into an idle tick so its payload's dwell
+    window overlaps another's, then force both into slot 0."""
+    sched = ov_sched()
+    ops = _mut_ops(sched)
+    assert ops[1][3] == ("F", 2, 0) and ops[1][5] is None
+    ops[1][5], ops[1][3] = ops[1][3], None
+    comm = _mut_comm(sched)
+    comm[1][5] = [op for op in comm[1][3] if op[1] == 2]
+    comm[1][3] = [op for op in comm[1][3] if op[1] != 2]
+    cf = [[list(r) for r in sv] for sv in sched.cslots_fwd]
+    cf[1][0][2] = 0  # mb 2 now dwells over [3, 4]; mb 3 holds slot 0 too
+    bad = _with_comm(
+        sched,
+        comm,
+        ops=tuple(tuple(r) for r in ops),
+        cslots_fwd=tuple(tuple(tuple(r) for r in sv) for sv in cf),
+    )
+    with pytest.raises(
+        S.InvariantViolation, match="overlapping in-flight windows"
+    ):
+        S.check_invariants(bad)
+
+
+def test_detects_comm_slot_overflow():
+    """A comm slot id beyond num_cslots_fwd would index past the
+    executor's scan-carried comm buffer."""
+    sched = ov_sched()
+    cf = [[list(r) for r in sv] for sv in sched.cslots_fwd]
+    dwell = next(
+        (key[0], key[2])
+        for d, key, ts, tr in sched.comm_edges()
+        if d == "fwd" and tr > ts + 1
+    )
+    cf[dwell[0]][0][dwell[1]] = sched.num_cslots_fwd
+    bad = dataclasses.replace(
+        sched, cslots_fwd=tuple(tuple(tuple(r) for r in sv) for sv in cf)
+    )
+    with pytest.raises(S.InvariantViolation, match="comm slot id"):
+        S.check_invariants(bad)
+
+
+def test_detects_oversized_comm_buffer():
+    """num_cslots above the peak in-flight count is comm memory the
+    executor would allocate for nothing — minimality is required."""
+    bad = dataclasses.replace(
+        ov_sched(), num_cslots_fwd=ov_sched().num_cslots_fwd + 1
+    )
+    with pytest.raises(S.InvariantViolation, match="num_cslots_fwd"):
+        S.check_invariants(bad)
+
+
+def test_detects_zero_dwell_with_slot():
+    """Zero-dwell payloads take the direct wire path: a comm slot on one
+    is buffer the executor would never read."""
+    sched = ov_sched()
+    cb = [[list(r) for r in sv] for sv in sched.cslots_bwd]
+    cb[0][0][0] = 0  # every bwd hand-off in 1f1b_overlap is zero-dwell
+    bad = dataclasses.replace(
+        sched, cslots_bwd=tuple(tuple(tuple(r) for r in sv) for sv in cb)
+    )
+    with pytest.raises(S.InvariantViolation, match="zero-dwell"):
+        S.check_invariants(bad)
+
+
+def test_detects_a2a_without_host_op():
+    """An A2A bracket must ride its compute op (same stage/tick/mb/vs)."""
+    sched = ov_sched()
+    comm = _mut_comm(sched)
+    t_idle = next(i for i, op in enumerate(sched.ops[0]) if op is None)
+    comm[0][t_idle].append(("A2A", 0, 0))
+    with pytest.raises(S.InvariantViolation, match="A2A bracket"):
+        S.check_invariants(_with_comm(sched, comm))
+
+
+def test_detects_comm_slots_without_lane():
+    """Legacy schedules must not carry comm-slot allocations."""
+    bad = dataclasses.replace(flat_sched(), num_cslots_fwd=1)
+    with pytest.raises(S.InvariantViolation, match="comm slots without"):
+        S.check_invariants(bad)
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis sweeps (when available): random (PP, M, V) within executor-
 # realistic bounds — the deterministic grid can't enumerate everything.
 # ---------------------------------------------------------------------------
@@ -404,3 +586,29 @@ if HAVE_HYPOTHESIS:
         sched = S.build("interleaved_1f1b", PP, M, V)
         assert sched.num_ticks == 2 * (V * M + PP - 1)
         assert sched.p2p_events() == 2 * M * (PP * V - 1)
+
+    @settings(max_examples=40, deadline=None)
+    @given(PP=st.integers(2, 10), M=st.integers(1, 24))
+    def test_hypothesis_comm_lane(PP, M):
+        """Random (PP, M): the overlap twin keeps 1f1b's compute table
+        bit-for-bit, covers every hand-off edge with one matched
+        (Send, Recv) pair, and its perturbed forms are rejected."""
+        sched = S.build("1f1b_overlap", PP, M)
+        base = S.build("1f1b", PP, M)
+        assert sched.ops == base.ops and sched.slots == base.slots
+        S.check_invariants(sched)
+        assert len(sched.comm_edges()) == 2 * M * (PP - 1)
+        # drop the first RecvF: must be caught
+        comm = _mut_comm(sched)
+        hit = False
+        for s, row in enumerate(comm):
+            for t, cell in enumerate(row):
+                if any(op[0] == "RecvF" for op in cell):
+                    comm[s][t] = [op for op in cell if op[0] != "RecvF"]
+                    hit = True
+                    break
+            if hit:
+                break
+        if hit:
+            with pytest.raises(S.InvariantViolation):
+                S.check_invariants(_with_comm(sched, comm))

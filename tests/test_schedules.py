@@ -64,6 +64,9 @@ def test_ir_matches_canonical_stage_orders(name, PP, M):
     order = {
         "gpipe": S.gpipe_order,
         "1f1b": S.one_f_one_b_order,
+        # the overlap twin runs 1f1b's compute table; only the comm lane
+        # differs
+        "1f1b_overlap": S.one_f_one_b_order,
         # V defaults to 1, where interleaved reduces to plain 1f1b
         "interleaved_1f1b": S.one_f_one_b_order,
         "zb_h1": S.zb_h1_order,
@@ -421,6 +424,8 @@ def test_tick_tables_arrivals(name):
                 assert tt.wslot[s, t] == sched.wslots[s][op[2]][op[1]] >= 0
             elif op[0] in ("F", "B"):
                 assert tt.wslot[s, t] == -1
+            if sched.has_comm:
+                continue  # arrivals follow the comm lane, checked below
             if op[0] == "F":
                 nxt = S.next_chunk(s, op[2], PP, V)
                 if nxt is not None:
@@ -432,6 +437,27 @@ def test_tick_tables_arrivals(name):
                 if prv is not None:
                     ps, pv = prv
                     assert tt.arrive_bwd[ps, t + 1] == sched.slots[ps][pv][op[1]]
+    if sched.has_comm:
+        # With comm ops the arrival tick is the IR's Recv tick, not the
+        # send tick + 1: a dwelling payload parks in its comm slot at
+        # send+1 (store_*) and is consumed from it at the Recv (src_*);
+        # zero-dwell hand-offs keep the legacy direct path (tables -1).
+        for direction, (rs, rv, mb), ts, tr in sched.comm_edges():
+            if direction == "fwd":
+                arrive = tt.arrive_fwd
+                store, src = tt.store_fwd, tt.src_fwd
+                cslot = sched.cslots_fwd[rs][rv][mb]
+                assert tt.arrive_fwd_mb[rs, tr] == mb
+            else:
+                arrive = tt.arrive_bwd
+                store, src = tt.store_bwd, tt.src_bwd
+                cslot = sched.cslots_bwd[rs][rv][mb]
+            assert arrive[rs, tr] == sched.slots[rs][rv][mb]
+            if tr > ts + 1:  # dwelling payload rides a comm slot
+                assert store[rs, ts + 1] == cslot >= 0
+                assert src[rs, tr] == cslot
+            else:
+                assert src[rs, tr] == -1
 
 
 def test_tick_tables_reject_unknown_kind():
@@ -532,3 +558,112 @@ def test_p2p_events_scale_with_v():
 def test_unknown_schedule_rejected():
     with pytest.raises(ValueError):
         S.build("interleaved-not-yet", 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Comm lane (overlap schedules)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("PP,M", GRID)
+def test_overlap_comm_lane_geometry(PP, M):
+    """1f1b_overlap is 1f1b's compute table verbatim plus an explicit comm
+    lane: one matched (Send, Recv) pair per wire hand-off, sends at the
+    producer tick, recvs at the consumer tick, dwell windows covered by
+    the declared comm-slot pool, and the in-flight buffer draining to
+    zero."""
+    sch = S.build("1f1b_overlap", PP, M)
+    base = S.build("1f1b", PP, M)
+    assert sch.ops == base.ops
+    assert sch.slots == base.slots
+    assert sch.num_slots == base.num_slots
+    assert sch.has_comm and not base.has_comm
+    edges = sch.comm_edges()
+    # one fwd + one bwd edge per crossing hand-off == p2p_events()
+    assert len(edges) == sch.p2p_events() == 2 * M * (PP - 1)
+    f = sch.op_ticks("F")
+    b = sch.cot_ticks()
+    for direction, (rs, rv, mb), ts, tr in edges:
+        assert ts < tr  # send strictly precedes its recv
+        if direction == "fwd":
+            prv = S.prev_chunk(rs, rv, PP, 1)
+            assert ts == f[prv + (mb,)]  # send rides the producer F
+            assert tr == f[(rs, rv, mb)]  # recv rides the consumer F
+        else:
+            nxt = S.next_chunk(rs, rv, PP, 1)
+            assert ts == b[nxt + (mb,)]
+            assert tr == b[(rs, rv, mb)]
+    trace = sch.comm_trace()
+    assert trace.shape == (PP, sch.num_ticks)
+    assert (trace[:, -1] == 0).all()  # drained
+    assert trace.max() <= sch.num_cslots_fwd + sch.num_cslots_bwd
+    # 1F1B's bwd hand-offs are all zero-dwell: consumed the tick they land
+    assert sch.num_cslots_fwd == 1 and sch.num_cslots_bwd == 0
+    # A2A brackets: one open/close pair per (stage, mb) F and B
+    a2a = sch.comm_op_ticks("A2A")
+    assert len(a2a) == PP * M
+    S.check_invariants(sch)
+
+
+@pytest.mark.parametrize("PP,M", GRID)
+def test_overlap_sim_exposure_strict_win(PP, M):
+    """The overlap twin's async comm replay strictly beats the legacy
+    synchronous hand-off replay whenever p2p time is nonzero — the CI
+    gate's property, pinned across the grid."""
+    ov = S.build("1f1b_overlap", PP, M)
+    base = S.build("1f1b", PP, M)
+    for h in (0.1, 0.5, 1.0):
+        r_ov = ss.simulate(ov, t_p2p=h)
+        r_base = ss.simulate(base, t_p2p=h)
+        assert r_ov.exposed_p2p < r_base.exposed_p2p, (PP, M, h)
+        # pure-compute accounting (makespan/bubble/peaks) is untouched
+        assert r_ov.makespan == r_base.makespan
+        assert r_ov.peak_in_flight == r_base.peak_in_flight
+    # a2a brackets: overlap replay (max) never loses to serial (sum)
+    for a in (0.3, 1.0, 2.0):
+        r_ov = ss.simulate(ov, t_a2a=a)
+        r_base = ss.simulate(base, t_a2a=a)
+        assert r_ov.exposed_a2a <= r_base.exposed_a2a, (PP, M, a)
+
+
+def test_sim_overlap_entrypoint():
+    r = ss.one_f_one_b_overlap(4, 8, t_p2p=0.25)
+    f = ss.one_f_one_b(4, 8)
+    assert r.makespan == f.makespan
+    assert r.peak_in_flight == f.peak_in_flight
+    assert r.exposed_p2p > 0.0
+    # peak in-flight comm buffering matches the IR trace
+    sch = S.build("1f1b_overlap", 4, 8)
+    assert r.peak_comm_inflight == [
+        int(sch.comm_trace()[s].max()) for s in range(4)
+    ]
+    # no comm time -> no exposure, and legacy schedules report zero
+    assert ss.one_f_one_b_overlap(4, 8).exposed_p2p == 0.0
+    assert f.exposed_p2p == 0.0 and f.peak_comm_inflight == [0] * 4
+
+
+def test_comm_kind_registry_rejects_unknown():
+    """Comm-op lowering goes through the one COMM_KIND_CODE table — an
+    unknown comm kind raises everywhere instead of silently dropping."""
+    import dataclasses
+
+    sched = S.build("1f1b_overlap", 2, 2)
+    comm = [[list(cell) for cell in row] for row in sched.comm]
+    s, t = next(
+        (s, t)
+        for s, row in enumerate(comm)
+        for t, cell in enumerate(row)
+        if any(op[0] == "SendF" for op in cell)
+    )
+    comm[s][t] = [
+        ("SendX", op[1], op[2]) if op[0] == "SendF" else op
+        for op in comm[s][t]
+    ]
+    bad = dataclasses.replace(
+        sched,
+        comm=tuple(tuple(tuple(c) for c in row) for row in comm),
+    )
+    with pytest.raises(ValueError, match="unknown comm op kind"):
+        bad.comm_op_ticks("SendX")
+    with pytest.raises(S.InvariantViolation):
+        S.check_invariants(bad)
